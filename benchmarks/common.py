@@ -1,0 +1,88 @@
+"""Shared benchmark infrastructure.
+
+The harness mirrors the paper's experimental design (Section 4) at
+CPU-benchable scale: the same *structural* workloads (JOB-like many-to-many
+redundancy, lastFM-like UIR chains + a cyclic query, TPCH-like FK joins),
+the same two scenarios (compute-and-forget / compute-and-reuse), and the
+same competitors modeled as execution strategies on identical inputs:
+
+  GJ          — summarize (+store/load GFJS) + desummarize       [the paper]
+  leapfrog    — generic WCOJ, full flat result                   [~Umbra]
+  binary_plan — left-deep sorted-merge plan, full intermediates  [~PSQL/MonetDB]
+
+A MATERIALIZE_LIMIT emulates the paper's 1TB-disk ceiling: a strategy that
+would materialize more than the limit reports FAIL (the paper's '>' / '-'
+entries) — GJ keeps working because it only touches the summary.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.api import GraphicalJoin
+from repro.core.baselines import (binary_join_plan, leapfrog_join,
+                                  store_result_binary)
+from repro.core.gfjs import desummarize
+from repro.core.storage import load_gfjs, save_gfjs
+from repro.relational.query import JoinQuery
+from repro.relational.synth import (duplicate_rows, job_like, lastfm_like,
+                                    tpch_fk_like)
+from repro.relational.table import Catalog
+
+MATERIALIZE_LIMIT = 60_000_000  # rows; the paper's disk-ceiling analog
+
+
+def timer(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+@dataclass
+class Workload:
+    name: str
+    catalog: Catalog
+    query: JoinQuery
+
+
+def build_workloads(scale: float = 1.0) -> List[Workload]:
+    """The benchmark suite; `scale` stretches table sizes."""
+    s = scale
+    out: List[Workload] = []
+
+    cat, qs = lastfm_like(n_users=int(900 * s), n_artists=int(800 * s),
+                          artists_per_user=10, friends_per_user=4, seed=0)
+    for name in ("lastfm_A1", "lastfm_A2", "lastfm_B", "lastfm_cyc"):
+        out.append(Workload(name, cat, qs[name]))
+
+    catj, qj = job_like(n_movies=int(1000 * s), keywords_per_movie=4,
+                        companies_per_movie=2, cast_per_movie=4,
+                        alpha=1.05, seed=1)
+    for name in ("job_A", "job_B", "job_C", "job_D"):
+        out.append(Workload(name, catj, qj[name]))
+
+    catf, qf = tpch_fk_like(n_customers=int(15000 * s), seed=2)
+    for name in ("fk_A", "fk_B"):
+        out.append(Workload(name, catf, qf[name]))
+    return out
+
+
+def csv_line(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+_WORKLOADS: Optional[List[Workload]] = None
+
+
+def workloads() -> List[Workload]:
+    global _WORKLOADS
+    if _WORKLOADS is None:
+        _WORKLOADS = build_workloads(
+            float(os.environ.get("BENCH_SCALE", "1.0")))
+    return _WORKLOADS

@@ -1,0 +1,60 @@
+"""Kernel-level microbenchmarks (jax engine primitives on CPU; the Pallas
+bodies themselves are TPU-targeted and validated in interpret mode — wall
+times here measure the XLA fallback path the CPU engine actually uses)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import csv_line
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / n
+
+
+def bench_kernels() -> List[str]:
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    out: List[str] = []
+    rng = np.random.default_rng(0)
+
+    # rle_expand: 1M runs -> ~8M rows
+    freqs = rng.integers(1, 16, 1_000_000)
+    bounds = jnp.asarray(np.cumsum(freqs), jnp.int32)
+    payload = jnp.asarray(rng.integers(0, 1 << 20, 1_000_000), jnp.int32)
+    total = int(np.sum(freqs))
+    t = _time(lambda: np.repeat(np.asarray(payload), freqs))
+    out.append(csv_line("kernels/rle_expand_np/8M", t * 1e6,
+                        f"rows={total};GBps={total * 4 / t / 1e9:.2f}"))
+
+    # mul_segsum exact path: 4M entries, 100k segments
+    seg = np.sort(rng.integers(0, 100_000, 4_000_000)).astype(np.int32)
+    _, seg = np.unique(seg, return_inverse=True)
+    x = jnp.asarray(rng.integers(0, 1000, len(seg)), jnp.int32)
+    y = jnp.asarray(rng.integers(0, 1000, len(seg)), jnp.int32)
+    segj = jnp.asarray(seg, jnp.int32)
+    ns = int(seg.max()) + 1
+    t = _time(lambda: ops.mul_segsum(segj, x, y, ns, exact=True))
+    out.append(csv_line("kernels/mul_segsum_exact/4M", t * 1e6,
+                        f"entries={len(seg)}"))
+
+    # dense_message MXU-shape matmul (counting semiring)
+    phi = jnp.asarray(rng.integers(0, 100, (2048, 2048)), jnp.float32)
+    m = jnp.asarray(rng.integers(0, 100, (2048, 128)), jnp.float32)
+    t = _time(lambda: (phi @ m).block_until_ready())
+    flops = 2 * 2048 * 2048 * 128
+    out.append(csv_line("kernels/dense_message/2048", t * 1e6,
+                        f"GFLOPs={flops / t / 1e9:.1f}"))
+    return out

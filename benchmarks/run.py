@@ -1,0 +1,49 @@
+"""Benchmark entry point: one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV.  Set BENCH_SCALE to stretch the
+workloads (default 1.0 runs the full suite in a few minutes on one core).
+
+  PYTHONPATH=src python -m benchmarks.run [--only tableN]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single section (table1..table6, "
+                         "sensitivity, kernels)")
+    args = ap.parse_args()
+
+    from benchmarks import tables
+    from benchmarks.kernels_bench import bench_kernels
+
+    sections = {
+        "table1": tables.bench_table1,
+        "table2": tables.bench_table2,
+        "table3": tables.bench_table3,
+        "table4": tables.bench_table4,
+        "table5": tables.bench_table5,
+        "table6": tables.bench_table6,
+        "sensitivity": tables.bench_sensitivity,
+    }
+
+    print("name,us_per_call,derived")
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, fn in sections.items():
+            if args.only and args.only != name:
+                continue
+            for line in fn(tmp):
+                print(line, flush=True)
+        if args.only in (None, "kernels"):
+            for line in bench_kernels():
+                print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""repro — Graphical Join (GJ) as a production JAX/TPU framework.
+
+Subpackages are imported lazily; in particular `repro.core` enables x64 at
+import (frequencies are int64) while `repro.launch.dryrun` must initialize
+jax with 512 host devices before any other jax touch — so nothing here may
+import jax eagerly.
+"""
+
+__version__ = "1.0.0"

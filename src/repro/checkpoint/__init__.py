@@ -1,0 +1,22 @@
+"""Fault-tolerant checkpointing.
+
+Design points (what 1000-node fleets need):
+
+* **atomic commits** — writes land in ``step_<n>.tmp`` and are renamed only
+  after every leaf + manifest is fsynced; a crash mid-write can never corrupt
+  the latest checkpoint.
+* **async** — `save_async` snapshots device arrays to host then hands the IO
+  to a background thread; training continues immediately (the join happens
+  on the next save or at shutdown).
+* **integrity** — every leaf carries a crc32; restore verifies before use.
+* **elastic restore** — checkpoints store logical arrays, not device tiles;
+  `restore` re-shards onto whatever mesh is current, so a job can resume on
+  a different topology (node failures, resizes).
+* **retention** — keep the last K checkpoints, delete older ones only after
+  a newer commit succeeded.
+"""
+
+from repro.checkpoint.store import (CheckpointManager, restore_checkpoint,
+                                    save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

@@ -1,0 +1,167 @@
+"""Checkpoint store implementation (see package docstring for guarantees)."""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+import numpy as np
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve dtype names including ml_dtypes (bfloat16, fp8...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _flatten(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[Dict] = None) -> str:
+    """Synchronous atomic save.  Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    items, _ = _flatten(tree)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for key, leaf in items:
+        arr = np.asarray(jax.device_get(leaf))
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".bin"
+        path = os.path.join(tmp, fname)
+        # raw bytes + logical dtype in the manifest: round-trips ml_dtypes
+        # (bfloat16/fp8) that np.save would mangle
+        with open(path, "wb") as f:
+            f.write(arr.tobytes())
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"].append({
+            "key": key, "file": fname, "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
+        })
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)           # the atomic commit point
+    return final
+
+
+def restore_checkpoint(directory: str, tree_like: Any,
+                       step: Optional[int] = None,
+                       *, shardings: Optional[Any] = None
+                       ) -> Tuple[Any, int, Dict]:
+    """Restore the latest (or a specific) checkpoint into tree_like's
+    structure, optionally re-sharding every leaf (elastic restore)."""
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+
+    items, treedef = _flatten(tree_like)
+    leaves = []
+    flat_shardings = None
+    if shardings is not None:
+        s_items, _ = _flatten(shardings)
+        flat_shardings = dict(s_items)
+    for key, like in items:
+        meta = by_key[key]
+        with open(os.path.join(path, meta["file"]), "rb") as f:
+            raw = f.read()
+        arr = np.frombuffer(raw, dtype=_np_dtype(meta["dtype"])) \
+            .reshape(meta["shape"]).copy()
+        crc = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+        if crc != meta["crc32"]:
+            raise IOError(f"checkpoint corruption in {key} "
+                          f"(crc {crc} != {meta['crc32']})")
+        if flat_shardings is not None and key in flat_shardings:
+            arr = jax.device_put(arr, flat_shardings[key])
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["step"], manifest["extra"]
+
+
+def available_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+class CheckpointManager:
+    """Async save + retention + resume."""
+
+    def __init__(self, directory: str, *, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save_async(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        """Snapshot to host now; write + commit + GC in the background."""
+        self.wait()
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+        self.wait()
+        path = save_checkpoint(self.directory, step, tree, extra)
+        self._gc()
+        return path
+
+    def restore(self, tree_like: Any, *, step: Optional[int] = None,
+                shardings: Optional[Any] = None):
+        self.wait()
+        return restore_checkpoint(self.directory, tree_like, step,
+                                  shardings=shardings)
+
+    def latest_step(self) -> Optional[int]:
+        steps = available_steps(self.directory)
+        return steps[-1] if steps else None
+
+    def _gc(self) -> None:
+        steps = available_steps(self.directory)
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)

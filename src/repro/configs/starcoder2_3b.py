@@ -1,0 +1,21 @@
+"""starcoder2-3b [dense]: 30L d_model=3072 24H (GQA kv=2) d_ff=12288
+vocab=49152 — GQA, RoPE.  [arXiv:2402.19173; hf]"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    num_layers=30,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=2,
+    d_ff=12288,
+    vocab=49152,
+    head_dim=128,
+    max_seq=16384,
+    sliding_window=4096,
+    rope_theta=999_999.0,
+    activation="gelu",
+    gated_mlp=False,
+)

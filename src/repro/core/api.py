@@ -1,0 +1,109 @@
+"""Public Graphical Join API — the paper's Figure 4 pipeline as one object.
+
+    gj = GraphicalJoin(catalog, query)
+    gj.build_model()        # qualitative + quantitative learning   (O(N))
+    gj.build_generator()    # Algorithm 2 (+ Algorithm 1 on cycles) (O(M^rho))
+    gfjs = gj.summarize()   # Algorithms 3/4                        (O(M^rho))
+    gj.store(path); gfjs = gj.load(path)          # compute-and-reuse
+    result = gj.desummarize(gfjs)                 # O(|Q|)
+
+Each phase records wall time into ``gj.timings`` — benchmark Table 6 (PGM
+build share) reads from there.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.elimination import Generator, build_generator
+from repro.core.gfjs import (GFJS, desummarize, desummarize_range,
+                             generate_gfjs, stream_desummarize)
+from repro.core.storage import load_gfjs, save_gfjs
+from repro.relational.encoding import EncodedQuery, encode_query
+from repro.relational.query import JoinQuery
+from repro.relational.table import Catalog
+
+
+class GraphicalJoin:
+    """End-to-end driver for the Graphical Join."""
+
+    def __init__(
+        self,
+        catalog: Catalog,
+        query: JoinQuery,
+        *,
+        elimination_order: Optional[Sequence[str]] = None,
+        early_projection: bool = True,
+    ) -> None:
+        self.catalog = catalog
+        self.query = query
+        self.elimination_order = elimination_order
+        self.early_projection = early_projection
+        self.timings: Dict[str, float] = {}
+        self.enc: Optional[EncodedQuery] = None
+        self.generator: Optional[Generator] = None
+
+    # -- phases ------------------------------------------------------------
+    def build_model(self) -> "GraphicalJoin":
+        """Qualitative (graph) + quantitative (potentials at encode time)."""
+        t0 = time.perf_counter()
+        self.enc = encode_query(self.catalog, self.query)
+        self.timings["build_model"] = time.perf_counter() - t0
+        return self
+
+    def build_generator(self) -> "GraphicalJoin":
+        if self.enc is None:
+            self.build_model()
+        t0 = time.perf_counter()
+        self.generator = build_generator(
+            self.enc,
+            elimination_order=self.elimination_order,
+            early_projection=self.early_projection,
+        )
+        self.timings["build_generator"] = time.perf_counter() - t0
+        return self
+
+    def summarize(self) -> GFJS:
+        if self.generator is None:
+            self.build_generator()
+        t0 = time.perf_counter()
+        gfjs = generate_gfjs(self.generator, self.enc.domains)
+        self.timings["summarize"] = time.perf_counter() - t0
+        return gfjs
+
+    # -- convenience -------------------------------------------------------
+    def join_size(self) -> int:
+        """|Q| without touching the data again (sum of the root marginal)."""
+        if self.generator is None:
+            self.build_generator()
+        return self.generator.join_size
+
+    def run(self) -> GFJS:
+        """build_model -> build_generator -> summarize."""
+        return self.summarize()
+
+    def desummarize(self, gfjs: GFJS, *, decode: bool = True) -> Dict[str, np.ndarray]:
+        t0 = time.perf_counter()
+        out = desummarize(gfjs, decode=decode)
+        self.timings["desummarize"] = time.perf_counter() - t0
+        return out
+
+    def desummarize_range(self, gfjs: GFJS, lo: int, hi: int, *, decode: bool = True):
+        return desummarize_range(gfjs, lo, hi, decode=decode)
+
+    def stream(self, gfjs: GFJS, chunk_rows: int = 1 << 20, *, decode: bool = True):
+        return stream_desummarize(gfjs, chunk_rows, decode=decode)
+
+    def store(self, gfjs: GFJS, path: str) -> int:
+        t0 = time.perf_counter()
+        n = save_gfjs(gfjs, path)
+        self.timings["store"] = time.perf_counter() - t0
+        return n
+
+    @staticmethod
+    def load(path: str) -> GFJS:
+        return load_gfjs(path)

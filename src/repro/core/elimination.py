@@ -1,0 +1,205 @@
+"""Algorithm 2 — building the GFJS *generator* via tweaked variable
+elimination.
+
+For every eliminated variable ``v`` the driver:
+
+1. collects the factors containing ``v`` and multiplies them worst-case
+   optimally (Algorithm 1 / ``multiway_product``) into ``phi_alpha``, keeping
+   the bucket (original potentials) / fac (incoming messages) value split;
+2. *conditionalizes* ``phi_alpha`` on v's parents — the separator, i.e. the
+   remaining variables of ``phi_alpha`` — and stores the conditional factor
+   ``psi(v | parents)`` (with its bucket and fac columns) into the generator,
+   CSR-grouped by parent key for O(log) lookup at generation time;
+3. sums ``v`` out to produce the message to the parents (frequencies of the
+   sub-tree hanging below the separator).
+
+Entries with zero frequency never exist (products only keep matching keys),
+which is the paper's UIR-pruning argument: generation will never walk a path
+that dies later, hence GJ is a WOJA.
+
+Early projection (paper §3.7): variables not in the projection list are
+eliminated first (O' before O) and step 2 is skipped for them ("the node is
+deleted; the factor for its parent is still calculated").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import QueryGraph, Triangulation, min_fill_order
+from repro.core.potentials import INT, Factor, _rank_rows
+from repro.core.potential_join import multiway_product
+from repro.relational.encoding import EncodedQuery
+
+
+@dataclass
+class Psi:
+    """Conditional factor psi(child | parents), CSR-grouped by parent key."""
+
+    child: str
+    parents: Tuple[str, ...]
+    parent_keys: np.ndarray    # [g, p] unique parent combos, lex-sorted
+    start: np.ndarray          # [g] CSR start into child arrays
+    count: np.ndarray          # [g]
+    child_codes: np.ndarray    # [m]
+    bucket: np.ndarray         # [m]
+    fac: np.ndarray            # [m]
+    parent_sizes: Tuple[int, ...]
+    child_size: int
+
+    @property
+    def num_groups(self) -> int:
+        return len(self.start)
+
+    @property
+    def num_entries(self) -> int:
+        return len(self.child_codes)
+
+    def nbytes(self) -> int:
+        return int(self.parent_keys.nbytes + self.start.nbytes + self.count.nbytes
+                   + self.child_codes.nbytes + self.bucket.nbytes + self.fac.nbytes)
+
+
+@dataclass
+class Generator:
+    """The GFJS generator: root marginal + conditional factors by level.
+
+    ``levels[d]`` holds the psis whose children sit at depth d+1 of the
+    generator DAG (root = depth 0).  Children within one level are expanded
+    jointly (Cartesian product semantics of the paper's Algorithm 4).
+    """
+
+    root: str
+    root_codes: np.ndarray
+    root_freq: np.ndarray
+    levels: List[List[Psi]]
+    elimination_order: List[str]
+    column_order: List[str]      # root + level children, generation order
+    join_size: int
+    stats: Dict[str, float] = field(default_factory=dict)
+
+    def nbytes(self) -> int:
+        n = int(self.root_codes.nbytes + self.root_freq.nbytes)
+        for lvl in self.levels:
+            n += sum(p.nbytes() for p in lvl)
+        return n
+
+
+def _make_psi(phi: Factor, child: str, parents: Tuple[str, ...]) -> Psi:
+    """Sort phi by (parents..., child) and CSR-group by parents."""
+    f = phi.project(tuple(parents) + (child,))
+    f = f.sort_by(list(parents) + [child])
+    p = len(parents)
+    pk = f.keys[:, :p]
+    if f.num_entries == 0:
+        return Psi(child, parents, pk[:0], np.zeros(0, INT), np.zeros(0, INT),
+                   f.keys[:0, p], f.bucket[:0], f.fac[:0],
+                   tuple(f.sizes[:p]), int(f.sizes[p]) if len(f.sizes) > p else 0)
+    if p == 0:
+        starts = np.zeros(1, INT)
+        counts = np.array([f.num_entries], INT)
+        upk = pk[:1]
+    else:
+        new = np.ones(f.num_entries, dtype=bool)
+        new[1:] = np.any(pk[1:] != pk[:-1], axis=1)
+        starts = np.flatnonzero(new).astype(INT)
+        counts = np.diff(np.append(starts, f.num_entries)).astype(INT)
+        upk = pk[starts]
+    return Psi(child, parents, upk, starts, counts,
+               f.keys[:, p].copy(), f.bucket.copy(), f.fac.copy(),
+               tuple(f.sizes[:p]), int(f.sizes[p]))
+
+
+def build_generator(
+    enc: EncodedQuery,
+    *,
+    elimination_order: Optional[Sequence[str]] = None,
+    early_projection: bool = True,
+) -> Generator:
+    """Run Algorithm 2 over the (possibly cyclic) query graph."""
+    query = enc.query
+    sizes = enc.domain_sizes()
+
+    graph = QueryGraph.from_query(query)
+    if not graph.is_connected():
+        raise ValueError(
+            f"query {query.name!r} has a disconnected join graph (cross product)")
+
+    out_vars = list(query.output_variables)
+    if not out_vars:
+        raise ValueError("projection list must be non-empty")
+    non_out = [v for v in graph.variables if v not in out_vars] if early_projection else []
+
+    tri: Triangulation = min_fill_order(
+        graph, first=non_out,
+        forced_order=elimination_order,
+    )
+    order = tri.order
+
+    # quantitative learning: one GROUP BY per table occurrence
+    factors: List[Factor] = []
+    for enc_cols in enc.encoded_tables:
+        factors.append(Factor.from_columns(enc_cols, sizes))
+
+    psis: Dict[str, Psi] = {}
+    parents_of: Dict[str, Tuple[str, ...]] = {}
+    emitted: List[str] = []
+
+    for v in order[:-1]:
+        rel = [f for f in factors if v in f.vars]
+        rest = [f for f in factors if v not in f.vars]
+        if not rel:  # pragma: no cover - connected graph invariant
+            raise AssertionError(f"no factor contains variable {v}")
+        phi_alpha = multiway_product(rel, var_order=[u for u in order if u != v] + [v])
+        parents = tuple(u for u in phi_alpha.vars if u != v)
+        parents_of[v] = parents
+        if v in out_vars:
+            psis[v] = _make_psi(phi_alpha, v, parents)
+            emitted.append(v)
+        msg = phi_alpha.marginalize_out(v)
+        factors = rest + [msg]
+
+    # root: product of the remaining factors (all over the root only)
+    root = order[-1]
+    for f in factors:
+        if tuple(f.vars) != (root,):  # pragma: no cover - invariant
+            raise AssertionError(f"leftover factor over {f.vars} at root")
+    phi_root = factors[0]
+    for f in factors[1:]:
+        phi_root = phi_root.multiply(f)
+    phi_root = phi_root.sort_by([root])
+    if root not in out_vars:  # root must be an output var (O' precedes O)
+        raise AssertionError("root is a projected-out variable")
+
+    join_size = int(np.sum(phi_root.bucket * phi_root.fac))
+
+    # depth levels of the generator DAG
+    depth: Dict[str, int] = {root: 0}
+    for v in reversed(order[:-1]):
+        if v in psis:
+            ps = parents_of[v]
+            depth[v] = 1 + max((depth[p] for p in ps), default=0)
+    max_depth = max(depth.values(), default=0)
+    levels: List[List[Psi]] = [[] for _ in range(max_depth)]
+    for v in sorted(psis, key=lambda u: (depth[u], order.index(u))):
+        levels[depth[v] - 1].append(psis[v])
+
+    column_order = [root] + [p.child for lvl in levels for p in lvl]
+
+    return Generator(
+        root=root,
+        root_codes=phi_root.keys[:, 0].copy(),
+        root_freq=(phi_root.bucket * phi_root.fac).astype(INT),
+        levels=levels,
+        elimination_order=list(order),
+        column_order=column_order,
+        join_size=join_size,
+        stats={
+            "num_fill_edges": float(len(tri.fill_edges)),
+            "num_maxcliques": float(len(tri.maxcliques)),
+            "largest_maxclique": float(max((len(c) for c in tri.maxcliques), default=0)),
+        },
+    )

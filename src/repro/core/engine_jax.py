@@ -1,0 +1,131 @@
+"""JAX engine for the GJ hot phases (the TPU execution path).
+
+The numpy engine (default) is the dynamic-shape oracle; this module provides
+jit-compiled, Pallas-backed implementations of the two phases that dominate
+GJ runtime — quantitative learning (GROUP BY count) and desummarization
+(RLE expansion) — using the bucketized-padding scheme from DESIGN.md §2:
+irregular sizes are rounded up to power-of-two buckets so the jit cache
+holds O(log max-size) entries.
+
+Frequencies here ride in int64 (joins overflow int32); x64 is enabled
+process-wide at import, which is safe for the LM stack because it pins
+explicit dtypes everywhere.
+
+Dense-vs-COO dispatch: `maybe_dense_message` routes the sum-product
+contraction to the MXU matmul kernel when the densified key space is small
+(fill-ratio budget), else to the COO segment-sum path — a beyond-paper
+optimization measured in benchmarks/table5_inmemory.py.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after x64 flag)
+
+from repro.core.gfjs import GFJS  # noqa: E402
+from repro.core.potentials import INT, Factor, pack_keys  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+I32_MAX = (1 << 31) - 1
+DENSE_BUDGET = 1 << 22   # max densified cells for the MXU message path
+
+
+# ---------------------------------------------------------------------------
+# quantitative learning (potential build)
+# ---------------------------------------------------------------------------
+
+def build_factor_jax(
+    cols: Dict[str, np.ndarray], sizes: Dict[str, int],
+    *, interpret: Optional[bool] = None,
+) -> Factor:
+    """GROUP BY count on-device: pack -> sort -> run_boundaries -> segsum."""
+    names = tuple(cols.keys())
+    keys = np.stack([np.asarray(cols[v], dtype=INT) for v in names], axis=1)
+    sz = tuple(int(sizes[v]) for v in names)
+    n = keys.shape[0]
+    if n == 0:
+        return Factor(names, keys, np.zeros(0, INT), np.zeros(0, INT), sz)
+    try:
+        packed = pack_keys(keys, sz)
+        packable = bool(np.all(packed <= I32_MAX))
+    except OverflowError:
+        packable = False
+    if not packable:  # fall back to the numpy oracle for huge key spaces
+        return Factor.from_columns(cols, sizes)
+
+    sp = jnp.sort(jnp.asarray(packed, jnp.int32))
+    flags = ops.run_boundaries(sp, interpret=interpret)
+    seg = jnp.cumsum(flags) - 1
+    num = int(jnp.sum(flags))
+    ones = jnp.ones_like(sp, dtype=jnp.float32)
+    counts = ops.mul_segsum(seg, ones, ones, num, interpret=interpret)
+    # unique packed keys = sorted packed values at boundary positions
+    upacked = np.asarray(sp)[np.asarray(flags, bool)]
+    # unpack mixed radix
+    ukeys = np.empty((num, len(names)), dtype=INT)
+    rem = upacked.astype(np.int64)
+    for j in range(len(names) - 1, -1, -1):
+        s = max(sz[j], 1)
+        ukeys[:, j] = rem % s
+        rem //= s
+    return Factor(names, ukeys, np.asarray(counts, dtype=INT),
+                  np.ones(num, INT), sz)
+
+
+# ---------------------------------------------------------------------------
+# message passing (sum-product contraction)
+# ---------------------------------------------------------------------------
+
+def maybe_dense_message(
+    phi: Factor, child: str, msg_vals: np.ndarray,
+    *, interpret: Optional[bool] = None,
+) -> Optional[np.ndarray]:
+    """MXU path: densify phi(parentxchild) if small and contract.
+
+    Returns per-parent-code sums, or None if the dense route is off-budget
+    (caller then uses the COO segment-sum path).  Exact below 2**24.
+    """
+    if len(phi.vars) != 2 or child not in phi.vars:
+        return None
+    ci = phi.var_index(child)
+    pi = 1 - ci
+    P, V = phi.sizes[pi], phi.sizes[ci]
+    if P * V > DENSE_BUDGET:
+        return None
+    vals = phi.bucket * phi.fac
+    if vals.max(initial=0) >= (1 << 24) or msg_vals.max(initial=0) >= (1 << 24):
+        return None
+    dense = np.zeros((P, V), np.float32)
+    dense[phi.keys[:, pi], phi.keys[:, ci]] = vals
+    out = ops.dense_message(jnp.asarray(dense),
+                            jnp.asarray(msg_vals, jnp.float32)[:, None],
+                            interpret=interpret)
+    return np.asarray(out[:, 0]).astype(INT)
+
+
+# ---------------------------------------------------------------------------
+# desummarization
+# ---------------------------------------------------------------------------
+
+def desummarize_jax(
+    gfjs: GFJS, *, decode: bool = False, interpret: Optional[bool] = None,
+) -> Dict[str, np.ndarray]:
+    """RLE-expand every level with the `expand_gather` kernel."""
+    if gfjs.join_size > I32_MAX:
+        raise ValueError("join size exceeds the int32 TPU kernel range; "
+                         "use range-sharded desummarization (repro.dist)")
+    out: Dict[str, np.ndarray] = {}
+    for li, lvl in enumerate(gfjs.levels):
+        bounds = jnp.asarray(gfjs.bounds(li), jnp.int32)
+        for v in lvl.vars:
+            codes = jnp.asarray(lvl.key_cols[v], jnp.int32)
+            col = np.asarray(ops.rle_expand(codes, bounds, gfjs.join_size,
+                                            interpret=interpret))
+            out[v] = gfjs.domains[v].decode(col) if decode else col
+    return {v: out[v] for v in gfjs.column_order}

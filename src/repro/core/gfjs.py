@@ -1,0 +1,209 @@
+"""Algorithms 3/4 — GFJS generation — plus the GFJS structure itself.
+
+The paper generates the summary tuple-recursively (rec_GFJS).  We run the
+level-synchronous equivalent: a *frontier* table holds every generated
+prefix (one row per distinct value combination of the variables produced so
+far) together with its running bucket product ``p_bucket``.  Expanding one
+conditional factor ``psi`` maps each frontier row to its CSR group and emits
+``count`` child rows — an exclusive-scan + expand-gather, the same primitive
+as RLE desummarization (and the Pallas kernel `expand_gather` on TPU).
+
+Per Algorithm 4 the RLE frequency emitted at a level is
+``p_bucket * (prod buckets of the level) * (prod facs of the level)`` and the
+frontier continues with ``p_bucket * (prod buckets)``; several psis in one
+level combine by Cartesian product (their buckets and facs both multiply).
+
+Because psi entries are sorted by (parent key, child value) and expansion is
+order-preserving, every level is emitted in lexicographic prefix order —
+which is exactly what makes the per-level RLE columns mutually aligned and
+equal to the RLE of the fully sorted join result (Definition 1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.elimination import Generator, Psi
+from repro.core.potentials import INT, _rank_rows_joint
+from repro.relational.encoding import Domain
+
+
+@dataclass
+class LevelSummary:
+    """One GFJS level: RLE runs for the variables introduced at this level."""
+
+    vars: Tuple[str, ...]
+    key_cols: Dict[str, np.ndarray]   # var -> codes per run
+    freq: np.ndarray                  # run lengths; sums to join_size
+
+    @property
+    def num_runs(self) -> int:
+        return len(self.freq)
+
+    def nbytes(self) -> int:
+        return int(sum(v.nbytes for v in self.key_cols.values()) + self.freq.nbytes)
+
+
+@dataclass
+class GFJS:
+    """Grouped Frequentist Join Summary (Definition 1)."""
+
+    levels: List[LevelSummary]
+    column_order: List[str]
+    join_size: int
+    domains: Dict[str, Domain]
+    _bounds: Dict[int, np.ndarray] = field(default_factory=dict, repr=False)
+
+    @property
+    def num_columns(self) -> int:
+        return len(self.column_order)
+
+    def nbytes(self) -> int:
+        return int(sum(l.nbytes() for l in self.levels))
+
+    def num_runs(self) -> int:
+        return int(sum(l.num_runs for l in self.levels))
+
+    def bounds(self, level: int) -> np.ndarray:
+        """Cached inclusive prefix sums of a level's run lengths."""
+        if level not in self._bounds:
+            self._bounds[level] = np.cumsum(self.levels[level].freq)
+        return self._bounds[level]
+
+
+def _lookup_groups(
+    frontier_keys: np.ndarray, psi: Psi
+) -> np.ndarray:
+    """Group index in psi for each frontier row (-1 if absent)."""
+    if len(psi.parents) == 0:
+        return np.zeros(len(frontier_keys), INT)
+    (fr, pr), _ = _rank_rows_joint(frontier_keys, psi.parent_keys,
+                                   list(psi.parent_sizes))
+    # psi.parent_keys rows are lex-sorted, and both rankings are
+    # lex-order-consistent, so pr is sorted ascending.
+    pos = np.searchsorted(pr, fr)
+    pos = np.clip(pos, 0, max(len(pr) - 1, 0))
+    ok = (pr[pos] == fr) if len(pr) else np.zeros(len(fr), bool)
+    return np.where(ok, pos, -1).astype(INT)
+
+
+def _expand(
+    counts: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """src row index + within-group offset for an expansion by ``counts``.
+
+    O(total) via repeat (the TPU path uses the `expand_gather` Pallas kernel,
+    which re-derives src with a blocked binary search instead — see
+    repro/kernels/expand_gather.py for why that's the right trade on TPU).
+    """
+    counts = np.asarray(counts, dtype=INT)
+    offsets = np.cumsum(counts) - counts          # exclusive scan
+    total = int(offsets[-1] + counts[-1]) if len(counts) else 0
+    src = np.repeat(np.arange(len(counts), dtype=INT), counts)
+    within = np.arange(total, dtype=INT) - offsets[src]
+    return src, within
+
+
+def generate_gfjs(gen: Generator, domains: Dict[str, Domain]) -> GFJS:
+    """Run Algorithms 3/4 (level-synchronous) over the generator."""
+    levels_out: List[LevelSummary] = [
+        LevelSummary((gen.root,), {gen.root: gen.root_codes}, gen.root_freq)
+    ]
+    # frontier state
+    cols: Dict[str, np.ndarray] = {gen.root: gen.root_codes}
+    p_bucket = np.ones(len(gen.root_codes), INT)
+
+    for level in gen.levels:
+        fac_acc = np.ones(len(p_bucket), INT)
+        new_vars: List[str] = []
+        for psi in level:
+            pk = (np.stack([cols[p] for p in psi.parents], axis=1)
+                  if psi.parents else np.zeros((len(p_bucket), 0), INT))
+            g = _lookup_groups(pk, psi)
+            counts = np.where(g >= 0, psi.count[np.clip(g, 0, None)], 0)
+            src, within = _expand(counts)
+            cidx = psi.start[g[src]] + within
+            cols = {v: a[src] for v, a in cols.items()}
+            cols[psi.child] = psi.child_codes[cidx]
+            p_bucket = p_bucket[src] * psi.bucket[cidx]
+            fac_acc = fac_acc[src] * psi.fac[cidx]
+            new_vars.append(psi.child)
+        freq = p_bucket * fac_acc
+        levels_out.append(LevelSummary(
+            tuple(new_vars), {v: cols[v] for v in new_vars}, freq))
+
+    return GFJS(levels_out, list(gen.column_order), gen.join_size, domains)
+
+
+# ---------------------------------------------------------------------------
+# Desummarization (paper §3.6) — full, ranged, and streaming variants.
+# ---------------------------------------------------------------------------
+
+def rle_expand(values: np.ndarray, freq: np.ndarray) -> np.ndarray:
+    """Expand RLE runs to a flat column (cost == join size, paper §3.5.1)."""
+    return np.repeat(values, freq)
+
+
+def desummarize(gfjs: GFJS, *, decode: bool = True) -> Dict[str, np.ndarray]:
+    """Materialize the full flat join result from the summary."""
+    out: Dict[str, np.ndarray] = {}
+    for lvl in gfjs.levels:
+        for v in lvl.vars:
+            col = rle_expand(lvl.key_cols[v], lvl.freq)
+            out[v] = gfjs.domains[v].decode(col) if decode else col
+    return {v: out[v] for v in gfjs.column_order}
+
+
+def desummarize_range(
+    gfjs: GFJS, lo: int, hi: int, *, decode: bool = True
+) -> Dict[str, np.ndarray]:
+    """Materialize join-result rows [lo, hi) only — O((hi-lo) + log runs).
+
+    Beyond-paper extension (DESIGN.md §7): GFJS run boundaries are prefix
+    sums, so any row range is addressable without touching the rest of the
+    result.  This is what makes GFJS range-shardable across a TPU mesh: each
+    data host expands only its own slice.
+    """
+    lo = max(0, int(lo))
+    hi = min(int(hi), gfjs.join_size)
+    out: Dict[str, np.ndarray] = {}
+    for li, lvl in enumerate(gfjs.levels):
+        bounds = gfjs.bounds(li)
+        first = int(np.searchsorted(bounds, lo, side="right"))
+        last = int(np.searchsorted(bounds, hi - 1, side="right")) if hi > lo else first
+        sl = slice(first, last + 1) if hi > lo else slice(first, first)
+        freq = lvl.freq[sl].copy()
+        if hi > lo and len(freq):
+            start_of_first = int(bounds[first] - lvl.freq[first])
+            freq[0] -= lo - start_of_first
+            freq[-1] -= int(bounds[last]) - hi
+        for v in lvl.vars:
+            col = np.repeat(lvl.key_cols[v][sl], freq)
+            out[v] = gfjs.domains[v].decode(col) if decode else col
+    return {v: out[v] for v in gfjs.column_order}
+
+
+def stream_desummarize(
+    gfjs: GFJS, chunk_rows: int = 1 << 20, *, decode: bool = True
+) -> Iterator[Dict[str, np.ndarray]]:
+    """Yield the join result in row chunks without full materialization."""
+    for lo in range(0, gfjs.join_size, chunk_rows):
+        yield desummarize_range(gfjs, lo, min(lo + chunk_rows, gfjs.join_size),
+                                decode=decode)
+
+
+def row_at(gfjs: GFJS, t: int, *, decode: bool = True) -> Dict[str, object]:
+    """O(levels * log runs) random access to join-result row ``t``."""
+    if not (0 <= t < gfjs.join_size):
+        raise IndexError(t)
+    out: Dict[str, object] = {}
+    for li, lvl in enumerate(gfjs.levels):
+        bounds = gfjs.bounds(li)
+        r = int(np.searchsorted(bounds, t, side="right"))
+        for v in lvl.vars:
+            code = lvl.key_cols[v][r]
+            out[v] = gfjs.domains[v].decode(np.asarray([code]))[0] if decode else int(code)
+    return {v: out[v] for v in gfjs.column_order}

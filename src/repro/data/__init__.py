@@ -1,0 +1,6 @@
+"""GJ-fed data pipeline (DESIGN.md §4): relational corpus -> GFJS ->
+range-sharded streaming desummarization -> token batches."""
+
+from repro.data.pipeline import JoinCorpus, TokenBatcher
+
+__all__ = ["JoinCorpus", "TokenBatcher"]

@@ -1,0 +1,3 @@
+"""Fault-tolerance scenarios: failure injection, deterministic resume,
+straggler mitigation.  The mechanisms live in train/trainer.py and
+checkpoint/; this package hosts their test scenarios and docs."""

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for GJ's three hot primitives (DESIGN.md §2).
+
+Layout (per the repo convention):
+  expand.py / segsum.py / boundaries.py / dense_contract.py — pallas_call +
+      explicit BlockSpec VMEM tiling, one file per kernel;
+  ops.py — jit'd public wrappers (padding buckets, interpret dispatch);
+  ref.py — pure-jnp oracles used by the allclose sweep tests.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

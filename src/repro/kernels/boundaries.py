@@ -1,0 +1,55 @@
+"""`run_boundaries` — run-start detection over sorted keys (Pallas).
+
+The build side of a GROUP BY: given lexsorted (packed) key codes, emit a 0/1
+flag per position marking the first entry of each run.  ``cumsum(flags)-1``
+then yields the dense segment ids consumed by `mul_segsum`, and the flag sum
+is the number of groups — together these two kernels implement the paper's
+"scan the table once and count exact frequencies" (quantitative learning)
+entirely on-device.
+
+Cross-tile stencil: each grid step additionally maps the *previous* block of
+the same input (index_map ``max(i-1, 0)``) and compares its last lane — the
+standard Pallas trick for 1-element halos without a second pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T = 1024
+
+
+def _boundaries_kernel(cur_ref, prev_ref, out_ref):
+    i = pl.program_id(0)
+    cur = cur_ref[...]
+    shifted = jnp.concatenate([prev_ref[...][-1:], cur[:-1]])
+    flags = (cur != shifted).astype(jnp.int32)
+    # position 0 of the whole array is always a run start
+    first = (jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0)[:, 0] == 0) & (i == 0)
+    out_ref[...] = jnp.where(first, 1, flags)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def run_boundaries(keys: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """flags[i] = 1 iff keys[i] starts a new run (keys sorted, 1-D int32)."""
+    n = keys.shape[0]
+    n_pad = max(-(-n // T), 1) * T
+    # pad with the last key so padding never creates a boundary
+    fill = keys[-1] if n else jnp.int32(0)
+    keys_p = jnp.full((n_pad,), fill, keys.dtype).at[:n].set(keys)
+    out = pl.pallas_call(
+        _boundaries_kernel,
+        grid=(n_pad // T,),
+        in_specs=[
+            pl.BlockSpec((T,), lambda i: (i,)),
+            pl.BlockSpec((T,), lambda i: (jnp.maximum(i - 1, 0),)),
+        ],
+        out_specs=pl.BlockSpec((T,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        interpret=interpret,
+    )(keys_p, keys_p)
+    return out[:n]

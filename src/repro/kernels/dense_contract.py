@@ -1,0 +1,67 @@
+"""`dense_message` — counting-semiring blocked matmul (MXU) for dense
+potentials.
+
+When a potential's key space is small enough to densify (|parent domain| x
+|child domain| below a budget), the sum-product message
+``m_out[p] = sum_v Phi[p, v] * m_in[v]`` is literally a matrix product in
+the counting semiring — which *is* (+, x) — so it runs on the MXU at full
+throughput instead of the VPU.  The JAX engine picks dense vs COO per
+factor by fill ratio (see repro/core/engine_jax.py); this kernel is the
+dense path, and also serves K stacked messages at once ([V, K]).
+
+Classic 3-loop blocked matmul: grid (P/BP, K/BK, V/BV); the V axis is the
+innermost (sequential) dimension and the output block is revisited across V
+steps, accumulating in VMEM — the canonical Pallas accumulation pattern.
+Tiles are 128-aligned for the 128x128 MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BP, BK, BV = 256, 128, 256
+
+
+def _dense_message_kernel(phi_ref, m_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        phi_ref[...], m_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dense_message(
+    phi: jax.Array,   # [P, V] float32 dense potential (counts)
+    m: jax.Array,     # [V, K] float32 incoming messages
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """[P, K] = phi @ m on the counting semiring (f32, exact < 2**24)."""
+    P, V = phi.shape
+    V2, K = m.shape
+    assert V == V2
+    Pp, Vp, Kp = -(-P // BP) * BP, -(-V // BV) * BV, -(-K // BK) * BK
+    phi_p = jnp.zeros((Pp, Vp), jnp.float32).at[:P, :V].set(phi)
+    m_p = jnp.zeros((Vp, Kp), jnp.float32).at[:V, :K].set(m)
+
+    out = pl.pallas_call(
+        _dense_message_kernel,
+        grid=(Pp // BP, Kp // BK, Vp // BV),
+        in_specs=[
+            pl.BlockSpec((BP, BV), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BV, BK), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BP, BK), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Pp, Kp), jnp.float32),
+        interpret=interpret,
+    )(phi_p, m_p)
+    return out[:P, :K]

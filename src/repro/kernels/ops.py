@@ -1,0 +1,101 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These are what the JAX GJ engine calls.  Responsibilities:
+
+* interpret-mode dispatch: on CPU backends the kernels execute their Python
+  bodies (`interpret=True`); on TPU they compile to Mosaic.
+* bucketized padding: output sizes are data-dependent in GJ, so callers pass
+  the exact total and we round up to the next power-of-two bucket — jit
+  caches stay bounded at O(log max-size) entries (DESIGN.md §2).
+* dtype guards: the TPU kernels accumulate in f32 (exact < 2**24); wrappers
+  fall back to exact XLA int64 paths above that.  On this CPU container the
+  fallbacks also serve as the measured engine, with kernels validated via
+  interpret mode in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import boundaries as _boundaries
+from repro.kernels import dense_contract as _dense
+from repro.kernels import expand as _expand
+from repro.kernels import segsum as _segsum
+
+F32_EXACT = 1 << 24
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def next_bucket(n: int, floor: int = 512) -> int:
+    """Next power-of-two padding bucket (>= floor)."""
+    b = floor
+    while b < n:
+        b <<= 1
+    return b
+
+
+def rle_expand(payload, bounds, total: int, *, interpret: bool | None = None):
+    """Expand RLE runs to a flat array of ``total`` elements."""
+    interpret = default_interpret() if interpret is None else interpret
+    t_pad = next_bucket(max(total, 1))
+    out = _expand.expand_gather(
+        jnp.asarray(payload, jnp.int32), jnp.asarray(bounds, jnp.int32),
+        t_pad=t_pad, interpret=interpret)
+    return out[:total]
+
+
+def expand_indices(bounds, total: int, *, interpret: bool | None = None):
+    """Source-run index per output position (frontier expansion's `src`)."""
+    n = bounds.shape[0]
+    payload = jnp.arange(n, dtype=jnp.int32)
+    return rle_expand(payload, bounds, total, interpret=interpret)
+
+
+def mul_segsum(seg_ids, x, y, num_segments: int, *,
+               interpret: bool | None = None, exact: bool = False):
+    """Per-segment sum of x*y.  ``exact=True`` forces the int64 XLA path."""
+    interpret = default_interpret() if interpret is None else interpret
+    if exact:
+        idt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+        return jax.ops.segment_sum(
+            jnp.asarray(x, idt) * jnp.asarray(y, idt),
+            jnp.asarray(seg_ids, jnp.int32), num_segments=num_segments)
+    out = _segsum.mul_segsum(
+        jnp.asarray(seg_ids, jnp.int32),
+        jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
+        num_segments=num_segments, interpret=interpret)
+    return out
+
+
+def run_boundaries(keys, *, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _boundaries.run_boundaries(jnp.asarray(keys, jnp.int32),
+                                      interpret=interpret)
+
+
+def dense_message(phi, m, *, interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return _dense.dense_message(jnp.asarray(phi, jnp.float32),
+                                jnp.asarray(m, jnp.float32),
+                                interpret=interpret)
+
+
+def group_by_count(keys, *, interpret: bool | None = None):
+    """GROUP BY sorted keys: (segment ids, counts, num_groups).
+
+    Composition of the two build kernels: run_boundaries -> cumsum ->
+    mul_segsum(ones, ones).
+    """
+    flags = run_boundaries(keys, interpret=interpret)
+    seg = jnp.cumsum(flags) - 1
+    num = int(flags.sum())
+    ones = jnp.ones_like(seg, dtype=jnp.float32)
+    counts = mul_segsum(seg, ones, ones, num, interpret=interpret)
+    return seg, counts, num

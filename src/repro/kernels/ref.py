@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function computes exactly what its kernel computes, with no Pallas, no
+padding contracts, and no dtype tricks — these are the ground truth for the
+shape/dtype sweep tests in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_gather_ref(payload: jax.Array, bounds: jax.Array, total: int) -> jax.Array:
+    """RLE expansion: out[t] = payload[r] where bounds[r-1] <= t < bounds[r]."""
+    t = jnp.arange(total, dtype=jnp.int32)
+    idx = jnp.searchsorted(bounds, t, side="right")
+    idx = jnp.minimum(idx, payload.shape[0] - 1)
+    return payload[idx]
+
+
+def mul_segsum_ref(seg_ids: jax.Array, x: jax.Array, y: jax.Array,
+                   num_segments: int) -> jax.Array:
+    """out[s] = sum_{i: seg_ids[i]==s} x[i]*y[i]."""
+    return jax.ops.segment_sum((x * y).astype(jnp.float32), seg_ids,
+                               num_segments=num_segments)
+
+
+def run_boundaries_ref(keys: jax.Array) -> jax.Array:
+    """flags[i] = 1 iff i == 0 or keys[i] != keys[i-1]."""
+    if keys.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32)
+    head = jnp.ones((1,), jnp.int32)
+    rest = (keys[1:] != keys[:-1]).astype(jnp.int32)
+    return jnp.concatenate([head, rest])
+
+
+def dense_message_ref(phi: jax.Array, m: jax.Array) -> jax.Array:
+    """Counting-semiring matmul."""
+    return (phi.astype(jnp.float32) @ m.astype(jnp.float32))

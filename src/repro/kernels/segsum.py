@@ -1,0 +1,87 @@
+"""`mul_segsum` — fused multiply + segment-sum Pallas kernel.
+
+This is the sum half of GJ's sum-product operation (message passing): given
+entries sorted by (dense) segment id, compute ``out[s] = sum_i x[i]*y[i]``
+over each segment.  On TPU the per-tile reduction is a one-hot matrix
+product — an [T, T] f32 matmul that runs on the MXU — and the cross-tile
+stitch (segments spanning tile boundaries add partials into the same slot)
+is a tiny scatter-add done by XLA on the [num_tiles, T] partial matrix.
+
+Why this shape: segment ids are *dense* (0..S-1, no gaps) by construction in
+GJ (they come from run-boundary cumsums), so a tile of T entries touches at
+most T distinct segments and the relative id ``seg - seg_first(tile)`` fits
+in [0, T).  That bound is what lets the one-hot matrix be a fixed [T, T]
+MXU tile instead of an unbounded scatter.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+T = 512  # entries per tile; [T, T] one-hot fits VMEM (1 MiB f32)
+
+
+def _mul_segsum_kernel(seg_ref, x_ref, y_ref, first_ref, part_ref):
+    """Per-tile partial segment sums, relative to the tile's first id."""
+    seg = seg_ref[...]
+    first = seg[0]
+    rel = seg - first                                        # [T] in [0, T)
+    prod = (x_ref[...] * y_ref[...]).astype(jnp.float32)
+    s = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)       # out slot
+    onehot = (s == rel[None, :]).astype(jnp.float32)         # [T, T]
+    # MXU: [T, T] @ [T] — per-slot sums of this tile's products
+    part_ref[...] = jax.lax.dot_general(
+        onehot, prod[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+    first_ref[0] = first
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def mul_segsum(
+    seg_ids: jax.Array,   # [N] int32, sorted ascending, dense ids
+    x: jax.Array,         # [N]
+    y: jax.Array,         # [N]
+    *,
+    num_segments: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """sum_i x[i]*y[i] per segment; f32 accumulate (exact below 2**24)."""
+    n = seg_ids.shape[0]
+    n_pad = max(-(-n // T), 1) * T
+    # pad with an out-of-range segment id so padding lands in a dead slot
+    seg_p = jnp.full((n_pad,), num_segments, jnp.int32).at[:n].set(seg_ids)
+    x_p = jnp.zeros((n_pad,), x.dtype).at[:n].set(x)
+    y_p = jnp.zeros((n_pad,), y.dtype).at[:n].set(y)
+    grid = n_pad // T
+
+    first, parts = pl.pallas_call(
+        _mul_segsum_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((T,), lambda i: (i,)),
+            pl.BlockSpec((T,), lambda i: (i,)),
+            pl.BlockSpec((T,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((T,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid,), jnp.int32),
+            jax.ShapeDtypeStruct((grid * T,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seg_p, x_p, y_p)
+
+    # stitch: scatter-add each tile's T relative slots at its first id
+    parts = parts.reshape(grid, T)
+    out = jnp.zeros((num_segments + T,), jnp.float32)
+    idx = first[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    idx = jnp.minimum(idx, num_segments + T - 1)
+    out = out.at[idx.reshape(-1)].add(parts.reshape(-1))
+    return out[:num_segments]

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x applicable input shape x mesh) cell, jit-lower and
+COMPILE the corresponding step function against ShapeDtypeStruct inputs on
+the production mesh — 16x16=256 chips single-pod and (2,16,16)=512 chips
+multi-pod — and record:
+
+  * compiled.memory_analysis()  (proves the cell fits per-device HBM)
+  * compiled.cost_analysis()    (HLO flops/bytes for the roofline)
+  * collective bytes parsed from the compiled HLO text, by collective kind
+
+Results land in experiments/dryrun/<arch>--<shape>--<mesh>.json; the
+roofline report (launch/roofline.py) and EXPERIMENTS.md are generated from
+those files.  Any sharding mismatch, compile OOM, or unsupported collective
+fails the cell — those are bugs in the framework, not in the cell.
+
+NOTE the first two lines of this file: jax fixes the device count at first
+init, so the XLA_FLAGS override must precede every other import (including
+repro.*), and must NOT be set globally (smoke tests/benches see 1 device).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, skip_reason
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dtype, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand sizes of every collective op in the compiled HLO."""
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in COLLECTIVE_KINDS:
+            # match the op invocation, e.g. "= bf16[..] all-reduce(bf16[..] %x"
+            marker = f" {kind}("
+            if marker in s and not s.startswith("//"):
+                # operand shapes: inside the call parens
+                call = s.split(marker, 1)[1]
+                shapes = _SHAPE_RE.findall("(" + call)
+                nbytes = 0
+                for dtype, dims in shapes:
+                    n = 1
+                    if dims:
+                        for d in dims.split(","):
+                            n *= int(d)
+                    nbytes += n * _DTYPE_BYTES[dtype]
+                if nbytes == 0:  # fall back to the result shape
+                    m = _SHAPE_RE.search(s)
+                    nbytes = _shape_bytes(m) if m else 0
+                out[kind] += nbytes
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVE_KINDS)
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             rules=None, overrides=None, preset: str = "default",
+             out_dir=None, suffix: str = "") -> Dict:
+    import contextlib
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.act_sharding import use as use_act_sharding
+    from repro.dist.sharding import SP_FSDP_RULES
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    act_ctx = contextlib.nullcontext()
+    if preset == "sp_fsdp":
+        rules = SP_FSDP_RULES
+        baxes = ("pod", "data") if multi_pod else ("data",)
+        act_ctx = use_act_sharding(mesh, P(baxes if len(baxes) > 1
+                                           else baxes[0], "model"))
+    t0 = time.time()
+    fn, args, shardings, lm, cfg, kind = build_cell(arch, shape, mesh,
+                                                    rules=rules,
+                                                    overrides=overrides)
+    with mesh, act_ctx:
+        lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        text = compiled.as_text()
+
+    coll = collective_bytes(text)
+    # trip-count-aware re-analysis: XLA's cost_analysis counts while bodies
+    # once (scan-over-layers would be L-times under-reported)
+    corrected = analyze_hlo(text)
+    hlo_path = None
+    if out_dir is not None:
+        import zstandard
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        hlo_path = os.path.join(out_dir,
+                                f"{arch}--{shape}--{mesh_name}{suffix}.hlo.zst")
+        with open(hlo_path, "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=6).compress(text.encode()))
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "kind": kind,
+        "devices": int(mesh.devices.size),
+        "seconds_to_compile": round(time.time() - t0, 1),
+        "flops": corrected["flops"],
+        "bytes_accessed": corrected["bytes"],
+        "flops_xla_raw": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "bytes_xla_raw": float(cost.get("bytes accessed", -1.0)) if cost else -1.0,
+        "memory": {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")
+        } if mem is not None else {},
+        "collectives": {**{k: corrected["collectives"].get(k, 0.0)
+                           for k in COLLECTIVE_KINDS},
+                        "total": corrected["collectives"]["total"],
+                        "count": coll["count"],
+                        "uncorrected_total": coll["total"]},
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "hlo_collective_lines": coll["count"],
+    }
+    return result
+
+
+def reanalyze(out_dir: str) -> None:
+    """Recompute corrected metrics from stored HLO without recompiling."""
+    import glob
+
+    import zstandard
+    d = zstandard.ZstdDecompressor()
+    n = 0
+    for hlo in sorted(glob.glob(os.path.join(out_dir, "*.hlo.zst"))):
+        jpath = hlo[: -len(".hlo.zst")] + ".json"
+        if not os.path.exists(jpath):
+            continue
+        with open(hlo, "rb") as f:
+            text = d.decompress(f.read(), max_output_size=1 << 32).decode()
+        corrected = analyze_hlo(text)
+        with open(jpath) as f:
+            res = json.load(f)
+        res["flops"] = corrected["flops"]
+        res["bytes_accessed"] = corrected["bytes"]
+        res["collectives"] = {
+            **{k: corrected["collectives"].get(k, 0.0)
+               for k in COLLECTIVE_KINDS},
+            "total": corrected["collectives"]["total"],
+            "count": res["collectives"].get("count", -1),
+            "uncorrected_total": res["collectives"].get("uncorrected_total", -1),
+        }
+        with open(jpath, "w") as f:
+            json.dump(res, f, indent=1)
+        n += 1
+        print(f"reanalyzed {os.path.basename(jpath)}", flush=True)
+    print(f"{n} cells reanalyzed")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--preset", default="default",
+                    choices=["default", "sp_fsdp"],
+                    help="sharding preset (sp_fsdp = context parallel + "
+                         "FSDP, the §Perf LM-1 configuration)")
+    ap.add_argument("--suffix", default="",
+                    help="suffix for output filenames (hillclimb variants)")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute metrics from stored HLO, no recompiling")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze(args.out)
+        return
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    total = ok = failed = skipped = 0
+    for arch in archs:
+        shapes = (list(SHAPES) if args.shape == "all" else [args.shape])
+        for shape in shapes:
+            reason = skip_reason(arch, shape)
+            if reason:
+                print(f"SKIP  {arch:22s} {shape:12s} -- {reason}", flush=True)
+                skipped += 1
+                continue
+            for mp in meshes:
+                total += 1
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(
+                    args.out, f"{arch}--{shape}--{mesh_name}{args.suffix}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"CACHED {arch:22s} {shape:12s} {mesh_name}", flush=True)
+                    ok += 1
+                    continue
+                try:
+                    res = run_cell(arch, shape, mp, preset=args.preset,
+                                   out_dir=args.out, suffix=args.suffix)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    ok += 1
+                    print(f"OK    {arch:22s} {shape:12s} {mesh_name} "
+                          f"compile={res['seconds_to_compile']}s "
+                          f"flops={res['flops']:.3g} "
+                          f"coll={res['collectives']['total']:.3g}B", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failed += 1
+                    err = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    with open(path + ".err", "w") as f:
+                        json.dump(err, f, indent=1)
+                    print(f"FAIL  {arch:22s} {shape:12s} {mesh_name} -- "
+                          f"{type(e).__name__}: {str(e)[:200]}", flush=True)
+    print(f"\ndry-run: {ok}/{total} compiled, {failed} failed, "
+          f"{skipped} skipped (documented)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Diagnose one dry-run cell: top collectives / dots by amplified bytes.
+
+  PYTHONPATH=src python -m repro.launch.inspect_cell --arch starcoder2_3b \
+      --shape train_4k [--multi-pod] [--top 15]
+
+Prints each hot op with its enclosing while amplification, shapes, and the
+jax op_name metadata — the evidence §Perf hypotheses are built from.
+"""
+
+import argparse
+import re
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.launch.hlo_analysis import (COLLECTIVE_KINDS, _TRIP_RE, _nbytes,
+                                       extract_called, parse_module)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+_META = re.compile(r'op_name="([^"]+)"')
+
+
+def collect_hot_ops(text: str, *, kinds=COLLECTIVE_KINDS) -> List[Dict]:
+    comps, entry = parse_module(text)
+
+    # amplification per computation: product of trip counts on the path
+    amp: Dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        name = stack.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            called = extract_called(op.attrs)
+            if op.kind == "fusion":
+                continue
+            mult = 1.0
+            if op.kind == "while":
+                tm = _TRIP_RE.search(op.attrs)
+                mult = float(tm.group(1)) if tm else 1.0
+            for c in called:
+                a = amp[name] * mult
+                if amp.get(c, 0) < a:
+                    amp[c] = a
+                    stack.append(c)
+
+    out = []
+    for cname, comp in comps.items():
+        a = amp.get(cname, 0.0)
+        if a == 0:
+            continue
+        for op in comp.ops:
+            if op.kind not in kinds:
+                continue
+            b = sum(_nbytes(comp.symtab.get(o, "")) for o in op.operands) \
+                or _nbytes(op.result_type)
+            meta = _META.search(op.attrs)
+            out.append({
+                "kind": op.kind, "bytes": b, "amp": a,
+                "total": b * a, "comp": cname,
+                "result": op.result_type[:60],
+                "op_name": meta.group(1) if meta else "?",
+            })
+    out.sort(key=lambda d: -d["total"])
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--kinds", default="collectives",
+                    choices=["collectives", "dot"])
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, cargs, shardings, lm, cfg, kind = build_cell(args.arch, args.shape, mesh)
+    with mesh:
+        text = jax.jit(fn, in_shardings=shardings).lower(*cargs) \
+            .compile().as_text()
+    kinds = COLLECTIVE_KINDS if args.kinds == "collectives" else ("dot",)
+    rows = collect_hot_ops(text, kinds=kinds)
+    total = sum(r["total"] for r in rows)
+    print(f"total {args.kinds} bytes (amplified): {total:.3e}")
+    for r in rows[:args.top]:
+        print(f"{r['total']:.3e}B  {r['kind']:18s} amp={r['amp']:<6.0f} "
+              f"per={r['bytes']:.2e}B  {r['result']:30s} {r['op_name'][:90]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Abstract input specs + shardings for every (arch x shape x mesh) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation — and
+``cell_functions`` builds the function the dry-run lowers for each shape
+kind (train_step / prefill or encode / decode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.dist.sharding import DEFAULT_RULES, ShardingRules, param_specs
+from repro.models.config import ModelConfig
+from repro.models.model import LM
+from repro.train.optim import AdamWConfig, init_state
+from repro.train.train_step import TrainState, make_train_step
+
+
+def arch_rules(cfg: ModelConfig, mesh: Mesh,
+               base: ShardingRules = DEFAULT_RULES) -> ShardingRules:
+    """Per-arch rule adjustments for divisibility: if heads don't divide the
+    model axis, shard head_dim instead (gemma3: 8 heads on a 16-way axis)."""
+    model_size = mesh.shape.get("model", 1)
+    rules = base
+    if cfg.num_heads % model_size != 0:
+        rules = rules.with_overrides(heads=None, kv_heads=None,
+                                     head=("model",))
+    elif cfg.num_kv_heads % model_size != 0:
+        rules = rules.with_overrides(kv_heads=None)
+    return rules
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int,
+                 *, labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((batch, seq, 512), jnp.float32)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if labels:
+        out["labels"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    if cfg.family == "vlm":
+        out["vision"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vlm.num_image_tokens, cfg.vlm.vision_dim), jnp.float32)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch: int):
+    baxes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    bsz = 1
+    for a in baxes:
+        bsz *= mesh.shape[a]
+    bspec = tuple(baxes) if (baxes and batch % bsz == 0 and batch > 1) else None
+    if bspec is not None and len(bspec) == 1:
+        bspec = bspec[0]
+
+    def spec_of(s: jax.ShapeDtypeStruct):
+        parts = [bspec] + [None] * (len(s.shape) - 1)
+        return NamedSharding(mesh, P(*parts))
+
+    return spec_of
+
+
+def cache_shardings(mesh: Mesh, batch: int):
+    """Heuristic cache specs: leading dim = stacked layers (never sharded),
+    dim1 = batch (shard over data axes if divisible), then the largest
+    remaining dim sharded over 'model' if divisible."""
+    baxes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    bsz = 1
+    for a in baxes:
+        bsz *= mesh.shape[a]
+    model = mesh.shape.get("model", 1)
+
+    def spec_of(leaf: jax.ShapeDtypeStruct):
+        shape = leaf.shape
+        parts: list = [None] * len(shape)
+        if len(shape) >= 3:
+            if shape[1] == batch and batch % bsz == 0 and batch > 1 and baxes:
+                parts[1] = tuple(baxes) if len(baxes) > 1 else baxes[0]
+            # largest remaining dim onto 'model'
+            cand = [(shape[i], i) for i in range(2, len(shape))
+                    if shape[i] % model == 0 and shape[i] >= model]
+            if cand and model > 1:
+                _, i = max(cand)
+                parts[i] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return spec_of
+
+
+def abstract_state(lm: LM) -> TrainState:
+    params = lm.abstract_params()
+    opt = jax.eval_shape(init_state, params)
+    return TrainState(params, opt)
+
+
+def abstract_caches(lm: LM, batch: int, s_max: int):
+    return jax.eval_shape(lambda: lm.init_caches(batch, s_max))
+
+
+def state_shardings(lm: LM, mesh: Mesh, rules: ShardingRules):
+    specs = param_specs(lm.logical_axes(), mesh, rules)
+    pshard = {k: NamedSharding(mesh, s) for k, s in specs.items()}
+    rep = NamedSharding(mesh, P())
+    opt = jax.eval_shape(init_state, lm.abstract_params())
+    mshard = {k: NamedSharding(mesh, specs[k]) for k in opt.m}
+    vshard = {k: NamedSharding(mesh, specs[k]) for k in opt.v}
+    from repro.train.optim import AdamWState
+    return TrainState(pshard, AdamWState(rep, mshard, vshard))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               rules: Optional[ShardingRules] = None,
+               overrides: Optional[dict] = None):
+    """Returns (fn, args, in_shardings, lm, cfg, kind) for one grid cell."""
+    seq, batch, kind = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if cfg.family == "hybrid" and cfg.ssm is not None and kind != "decode":
+        pass
+    cfg = cfg.scaled(max_seq=max(cfg.max_seq, seq))
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    lm = LM(cfg)
+    rules = rules or arch_rules(cfg, mesh)
+
+    if kind == "train":
+        step = make_train_step(lm, AdamWConfig())
+        state = abstract_state(lm)
+        batch_s = batch_struct(cfg, batch, seq, labels=True)
+        st_sh = state_shardings(lm, mesh, rules)
+        b_sh = jax.tree.map(batch_shardings(cfg, mesh, batch), batch_s)
+        return step, (state, batch_s), (st_sh, b_sh), lm, cfg, kind
+
+    if kind == "prefill":
+        if cfg.is_encoder_only or cfg.family == "audio":
+            def encode(params, b):
+                return lm.forward(params, b)
+            fn = encode
+        else:
+            def fn(params, b):
+                return lm.prefill(params, b, s_max=seq)
+        params = lm.abstract_params()
+        batch_s = batch_struct(cfg, batch, seq, labels=False)
+        specs = param_specs(lm.logical_axes(), mesh, rules)
+        p_sh = {k: NamedSharding(mesh, s) for k, s in specs.items()}
+        b_sh = jax.tree.map(batch_shardings(cfg, mesh, batch), batch_s)
+        return fn, (params, batch_s), (p_sh, b_sh), lm, cfg, kind
+
+    if kind == "decode":
+        def fn(params, tokens, caches, **kw):
+            return lm.decode_step(params, tokens, caches, **kw)
+        params = lm.abstract_params()
+        tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        caches = abstract_caches(lm, batch, seq)
+        specs = param_specs(lm.logical_axes(), mesh, rules)
+        p_sh = {k: NamedSharding(mesh, s) for k, s in specs.items()}
+        t_sh = batch_shardings(cfg, mesh, batch)(tokens)
+        c_sh = jax.tree.map(cache_shardings(mesh, batch), caches)
+        args = (params, tokens, caches)
+        shardings = (p_sh, t_sh, c_sh)
+        if cfg.family == "vlm":
+            vis = jax.ShapeDtypeStruct(
+                (batch, cfg.vlm.num_image_tokens, cfg.vlm.vision_dim),
+                jnp.float32)
+            def fn(params, tokens, caches, vision):
+                return lm.decode_step(params, tokens, caches, vision=vision)
+            args = (params, tokens, caches, vis)
+            shardings = (p_sh, t_sh, c_sh, batch_shardings(cfg, mesh, batch)(vis))
+        return fn, args, shardings, lm, cfg, kind
+
+    raise ValueError(kind)

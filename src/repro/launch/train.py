@@ -1,0 +1,60 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_8b --smoke \
+        --steps 100 --batch 8 --seq 64 [--microbatches 2] [--resume]
+
+Full-scale configs launch the same code path on a real TPU fleet; on this
+CPU container use --smoke (reduced same-family config).  Data comes from the
+GJ-fed pipeline (a synthetic relational corpus joined by GJ).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, get_smoke
+from repro.data.pipeline import JoinCorpus, TokenBatcher
+from repro.models.model import LM
+from repro.relational.synth import lastfm_like
+from repro.train.optim import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    lm = LM(cfg)
+
+    cat, queries = lastfm_like(n_users=500, n_artists=400,
+                               artists_per_user=8, friends_per_user=4)
+    corpus = JoinCorpus.build(cat, queries["lastfm_A1"], vocab=cfg.vocab)
+    batcher = TokenBatcher(corpus, batch=args.batch, seq=args.seq)
+
+    trainer = Trainer(
+        lm,
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                    total_steps=args.steps),
+        batcher,
+        TrainerConfig(steps=args.steps, checkpoint_every=args.checkpoint_every,
+                      checkpoint_dir=args.checkpoint_dir,
+                      log_every=max(args.steps // 10, 1),
+                      microbatches=args.microbatches),
+    )
+    trainer.run()
+    for m in trainer.metrics_log:
+        print(f"step {m['step']:>5d}  loss {m['loss']:.4f}  lr {m['lr']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

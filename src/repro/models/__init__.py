@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, smoke_variant
+from repro.models.model import LM

@@ -1,0 +1,347 @@
+"""Attention variants: GQA (covers MHA), sliding-window, qk-norm, softcap,
+cross-attention (VLM), and DeepSeek-style MLA (multi-head latent attention).
+
+All functions are stateless; parameters live in a flat dict under a prefix.
+Three entry modes share one code path:
+
+* ``forward``   — full-sequence training / encoder forward
+* ``prefill``   — forward + returns the KV cache it built
+* ``decode``    — one new token against the cache (the ``serve_step`` path)
+
+The KV cache for GQA is [B, S_max, KV, hd] per layer; MLA caches only the
+compressed latent [B, S_max, kv_lora + rope_dim] — the paper-accurate memory
+saving that makes deepseek-v2 decode shapes fit (see configs/deepseek).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamCollector, apply_rope, normal_init, rms_norm
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # [B, S_max, KV, hd]  (or latent [B, S_max, Dl] for MLA)
+    v: Optional[jax.Array]
+    pos: jax.Array    # [] int32 — filled length
+
+
+# ---------------------------------------------------------------------------
+# masks
+# ---------------------------------------------------------------------------
+
+def attn_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+              window: int = 0) -> jax.Array:
+    """[..., q, k] boolean mask. window > 0 => sliding-window attention."""
+    m = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+class GQAttention:
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str,
+                 *, cross: bool = False, kv_dim: Optional[int] = None) -> None:
+        self.cfg = cfg
+        self.prefix = prefix
+        self.cross = cross
+        d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+        dt = jnp.dtype(cfg.param_dtype)
+        kvd = kv_dim or d
+        init = normal_init(d ** -0.5)
+        pc.declare(f"{prefix}.wq", (d, H, hd), dt, ("embed", "heads", "head"), init)
+        pc.declare(f"{prefix}.wk", (kvd, KV, hd), dt, ("embed", "kv_heads", "head"), init)
+        pc.declare(f"{prefix}.wv", (kvd, KV, hd), dt, ("embed", "kv_heads", "head"), init)
+        pc.declare(f"{prefix}.wo", (H, hd, d), dt, ("heads", "head", "embed"),
+                   normal_init((H * hd) ** -0.5))
+        if cfg.qk_norm:
+            from repro.models.layers import zeros_init
+            pc.declare(f"{prefix}.q_norm", (hd,), dt, ("head",), zeros_init())
+            pc.declare(f"{prefix}.k_norm", (hd,), dt, ("head",), zeros_init())
+
+    # -- projections --------------------------------------------------------
+    def _qkv(self, p, x, kv_src, positions, kv_positions, *, rope: bool):
+        cfg, pre = self.cfg, self.prefix
+        q = jnp.einsum("bsd,dhk->bshk", x, p[f"{pre}.wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, p[f"{pre}.wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, p[f"{pre}.wv"].astype(x.dtype))
+        if cfg.qk_norm:
+            q = rms_norm(q, p[f"{pre}.q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p[f"{pre}.k_norm"], cfg.norm_eps)
+        if rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, kv_positions, cfg.rope_theta)
+        return q, k, v
+
+    # GQA grouping layout: 'repeat' expands K/V to H heads so the head dim
+    # stays a single axis the TP mesh can shard (32 heads / 16-way model
+    # axis).  The 'grouped' [KV, G] reshape splits the head axis into dims
+    # of size KV and G, neither of which divides the mesh when KV < 16 —
+    # GSPMD then replicates the whole attention computation (measured:
+    # EXPERIMENTS.md §Perf LM-2).  Numerically identical; tests assert it.
+    kv_layout = "repeat"
+
+    def _group(self, q, k, v):
+        B, Sq, H, hd = q.shape
+        KV = k.shape[2]
+        if self.kv_layout == "repeat" and KV != H:
+            k = jnp.repeat(k, H // KV, axis=2)
+            v = jnp.repeat(v, H // KV, axis=2)
+            KV = H
+        G = H // KV
+        return q.reshape(B, Sq, KV, G, hd), k, v
+
+    def _attend(self, p, q, k, v, mask):
+        """q: [B,Sq,H,hd]; k/v: [B,Sk,KV,hd]; mask: [Sq,Sk]/[B?,Sk] or None."""
+        cfg = self.cfg
+        B, Sq, H, hd = q.shape
+        qg, k, v = self._group(q, k, v)
+        KV, G = qg.shape[2], qg.shape[3]
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+        scores *= hd ** -0.5
+        if cfg.attn_logit_softcap > 0:
+            c = cfg.attn_logit_softcap
+            scores = c * jnp.tanh(scores / c)
+        if mask is not None:
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", w, v).reshape(B, Sq, H, hd)
+        return jnp.einsum("bqhk,hkd->bqd", out, p[f"{self.prefix}.wo"].astype(q.dtype))
+
+    def _attend_seq(self, p, q, k, v, *, causal: bool, window: int):
+        """Full-sequence attention; routes long contexts through the
+        online-softmax chunked path (repro.models.flash)."""
+        from repro.models import flash
+
+        cfg = self.cfg
+        B, Sq, H, hd = q.shape
+        if flash.should_chunk(Sq, k.shape[1]):
+            qg, k, v = self._group(q, k, v)
+            out = flash.online_attention(
+                qg, k, v, causal=causal, window=window,
+                softcap=cfg.attn_logit_softcap).reshape(B, Sq, H, hd)
+            return jnp.einsum("bqhk,hkd->bqd", out,
+                              p[f"{self.prefix}.wo"].astype(q.dtype))
+        pos = jnp.arange(Sq, dtype=jnp.int32)
+        mask = attn_mask(pos, pos, causal=causal, window=window)
+        return self._attend(p, q, k, v, mask)
+
+    # -- entry points --------------------------------------------------------
+    def forward(self, p, x, positions, *, window: int = 0,
+                kv_src: Optional[jax.Array] = None,
+                kv_positions: Optional[jax.Array] = None) -> jax.Array:
+        cross = kv_src is not None
+        kv_src = x if kv_src is None else kv_src
+        kv_positions = positions if kv_positions is None else kv_positions
+        q, k, v = self._qkv(p, x, kv_src, positions, kv_positions,
+                            rope=not cross)
+        if cross:
+            return self._attend(p, q, k, v, None)
+        return self._attend_seq(p, q, k, v, causal=self.cfg.causal,
+                                window=window)
+
+    def init_cache(self, batch: int, s_max: int) -> KVCache:
+        cfg = self.cfg
+        shape = (batch, s_max, cfg.num_kv_heads, cfg.head_dim_)
+        dt = jnp.dtype(cfg.compute_dtype)
+        return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt),
+                       jnp.zeros((), jnp.int32))
+
+    def prefill(self, p, x, positions, cache: KVCache, *, window: int = 0):
+        q, k, v = self._qkv(p, x, x, positions, positions, rope=True)
+        S = x.shape[1]
+        cache = KVCache(
+            jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0)),
+            jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0)),
+            jnp.asarray(S, jnp.int32))
+        out = self._attend_seq(p, q, k, v, causal=self.cfg.causal,
+                               window=window)
+        return out, cache
+
+    def decode(self, p, x, cache: KVCache, *, window: int = 0):
+        """x: [B, 1, d]; attends over cache[:pos] + the new token."""
+        cfg = self.cfg
+        pos = cache.pos
+        positions = pos[None, None] + jnp.zeros((x.shape[0], 1), jnp.int32)
+        q, k, v = self._qkv(p, x, x, positions, positions, rope=True)
+        # index dtypes must match even under x64 (core enables it globally)
+        z = jnp.zeros((), pos.dtype)
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (z, pos, z, z))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (z, pos, z, z))
+        s_max = ck.shape[1]
+        k_pos = jnp.arange(s_max, dtype=jnp.int32)
+        valid = k_pos <= pos
+        if window > 0:
+            valid &= k_pos > pos - window
+        mask = valid[None, :]
+        out = self._attend(p, q, ck, cv, mask)
+        return out, KVCache(ck, cv, pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+class MLAttention:
+    """DeepSeek-V2 Multi-head Latent Attention.
+
+    Prefill/train expand the latent to per-head K/V and run (chunked)
+    attention.  Decode uses the ABSORBED form: q_nope is folded through
+    wkv_b so scores are taken directly against the cached latent — per-step
+    cost O(S * (kv_lora + rope)) instead of O(S * H * head_dim), and the
+    cache holds only [B, S, kv_lora + rope_dim].  This is the serving trick
+    that makes deepseek-v2's decode_32k shape fit (DESIGN.md / configs)."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str) -> None:
+        assert cfg.mla is not None
+        self.cfg = cfg
+        self.prefix = prefix
+        m = cfg.mla
+        d, H = cfg.d_model, cfg.num_heads
+        dt = jnp.dtype(cfg.param_dtype)
+        init = normal_init(d ** -0.5)
+        qdim = m.nope_head_dim + m.rope_head_dim
+        if m.q_lora_rank:
+            pc.declare(f"{prefix}.wq_a", (d, m.q_lora_rank), dt, ("embed", None), init)
+            pc.declare(f"{prefix}.q_norm", (m.q_lora_rank,), dt, (None,),
+                       normal_init(0.0))
+            pc.declare(f"{prefix}.wq_b", (m.q_lora_rank, H, qdim), dt,
+                       (None, "heads", "head"), init)
+        else:
+            pc.declare(f"{prefix}.wq", (d, H, qdim), dt, ("embed", "heads", "head"), init)
+        pc.declare(f"{prefix}.wkv_a", (d, m.kv_lora_rank + m.rope_head_dim), dt,
+                   ("embed", None), init)
+        pc.declare(f"{prefix}.kv_norm", (m.kv_lora_rank,), dt, (None,), normal_init(0.0))
+        pc.declare(f"{prefix}.wkv_b", (m.kv_lora_rank, H, m.nope_head_dim + m.v_head_dim),
+                   dt, (None, "heads", "head"), init)
+        pc.declare(f"{prefix}.wo", (H, m.v_head_dim, d), dt,
+                   ("heads", "head", "embed"), normal_init((H * m.v_head_dim) ** -0.5))
+
+    def _q(self, p, x):
+        m, pre = self.cfg.mla, self.prefix
+        if m.q_lora_rank:
+            cq = jnp.einsum("bsd,dr->bsr", x, p[f"{pre}.wq_a"].astype(x.dtype))
+            cq = rms_norm(cq, p[f"{pre}.q_norm"], self.cfg.norm_eps)
+            q = jnp.einsum("bsr,rhk->bshk", cq, p[f"{pre}.wq_b"].astype(x.dtype))
+        else:
+            q = jnp.einsum("bsd,dhk->bshk", x, p[f"{pre}.wq"].astype(x.dtype))
+        return q
+
+    def _latent(self, p, x):
+        m, pre = self.cfg.mla, self.prefix
+        ckv = jnp.einsum("bsd,dr->bsr", x, p[f"{pre}.wkv_a"].astype(x.dtype))
+        c, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+        c = rms_norm(c, p[f"{pre}.kv_norm"], self.cfg.norm_eps)
+        return c, k_rope
+
+    def _full_attention(self, p, x, positions):
+        """Expanded-KV path (train/prefill), chunked when long."""
+        from repro.models import flash
+
+        cfg, m, pre = self.cfg, self.cfg.mla, self.prefix
+        B, S, _ = x.shape
+        H = cfg.num_heads
+        q = self._q(p, x)
+        c, k_rope = self._latent(p, x)
+        kv = jnp.einsum("bsr,rhk->bshk", c, p[f"{pre}.wkv_b"].astype(x.dtype))
+        k_nope, v = kv[..., :m.nope_head_dim], kv[..., m.nope_head_dim:]
+        q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)
+        k_rope = jnp.broadcast_to(k_rope, (B, S, H, m.rope_head_dim))
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        kf = jnp.concatenate([k_nope, k_rope], -1)
+        # treat as MHA: KV groups = H, group size 1
+        qg = qf[:, :, :, None, :]
+        if flash.should_chunk(S, S):
+            out = flash.online_attention(qg, kf, v, causal=cfg.causal,
+                                         window=0)[:, :, :, 0]
+        else:
+            scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+            sc = jnp.einsum("bqhk,bshk->bhqs", qf, kf).astype(jnp.float32) * scale
+            pos = jnp.arange(S)
+            mask = pos[None, :] <= pos[:, None] if cfg.causal else None
+            if mask is not None:
+                sc = jnp.where(mask[None, None], sc, -1e30)
+            w = jax.nn.softmax(sc, -1).astype(x.dtype)
+            out = jnp.einsum("bhqs,bshk->bqhk", w, v)
+        y = jnp.einsum("bqhk,hkd->bqd", out, p[f"{pre}.wo"].astype(x.dtype))
+        return y, c, k_rope_raw_cache(c, k_rope)
+
+    def forward(self, p, x, positions, *, window: int = 0, **_):
+        y, _, _ = self._full_attention(p, x, positions)
+        return y
+
+    def init_cache(self, batch: int, s_max: int) -> KVCache:
+        m = self.cfg.mla
+        dt = jnp.dtype(self.cfg.compute_dtype)
+        lat = jnp.zeros((batch, s_max, m.kv_lora_rank + m.rope_head_dim), dt)
+        return KVCache(lat, None, jnp.zeros((), jnp.int32))
+
+    def prefill(self, p, x, positions, cache: KVCache, *, window: int = 0):
+        cfg, m = self.cfg, self.cfg.mla
+        y, c, _ = self._full_attention(p, x, positions)
+        # cache the latent + the *roped* shared key part
+        k_rope_r = self._roped_krope(p, x, positions)
+        lat = jnp.concatenate([c, k_rope_r], axis=-1)
+        cache = KVCache(
+            jax.lax.dynamic_update_slice(cache.k, lat, (0, 0, 0)),
+            None, jnp.asarray(x.shape[1], jnp.int32))
+        return y, cache
+
+    def _roped_krope(self, p, x, positions):
+        cfg, m = self.cfg, self.cfg.mla
+        _, k_rope = self._latent(p, x)
+        return apply_rope(k_rope[..., None, :], positions,
+                          cfg.rope_theta)[..., 0, :]
+
+    def decode(self, p, x, cache: KVCache, *, window: int = 0):
+        """Absorbed-form single-token decode against the latent cache."""
+        cfg, m, pre = self.cfg, self.cfg.mla, self.prefix
+        B = x.shape[0]
+        H = cfg.num_heads
+        pos = cache.pos
+        positions = pos[None, None] + jnp.zeros((B, 1), jnp.int32)
+        q = self._q(p, x)                               # [B,1,H,dn+dr]
+        q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+        c_new, _ = self._latent(p, x)
+        kr_new = self._roped_krope(p, x, positions)
+        lat_new = jnp.concatenate([c_new, kr_new], axis=-1)
+        z = jnp.zeros((), pos.dtype)
+        lat = jax.lax.dynamic_update_slice(cache.k, lat_new, (z, pos, z))
+        c_all = lat[..., :m.kv_lora_rank]               # [B,S,r]
+        kr_all = lat[..., m.kv_lora_rank:]              # [B,S,dr] (roped)
+
+        wkv_b = p[f"{pre}.wkv_b"].astype(x.dtype)       # [r,H,dn+dv]
+        wk = wkv_b[..., :m.nope_head_dim]               # [r,H,dn]
+        wv = wkv_b[..., m.nope_head_dim:]               # [r,H,dv]
+
+        # absorb: q_lat[b,h,r] = sum_dn q_nope * wk
+        q_lat = jnp.einsum("bxhn,rhn->bxhr", q_nope, wk)[:, 0]   # [B,H,r]
+        sc = (jnp.einsum("bhr,bsr->bhs", q_lat, c_all) +
+              jnp.einsum("bxhn,bsn->bhs", q_rope, kr_all)).astype(jnp.float32)
+        sc *= (m.nope_head_dim + m.rope_head_dim) ** -0.5
+        s_max = lat.shape[1]
+        valid = (jnp.arange(s_max, dtype=jnp.int32) <= pos)[None, None, :]
+        sc = jnp.where(valid, sc, -1e30)
+        w = jax.nn.softmax(sc, -1).astype(x.dtype)               # [B,H,S]
+        ctx_lat = jnp.einsum("bhs,bsr->bhr", w, c_all)           # [B,H,r]
+        out = jnp.einsum("bhr,rhv->bhv", ctx_lat, wv)            # [B,H,dv]
+        y = jnp.einsum("bhv,hvd->bd", out, p[f"{pre}.wo"].astype(x.dtype))
+        return y[:, None], KVCache(lat, None, pos + 1)
+
+
+def k_rope_raw_cache(c, k_rope):
+    return None  # placeholder: prefill re-derives the roped key part

@@ -1,0 +1,277 @@
+"""Layer blocks and the ScanStack mechanism.
+
+Every architecture is assembled from *blocks* (attention+FFN, MoE, Mamba2,
+mLSTM/sLSTM, cross-attention) grouped into *ScanStacks*: n structurally
+identical layers whose parameters are stacked on a leading axis and applied
+with ``jax.lax.scan``.  Heterogeneous patterns (gemma3 5:1 local:global,
+zamba2 shared-attention every 6 Mamba layers, vlm cross-attention every 5,
+xLSTM alternating m/sLSTM) become *unit blocks* — a unit contains its own
+inner stacks — and the unit itself is scan-stacked.  This keeps the HLO one
+block-body per group regardless of depth (compile times stay sane at 60+
+layers under 512-way SPMD) and is also what makes remat-per-block cheap.
+
+Blocks declare parameters with *relative* names into a private collector;
+ScanStack re-declares them stacked into the parent collector.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import GQAttention, KVCache, MLAttention
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamCollector, activation_fn, normal_init,
+                                 rms_norm, zeros_init)
+from repro.models.moe import MoEBlock
+from repro.models.ssm import Mamba2Block, SSMState
+from repro.models.xlstm import MLSTMBlock, SLSTMBlock
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+class MLP:
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str,
+                 d_ff: Optional[int] = None) -> None:
+        self.cfg = cfg
+        self.prefix = prefix
+        d = cfg.d_model
+        ff = d_ff or cfg.d_ff
+        dt = jnp.dtype(cfg.param_dtype)
+        init = normal_init(d ** -0.5)
+        if cfg.gated_mlp:
+            pc.declare(f"{prefix}.w_gate", (d, ff), dt, ("embed", "ff"), init)
+        pc.declare(f"{prefix}.w_up", (d, ff), dt, ("embed", "ff"), init)
+        pc.declare(f"{prefix}.w_down", (ff, d), dt, ("ff", "embed"),
+                   normal_init(ff ** -0.5))
+
+    def __call__(self, p, x):
+        cfg, pre = self.cfg, self.prefix
+        act = activation_fn(cfg.activation)
+        u = x @ p[f"{pre}.w_up"].astype(x.dtype)
+        if cfg.gated_mlp:
+            g = act(x @ p[f"{pre}.w_gate"].astype(x.dtype))
+            h = g * u
+        else:
+            h = act(u)
+        return h @ p[f"{pre}.w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# standard pre-norm transformer block (attention + MLP/MoE)
+# ---------------------------------------------------------------------------
+
+class TransformerBlock:
+    """Pre-norm block.  Variants: GQA/MLA attention, window, MoE FFN."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str = "b",
+                 *, window: int = 0, use_moe: bool = False,
+                 cross: bool = False) -> None:
+        self.cfg = cfg
+        self.prefix = prefix
+        self.window = window
+        self.cross = cross
+        dt = jnp.dtype(cfg.param_dtype)
+        pc.declare(f"{prefix}.ln1", (cfg.d_model,), dt, ("embed",), zeros_init())
+        pc.declare(f"{prefix}.ln2", (cfg.d_model,), dt, ("embed",), zeros_init())
+        if cfg.mla is not None and not cross:
+            self.attn: Any = MLAttention(cfg, pc, f"{prefix}.attn")
+        else:
+            kv_dim = cfg.vlm.vision_dim if (cross and cfg.vlm) else None
+            self.attn = GQAttention(cfg, pc, f"{prefix}.attn", cross=cross,
+                                    kv_dim=kv_dim)
+        if use_moe:
+            self.ffn: Any = MoEBlock(cfg, pc, f"{prefix}.moe")
+        else:
+            self.ffn = MLP(cfg, pc, f"{prefix}.mlp")
+
+    def _ffn(self, p, h):
+        return self.ffn(p, h)
+
+    def forward(self, p, x, positions, *, kv_src=None, **kw):
+        cfg, pre = self.cfg, self.prefix
+        h = rms_norm(x, p[f"{pre}.ln1"], cfg.norm_eps)
+        a = self.attn.forward(p, h, positions, window=self.window,
+                              kv_src=kv_src)
+        x = x + a
+        h = rms_norm(x, p[f"{pre}.ln2"], cfg.norm_eps)
+        return x + self._ffn(p, h)
+
+    def init_cache(self, batch: int, s_max: int) -> KVCache:
+        return self.attn.init_cache(batch, s_max)
+
+    def prefill(self, p, x, positions, cache: KVCache, **kw):
+        cfg, pre = self.cfg, self.prefix
+        h = rms_norm(x, p[f"{pre}.ln1"], cfg.norm_eps)
+        a, cache = self.attn.prefill(p, h, positions, cache, window=self.window)
+        x = x + a
+        h = rms_norm(x, p[f"{pre}.ln2"], cfg.norm_eps)
+        return x + self._ffn(p, h), cache
+
+    def decode(self, p, x, cache: KVCache, **kw):
+        cfg, pre = self.cfg, self.prefix
+        h = rms_norm(x, p[f"{pre}.ln1"], cfg.norm_eps)
+        a, cache = self.attn.decode(p, h, cache, window=self.window)
+        x = x + a
+        h = rms_norm(x, p[f"{pre}.ln2"], cfg.norm_eps)
+        return x + self._ffn(p, h), cache
+
+
+class Mamba2Layer:
+    """Pre-norm Mamba2 block (the zamba2 backbone layer)."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str = "m"):
+        self.cfg = cfg
+        self.prefix = prefix
+        dt = jnp.dtype(cfg.param_dtype)
+        pc.declare(f"{prefix}.ln", (cfg.d_model,), dt, ("embed",), zeros_init())
+        self.ssm = Mamba2Block(cfg, pc, f"{prefix}.ssm")
+
+    def forward(self, p, x, positions=None, **kw):
+        h = rms_norm(x, p[f"{self.prefix}.ln"], self.cfg.norm_eps)
+        return x + self.ssm.forward(p, h)
+
+    def init_cache(self, batch: int, s_max: int) -> SSMState:
+        return self.ssm.init_state(batch)
+
+    def prefill(self, p, x, positions, cache: SSMState, **kw):
+        h = rms_norm(x, p[f"{self.prefix}.ln"], self.cfg.norm_eps)
+        y, state = self.ssm.forward(p, h, return_state=True)
+        return x + y, state
+
+    def decode(self, p, x, cache: SSMState, **kw):
+        h = rms_norm(x, p[f"{self.prefix}.ln"], self.cfg.norm_eps)
+        y, state = self.ssm.decode(p, h, cache)
+        return x + y, state
+
+
+class XLSTMLayer:
+    """Pre-norm wrapper around an mLSTM or sLSTM block."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str,
+                 kind: str) -> None:
+        self.cfg = cfg
+        self.prefix = prefix
+        self.kind = kind
+        dt = jnp.dtype(cfg.param_dtype)
+        pc.declare(f"{prefix}.ln", (cfg.d_model,), dt, ("embed",), zeros_init())
+        self.cell = (MLSTMBlock if kind == "m" else SLSTMBlock)(
+            cfg, pc, f"{prefix}.cell")
+
+    def forward(self, p, x, positions=None, **kw):
+        h = rms_norm(x, p[f"{self.prefix}.ln"], self.cfg.norm_eps)
+        return x + self.cell.forward(p, h)
+
+    def init_cache(self, batch: int, s_max: int):
+        return self.cell.init_state(batch)
+
+    def prefill(self, p, x, positions, cache, **kw):
+        # recurrent families prefill by running forward then re-deriving the
+        # state with a decode pass over the last token only is NOT exact; we
+        # run the scan-based exact path: forward with state return.
+        h = rms_norm(x, p[f"{self.prefix}.ln"], self.cfg.norm_eps)
+        if self.kind == "m":
+            y, state = self.cell.forward(p, h, return_state=True)
+            return x + y, state
+        else:
+            xg = h[:, :].astype(jnp.float32) @ p[f"{self.prefix}.cell.wx"]
+
+            def step(state, xt):
+                hh, state = self.cell._cell(p, xt, state)
+                return state, hh
+            state, hs = jax.lax.scan(step, self.cell.init_state(x.shape[0]),
+                                     xg.transpose(1, 0, 2))
+            hseq = hs.transpose(1, 0, 2).astype(x.dtype)
+            hseq = rms_norm(hseq, p[f"{self.prefix}.cell.norm"], self.cfg.norm_eps)
+            u, g = jnp.split(hseq @ p[f"{self.prefix}.cell.up"].astype(x.dtype), 2, -1)
+            out = (jax.nn.gelu(u) * g) @ p[f"{self.prefix}.cell.down"].astype(x.dtype)
+            return x + out, state
+
+    def decode(self, p, x, cache, **kw):
+        h = rms_norm(x, p[f"{self.prefix}.ln"], self.cfg.norm_eps)
+        y, state = self.cell.decode(p, h, cache)
+        return x + y, state
+
+
+# ---------------------------------------------------------------------------
+# ScanStack
+# ---------------------------------------------------------------------------
+
+class ScanStack:
+    """n structurally identical blocks, parameters stacked, applied via scan.
+
+    ``make_block(pc) -> block`` builds one layer against a private collector;
+    the stack re-declares every param with a leading (n,) axis named
+    'layers'.  ``forward/prefill/decode`` run lax.scan over the stack, with
+    optional per-layer remat.
+    """
+
+    def __init__(self, pc: ParamCollector, prefix: str, n: int,
+                 make_block: Callable[[ParamCollector], Any],
+                 *, remat: bool = True) -> None:
+        self.prefix = prefix
+        self.n = n
+        self.remat = remat
+        inner = ParamCollector()
+        self.block = make_block(inner)
+        self.rel_names = sorted(inner.inits)
+        for rel in self.rel_names:
+            fn, shape, dtype = inner.inits[rel]
+            axes = inner.axes[rel]
+
+            def stacked_init(key, s, d, fn=fn, base_shape=shape):
+                keys = jax.random.split(key, s[0])
+                return jax.vmap(lambda k: fn(k, base_shape, d))(keys)
+
+            pc.declare(f"{prefix}.{rel}", (n,) + shape, dtype,
+                       ("layers",) + axes, stacked_init)
+
+    def sub(self, p: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        """Extract this stack's stacked params as a relative dict."""
+        pre = self.prefix + "."
+        return {k[len(pre):]: v for k, v in p.items() if k.startswith(pre)}
+
+    def _wrap(self, fn):
+        return jax.checkpoint(fn) if self.remat else fn
+
+    def forward(self, p, x, positions, **kw):
+        sub = self.sub(p)
+
+        def body(carry, layer_p):
+            fn = self._wrap(lambda c, lp: self.block.forward(lp, c, positions, **kw))
+            return fn(carry, layer_p), None
+
+        out, _ = jax.lax.scan(body, x, sub)
+        return out
+
+    def init_cache(self, batch: int, s_max: int):
+        one = self.block.init_cache(batch, s_max)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (self.n,) + a.shape).copy()
+                            if hasattr(a, "shape") else a, one)
+
+    def prefill(self, p, x, positions, cache, **kw):
+        sub = self.sub(p)
+
+        def body(carry, xs):
+            layer_p, layer_cache = xs
+            out, new_cache = self.block.prefill(layer_p, carry, positions,
+                                                layer_cache, **kw)
+            return out, new_cache
+
+        out, new_cache = jax.lax.scan(body, x, (sub, cache))
+        return out, new_cache
+
+    def decode(self, p, x, cache, **kw):
+        sub = self.sub(p)
+
+        def body(carry, xs):
+            layer_p, layer_cache = xs
+            out, new_cache = self.block.decode(layer_p, carry, layer_cache, **kw)
+            return out, new_cache
+
+        out, new_cache = jax.lax.scan(body, x, (sub, cache))
+        return out, new_cache

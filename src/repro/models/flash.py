@@ -1,0 +1,101 @@
+"""Online-softmax (flash-style) chunked attention in pure JAX.
+
+XLA materializes softmax(QK^T) — at 32k context that is a [B, H, S, S]
+tensor measured in terabytes, so every long-sequence path routes through
+this chunked formulation instead: an outer scan over query blocks and an
+inner scan over key blocks carrying the running (row-max, denominator,
+accumulator).  Memory per step is O(Qc * Kc) regardless of S, which is what
+lets the prefill_32k / train_4k cells actually FIT in the dry-run memory
+analysis.  (A Pallas flash kernel is the logical next step and is listed as
+a §Perf hillclimb candidate; the scan formulation already bounds memory and
+lets XLA pipeline the blocks.)
+
+Supports: GQA grouping, causal and sliding-window masks, logit softcap,
+bidirectional (encoder) attention.  Blocks that a causal mask fully kills
+are still computed (dense scan) — the block-skip optimization is measured
+in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def online_attention(
+    q: jax.Array,            # [B, Sq, KV, G, hd]
+    k: jax.Array,            # [B, Sk, KV, hd]
+    v: jax.Array,            # [B, Sk, KV, hd]
+    *,
+    causal: bool,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,       # position of q[0] within the key timeline
+    chunk_q: int = 1024,
+    chunk_k: int = 1024,
+) -> jax.Array:
+    B, Sq, KV, G, hd = q.shape
+    dv = v.shape[-1]                 # v head dim may differ (MLA)
+    Sk = k.shape[1]
+    Qc = min(chunk_q, Sq)
+    Kc = min(chunk_k, Sk)
+    assert Sq % Qc == 0 and Sk % Kc == 0, (Sq, Qc, Sk, Kc)
+    nq, nk = Sq // Qc, Sk // Kc
+    scale = hd ** -0.5
+
+    qs = q.reshape(B, nq, Qc, KV, G, hd)
+    ks = k.reshape(B, nk, Kc, KV, hd)
+    vs = v.reshape(B, nk, Kc, KV, dv)
+
+    def q_block(carry, qi):
+        qb = qs[:, qi]                                    # [B,Qc,KV,G,hd]
+        qpos = q_offset + qi * Qc + jnp.arange(Qc)
+
+        def k_block(state, ki):
+            m, l, acc = state
+            kb = ks[:, ki]
+            vb = vs[:, ki]
+            kpos = ki * Kc + jnp.arange(Kc)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qb, kb).astype(jnp.float32)
+            s = s * scale
+            if softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = jnp.ones((Qc, Kc), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(qb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, Qc), NEG, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, Qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, Qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_block, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # [B,KV,G,Qc,hd] -> [B,Qc,KV,G,hd]
+        return carry, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))
+    # blocks: [nq, B, Qc, KV, G, dv]
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, dv)
+    return out
+
+
+DENSE_LIMIT = 1 << 22   # Sq*Sk above this routes to the online path
+
+
+def should_chunk(sq: int, sk: int) -> bool:
+    return sq * sk > DENSE_LIMIT and sq > 1

@@ -1,0 +1,145 @@
+"""Primitive layers: norms, projections, embeddings, rotary, activations.
+
+Parameters are plain pytrees (nested dicts of jax.Arrays).  Every parameter
+leaf is created through :func:`param` which attaches a *logical axis* tuple
+via the parallel "specs" tree — the distribution layer
+(repro/dist/sharding.py) turns logical axes into mesh PartitionSpecs, so
+models never mention mesh axes directly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], jnp.dtype], jax.Array]
+
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return init
+
+
+def zeros_init() -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.zeros(shape, dtype)
+    return init
+
+
+def ones_init() -> Initializer:
+    def init(key, shape, dtype):
+        return jnp.ones(shape, dtype)
+    return init
+
+
+class ParamCollector:
+    """Collects (init_fn, logical_axes) while a model definition runs.
+
+    ``init(rng)`` materializes the parameter pytree; ``abstract()`` gives
+    ShapeDtypeStructs (used by the dry-run: no allocation); ``specs()``
+    gives the logical-axes pytree.
+    """
+
+    def __init__(self) -> None:
+        self.inits: Dict[str, Tuple[Callable, Tuple[int, ...], jnp.dtype]] = {}
+        self.axes: Dict[str, Tuple[Optional[str], ...]] = {}
+
+    def declare(self, name: str, shape: Tuple[int, ...], dtype,
+                axes: Tuple[Optional[str], ...], init: Initializer) -> str:
+        if name in self.inits:
+            raise ValueError(f"duplicate param {name}")
+        assert len(axes) == len(shape), (name, shape, axes)
+        self.inits[name] = (init, tuple(shape), dtype)
+        self.axes[name] = tuple(axes)
+        return name
+
+    def init(self, key: jax.Array) -> Dict[str, jax.Array]:
+        names = sorted(self.inits)
+        keys = jax.random.split(key, max(len(names), 1))
+        out = {}
+        for k, name in zip(keys, names):
+            fn, shape, dtype = self.inits[name]
+            out[name] = fn(k, shape, dtype)
+        return out
+
+    def abstract(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        return {n: jax.ShapeDtypeStruct(s, d)
+                for n, (_, s, d) in self.inits.items()}
+
+    def specs(self) -> Dict[str, Tuple[Optional[str], ...]]:
+        return dict(self.axes)
+
+
+# ---------------------------------------------------------------------------
+# functional layer ops (params passed explicitly)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def activation_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":       # squared ReLU (nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean CE over valid positions; logits in f32 for stability."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

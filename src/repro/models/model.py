@@ -1,0 +1,353 @@
+"""The LM: assembles blocks per architecture family and exposes the four
+entry points the rest of the framework consumes:
+
+* ``init(rng)`` / ``abstract_params()``   (the latter: dry-run, no alloc)
+* ``forward(params, batch)``              -> logits          (train path)
+* ``loss(params, batch)``                 -> scalar
+* ``prefill(params, batch)``              -> (logits, caches)
+* ``decode_step(params, tokens, caches)`` -> (logits, caches)
+
+Families map to segment lists (see blocks.ScanStack for why):
+
+  dense/moe/audio : [stack(block) x L]            (+ leading dense layers)
+  gemma3          : [unit(5 local + 1 global) x U, local x tail]
+  vlm             : [unit(4 self + 1 cross) x U, self x tail]
+  hybrid (zamba2) : [unit(shared-attn + mamba x k) x U, mamba x tail]
+  ssm (xlstm)     : [unit(mLSTM + sLSTM) x U, mLSTM x tail]
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache
+from repro.models.blocks import (MLP, Mamba2Layer, ScanStack,
+                                 TransformerBlock, XLSTMLayer)
+from repro.models.config import ModelConfig
+from repro.dist.act_sharding import constrain
+from repro.models.layers import (ParamCollector, cross_entropy, normal_init,
+                                 rms_norm, zeros_init)
+
+
+# ---------------------------------------------------------------------------
+# unit blocks (heterogeneous repeating patterns)
+# ---------------------------------------------------------------------------
+
+class GemmaUnit:
+    """k sliding-window layers followed by one global-attention layer."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, k: int,
+                 use_moe: bool = False) -> None:
+        self.local = ScanStack(pc, "loc", k, lambda c: TransformerBlock(
+            cfg, c, "b", window=cfg.sliding_window, use_moe=use_moe),
+            remat=cfg.remat != "none")
+        inner = ParamCollector()
+        self.glob = TransformerBlock(cfg, inner, "g", window=0, use_moe=use_moe)
+        for rel in sorted(inner.inits):
+            fn, shape, dtype = inner.inits[rel]
+            pc.declare(rel, shape, dtype, inner.axes[rel], fn)
+
+    def forward(self, p, x, positions, **kw):
+        x = self.local.forward(p, x, positions)
+        return self.glob.forward(p, x, positions)
+
+    def init_cache(self, batch, s_max):
+        return (self.local.init_cache(batch, s_max),
+                self.glob.init_cache(batch, s_max))
+
+    def prefill(self, p, x, positions, cache):
+        lc, gc = cache
+        x, lc = self.local.prefill(p, x, positions, lc)
+        x, gc = self.glob.prefill(p, x, positions, gc)
+        return x, (lc, gc)
+
+    def decode(self, p, x, cache):
+        lc, gc = cache
+        x, lc = self.local.decode(p, x, lc)
+        x, gc = self.glob.decode(p, x, gc)
+        return x, (lc, gc)
+
+
+class ZambaUnit:
+    """One shared attention block (params passed in, shared across units)
+    followed by k Mamba2 layers."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, k: int,
+                 shared_block: TransformerBlock) -> None:
+        self.shared = shared_block
+        self.mamba = ScanStack(pc, "mam", k, lambda c: Mamba2Layer(cfg, c, "m"),
+                               remat=cfg.remat != "none")
+
+    def forward(self, p, x, positions, *, shared_p=None, **kw):
+        x = self.shared.forward(shared_p, x, positions)
+        return self.mamba.forward(p, x, positions)
+
+    def init_cache(self, batch, s_max):
+        return (self.shared.init_cache(batch, s_max),
+                self.mamba.init_cache(batch, s_max))
+
+    def prefill(self, p, x, positions, cache, *, shared_p=None):
+        sc, mc = cache
+        x, sc = self.shared.prefill(shared_p, x, positions, sc)
+        x, mc = self.mamba.prefill(p, x, positions, mc)
+        return x, (sc, mc)
+
+    def decode(self, p, x, cache, *, shared_p=None):
+        sc, mc = cache
+        x, sc = self.shared.decode(shared_p, x, sc)
+        x, mc = self.mamba.decode(p, x, mc)
+        return x, (sc, mc)
+
+
+class XLSTMUnit:
+    """mLSTM block + sLSTM block (xLSTM[1:1]-style alternation)."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector) -> None:
+        self.m = XLSTMLayer(cfg, pc, "xm", "m")
+        self.s = XLSTMLayer(cfg, pc, "xs", "s")
+
+    def forward(self, p, x, positions, **kw):
+        x = self.m.forward(p, x, positions)
+        return self.s.forward(p, x, positions)
+
+    def init_cache(self, batch, s_max):
+        return (self.m.init_cache(batch, s_max), self.s.init_cache(batch, s_max))
+
+    def prefill(self, p, x, positions, cache):
+        mc, sc = cache
+        x, mc = self.m.prefill(p, x, positions, mc)
+        x, sc = self.s.prefill(p, x, positions, sc)
+        return x, (mc, sc)
+
+    def decode(self, p, x, cache):
+        mc, sc = cache
+        x, mc = self.m.decode(p, x, mc)
+        x, sc = self.s.decode(p, x, sc)
+        return x, (mc, sc)
+
+
+class VLMUnit:
+    """k self-attention layers + one image cross-attention layer."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, k: int) -> None:
+        self.selfs = ScanStack(pc, "sa", k, lambda c: TransformerBlock(cfg, c, "b"),
+                               remat=cfg.remat != "none")
+        inner = ParamCollector()
+        self.cross = TransformerBlock(cfg, inner, "x", cross=True)
+        for rel in sorted(inner.inits):
+            fn, shape, dtype = inner.inits[rel]
+            pc.declare(rel, shape, dtype, inner.axes[rel], fn)
+
+    def forward(self, p, x, positions, *, vision=None, **kw):
+        x = self.selfs.forward(p, x, positions)
+        return self.cross.forward(p, x, positions, kv_src=vision)
+
+    def init_cache(self, batch, s_max):
+        return self.selfs.init_cache(batch, s_max)
+
+    def prefill(self, p, x, positions, cache, *, vision=None):
+        x, cache = self.selfs.prefill(p, x, positions, cache)
+        x = self.cross.forward(p, x, positions, kv_src=vision)
+        return x, cache
+
+    def decode(self, p, x, cache, *, vision=None):
+        x, cache = self.selfs.decode(p, x, cache)
+        x = self.cross.forward(
+            p, x, jnp.zeros((x.shape[0], 1), jnp.int32), kv_src=vision)
+        return x, cache
+
+
+# ---------------------------------------------------------------------------
+# the LM
+# ---------------------------------------------------------------------------
+
+class LM:
+    def __init__(self, cfg: ModelConfig) -> None:
+        self.cfg = cfg
+        pc = ParamCollector()
+        self.pc = pc
+        d = cfg.d_model
+        dt = jnp.dtype(cfg.param_dtype)
+
+        # vocab padded to a multiple of 256 so the 'vocab' axis always
+        # divides the TP mesh axis (Megatron-style; padded logits are masked
+        # to -inf in _head so loss/sampling semantics are unchanged).
+        self.vocab_padded = -(-cfg.vocab // 256) * 256
+        if cfg.family == "audio":
+            pc.declare("frontend_proj", (512, d), dt, (None, "embed"),
+                       normal_init(512 ** -0.5))
+            pc.declare("head", (d, self.vocab_padded), dt, ("embed", "vocab"),
+                       normal_init(d ** -0.5))
+        else:
+            pc.declare("embed", (self.vocab_padded, d), dt, ("vocab", "embed"),
+                       normal_init(1.0))
+            if not cfg.tie_embeddings:
+                pc.declare("head", (d, self.vocab_padded), dt,
+                           ("embed", "vocab"), normal_init(d ** -0.5))
+        pc.declare("final_norm", (d,), dt, ("embed",), zeros_init())
+        if cfg.family == "vlm":
+            v = cfg.vlm.vision_dim
+            pc.declare("vision_norm", (v,), dt, (None,), zeros_init())
+
+        self.segments: List[Tuple[str, Any]] = []
+        self.shared_block: Optional[TransformerBlock] = None
+        self._build_segments(pc)
+
+    # -- assembly -------------------------------------------------------------
+    def _build_segments(self, pc: ParamCollector) -> None:
+        cfg = self.cfg
+        L = cfg.num_layers
+        moe_cfg = cfg.moe
+
+        def seg_stack(name, n, make):
+            if n > 0:
+                self.segments.append(
+                    ("stack", ScanStack(pc, name, n, make,
+                                        remat=cfg.remat != "none")))
+
+        if cfg.family in ("dense", "audio"):
+            if cfg.local_global_pattern:
+                k = cfg.local_global_pattern
+                units, tail = L // (k + 1), L % (k + 1)
+                seg_stack("units", units, lambda c: GemmaUnit(cfg, c, k))
+                seg_stack("tail", tail, lambda c: TransformerBlock(
+                    cfg, c, "b", window=cfg.sliding_window))
+            else:
+                seg_stack("blocks", L, lambda c: TransformerBlock(cfg, c, "b"))
+        elif cfg.family == "moe":
+            nd = moe_cfg.first_dense_layers
+            seg_stack("dense0", nd, lambda c: TransformerBlock(cfg, c, "b"))
+            seg_stack("moe", L - nd, lambda c: TransformerBlock(
+                cfg, c, "b", use_moe=True))
+        elif cfg.family == "vlm":
+            k = cfg.vlm.cross_attn_every - 1
+            units, tail = L // (k + 1), L % (k + 1)
+            seg_stack("units", units, lambda c: VLMUnit(cfg, c, k))
+            seg_stack("tail", tail, lambda c: TransformerBlock(cfg, c, "b"))
+        elif cfg.family == "hybrid":
+            k = cfg.ssm.attn_every
+            inner = ParamCollector()
+            self.shared_block = TransformerBlock(cfg, inner, "shared")
+            for rel in sorted(inner.inits):
+                fn, shape, dtype = inner.inits[rel]
+                pc.declare(f"shared.{rel}", shape, dtype, inner.axes[rel], fn)
+            units, tail = L // k, L % k
+            seg_stack("units", units,
+                      lambda c: ZambaUnit(cfg, c, k, self.shared_block))
+            seg_stack("tail", tail, lambda c: Mamba2Layer(cfg, c, "m"))
+        elif cfg.family == "ssm":
+            units, tail = L // 2, L % 2
+            seg_stack("units", units, lambda c: XLSTMUnit(cfg, c))
+            seg_stack("tail", tail, lambda c: XLSTMLayer(cfg, c, "xm", "m"))
+        else:
+            raise ValueError(cfg.family)
+
+    # -- params ----------------------------------------------------------------
+    def init(self, key: jax.Array) -> Dict[str, jax.Array]:
+        return self.pc.init(key)
+
+    def abstract_params(self) -> Dict[str, jax.ShapeDtypeStruct]:
+        return self.pc.abstract()
+
+    def logical_axes(self) -> Dict[str, Tuple[Optional[str], ...]]:
+        return self.pc.specs()
+
+    # -- shared plumbing ---------------------------------------------------------
+    def _embed(self, p, batch) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        if cfg.family == "audio":
+            x = batch["frames"].astype(cdt) @ p["frontend_proj"].astype(cdt)
+        else:
+            x = p["embed"].astype(cdt)[batch["tokens"]]
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        return x, positions
+
+    def _seg_kw(self, p, batch) -> Dict[str, Any]:
+        cfg = self.cfg
+        kw: Dict[str, Any] = {}
+        if cfg.family == "hybrid":
+            pre = "shared."
+            kw["shared_p"] = {k[len(pre):]: v for k, v in p.items()
+                              if k.startswith(pre)}
+        if cfg.family == "vlm":
+            v = batch["vision"].astype(jnp.dtype(cfg.compute_dtype))
+            v = rms_norm(v, p["vision_norm"], cfg.norm_eps)
+            kw["vision"] = v
+        return kw
+
+    def _head(self, p, x) -> jax.Array:
+        cfg = self.cfg
+        x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+        w = p["embed"].T if (cfg.tie_embeddings and cfg.family != "audio") \
+            else p["head"]
+        logits = (x @ w.astype(x.dtype)).astype(jnp.dtype(cfg.logits_dtype))
+        if self.vocab_padded != cfg.vocab:
+            pad_mask = jnp.arange(self.vocab_padded) < cfg.vocab
+            logits = jnp.where(pad_mask, logits, -1e30)
+        return logits
+
+    # -- entry points -------------------------------------------------------------
+    def forward(self, p, batch) -> jax.Array:
+        x, positions = self._embed(p, batch)
+        x = constrain(x)
+        kw = self._seg_kw(p, batch)
+        for _, seg in self.segments:
+            x = constrain(seg.forward(p, x, positions, **kw))
+        return self._head(p, x)
+
+    def loss(self, p, batch) -> jax.Array:
+        logits = self.forward(p, batch)
+        mask = batch.get("mask")
+        return cross_entropy(logits, batch["labels"], mask)
+
+    # -- serving -----------------------------------------------------------------
+    def init_caches(self, batch: int, s_max: int):
+        return [seg.init_cache(batch, s_max) for _, seg in self.segments]
+
+    def prefill(self, p, batch, s_max: int):
+        x, positions = self._embed(p, batch)
+        x = constrain(x)
+        kw = self._seg_kw(p, batch)
+        caches = self.init_caches(x.shape[0], s_max)
+        new_caches = []
+        for (_, seg), cache in zip(self.segments, caches):
+            x, c = seg.prefill(p, x, positions, cache, **kw)
+            x = constrain(x)
+            new_caches.append(c)
+        return self._head(p, x[:, -1:]), new_caches
+
+    def decode_step(self, p, tokens, caches, *, vision=None):
+        """tokens: [B, 1] -> (logits [B, 1, V], new caches).
+
+        ``vision``: pre-normed image context for the vlm family (threaded by
+        serve/engine.py; cross-attention K/V could also be cached — a noted
+        serving optimization)."""
+        cfg = self.cfg
+        cdt = jnp.dtype(cfg.compute_dtype)
+        x = p["embed"].astype(cdt)[tokens] * jnp.asarray(cfg.d_model ** 0.5, cdt)
+        kw = self._seg_kw_decode(p, vision)
+        new_caches = []
+        for (_, seg), cache in zip(self.segments, caches):
+            x, c = seg.decode(p, x, cache, **kw)
+            new_caches.append(c)
+        return self._head(p, x), new_caches
+
+    def _seg_kw_decode(self, p, vision=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        kw: Dict[str, Any] = {}
+        if cfg.family == "hybrid":
+            pre = "shared."
+            kw["shared_p"] = {k[len(pre):]: v for k, v in p.items()
+                              if k.startswith(pre)}
+        if cfg.family == "vlm":
+            if vision is None:
+                raise ValueError("vlm decode requires the vision context")
+            v = vision.astype(jnp.dtype(cfg.compute_dtype))
+            kw["vision"] = rms_norm(v, p["vision_norm"], cfg.norm_eps)
+        return kw

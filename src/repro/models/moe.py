@@ -1,0 +1,113 @@
+"""Mixture-of-Experts block: top-k routing, shared experts, capacity-based
+dispatch (GShard-style), expert parallelism over the 'model' mesh axis.
+
+Dispatch is the sort-free masked-scatter formulation: every (token, k) slot
+computes its rank among slots routed to the same expert; slots with rank <
+capacity scatter into per-expert buffers [E, C, d].  Two batched einsums run
+all expert FFNs (expert dim sharded over 'model' = EP; capacity dim sharded
+over 'data' so the buffers scale with the mesh), and a scatter-add combines
+weighted expert outputs back to tokens.
+
+The paper-faithful baseline lets GSPMD place the collectives for the
+token->expert reshuffle; the §Perf hillclimb replaces this with an explicit
+shard_map all-to-all schedule (see EXPERIMENTS.md).
+
+Capacity drops (rank >= C) follow GShard/Switch; the roofline accounting in
+launch/roofline.py uses capacity-based active FLOPs accordingly.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamCollector, activation_fn, normal_init
+
+ShardFn = Callable[[jax.Array, tuple], jax.Array]
+
+
+def _noshard(x, names):
+    return x
+
+
+class MoEBlock:
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str) -> None:
+        assert cfg.moe is not None
+        self.cfg = cfg
+        self.prefix = prefix
+        m = cfg.moe
+        d = cfg.d_model
+        dt = jnp.dtype(cfg.param_dtype)
+        init = normal_init(d ** -0.5)
+        pc.declare(f"{prefix}.router", (d, m.num_experts), jnp.float32,
+                   ("embed", "experts"), init)
+        pc.declare(f"{prefix}.w_gate", (m.num_experts, d, m.d_ff_expert), dt,
+                   ("experts", "embed", "moe_ff"), init)
+        pc.declare(f"{prefix}.w_up", (m.num_experts, d, m.d_ff_expert), dt,
+                   ("experts", "embed", "moe_ff"), init)
+        pc.declare(f"{prefix}.w_down", (m.num_experts, m.d_ff_expert, d), dt,
+                   ("experts", "moe_ff", "embed"), normal_init(m.d_ff_expert ** -0.5))
+        if m.shared_experts:
+            ff = m.d_ff_expert * m.shared_experts
+            pc.declare(f"{prefix}.sh_gate", (d, ff), dt, ("embed", "ff"), init)
+            pc.declare(f"{prefix}.sh_up", (d, ff), dt, ("embed", "ff"), init)
+            pc.declare(f"{prefix}.sh_down", (ff, d), dt, ("ff", "embed"),
+                       normal_init(ff ** -0.5))
+
+    def __call__(self, p, x: jax.Array, *, shard: ShardFn = _noshard) -> jax.Array:
+        cfg, m, pre = self.cfg, self.cfg.moe, self.prefix
+        B, S, d = x.shape
+        n_tok = B * S
+        k = m.experts_per_token
+        E = m.num_experts
+        act = activation_fn(cfg.activation)
+
+        xt = x.reshape(n_tok, d)
+        # --- routing (f32 for stable softmax) -------------------------------
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                            p[f"{pre}.router"])
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, k)               # [T, k]
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        # --- capacity-based dispatch ----------------------------------------
+        cap = int(math.ceil(n_tok * k / E * m.capacity_factor))
+        cap = max(cap, 1)
+        slot_e = top_e.reshape(-1)                            # [T*k]
+        slot_w = top_w.reshape(-1).astype(x.dtype)
+        slot_t = jnp.repeat(jnp.arange(n_tok, dtype=jnp.int32), k)
+        # rank of each slot within its expert (cumulative count formulation)
+        onehot = jax.nn.one_hot(slot_e, E, dtype=jnp.int32)   # [T*k, E]
+        rank = (jnp.cumsum(onehot, axis=0) - onehot)          # exclusive
+        rank = jnp.take_along_axis(rank, slot_e[:, None], axis=1)[:, 0]
+        keep = rank < cap
+        buf_idx = jnp.where(keep, slot_e * cap + rank, E * cap)  # drop slot
+
+        buf = jnp.zeros((E * cap + 1, d), x.dtype)
+        buf = buf.at[buf_idx].add(xt[slot_t])
+        buf = buf[:-1].reshape(E, cap, d)
+        buf = shard(buf, ("experts", "expert_cap", None))
+
+        # --- expert FFNs (EP: expert dim sharded over 'model') --------------
+        g = act(jnp.einsum("ecd,edf->ecf", buf, p[f"{pre}.w_gate"].astype(x.dtype)))
+        u = jnp.einsum("ecd,edf->ecf", buf, p[f"{pre}.w_up"].astype(x.dtype))
+        h = jnp.einsum("ecf,efd->ecd", g * u, p[f"{pre}.w_down"].astype(x.dtype))
+        h = shard(h, ("experts", "expert_cap", None))
+
+        # --- combine ---------------------------------------------------------
+        hflat = h.reshape(E * cap, d)
+        slot_out = hflat[jnp.minimum(buf_idx, E * cap - 1)] * keep[:, None]
+        y = jnp.zeros((n_tok, d), x.dtype)
+        y = y.at[slot_t].add(slot_out * slot_w[:, None])
+
+        # --- shared experts ---------------------------------------------------
+        if m.shared_experts:
+            sg = act(xt @ p[f"{pre}.sh_gate"].astype(x.dtype))
+            su = xt @ p[f"{pre}.sh_up"].astype(x.dtype)
+            y = y + (sg * su) @ p[f"{pre}.sh_down"].astype(x.dtype)
+
+        return y.reshape(B, S, d)

@@ -1,0 +1,170 @@
+"""Mamba2 (SSD) block — the state-space half of the zamba2 hybrid.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk attention-like
+matmuls + inter-chunk state recurrence over S/Q steps), which keeps all the
+heavy work in MXU-shaped einsums.  Decode keeps the O(1) recurrent state
+[B, H, N, P] — this is what makes the long_500k shape runnable for the
+hybrid/SSM architectures while pure-attention archs skip it (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamCollector, normal_init, ones_init,
+                                 rms_norm, zeros_init)
+
+
+class SSMState(NamedTuple):
+    s: jax.Array        # [B, H, N, P] state
+    conv: jax.Array     # [B, W-1, conv_dim] rolling conv inputs
+
+
+class Mamba2Block:
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str) -> None:
+        assert cfg.ssm is not None
+        self.cfg = cfg
+        self.prefix = prefix
+        s = cfg.ssm
+        d = cfg.d_model
+        inner = s.expand * d
+        self.inner = inner
+        self.heads = s.num_heads or inner // s.head_dim
+        self.P = inner // self.heads
+        self.N = s.state_dim
+        self.conv_dim = inner + 2 * self.N  # x + B + C share the conv
+        dt = jnp.dtype(cfg.param_dtype)
+        init = normal_init(d ** -0.5)
+        pc.declare(f"{prefix}.in_proj",
+                   (d, 2 * inner + 2 * self.N + self.heads), dt,
+                   ("embed", "ff"), init)
+        pc.declare(f"{prefix}.conv_w", (s.conv_width, self.conv_dim), dt,
+                   (None, "ff"), normal_init(s.conv_width ** -0.5))
+        pc.declare(f"{prefix}.A_log", (self.heads,), jnp.float32, (None,),
+                   zeros_init())
+        pc.declare(f"{prefix}.D", (self.heads,), jnp.float32, (None,), ones_init())
+        pc.declare(f"{prefix}.dt_bias", (self.heads,), jnp.float32, (None,),
+                   zeros_init())
+        pc.declare(f"{prefix}.norm", (inner,), dt, ("ff",), zeros_init())
+        pc.declare(f"{prefix}.out_proj", (inner, d), dt, ("ff", "embed"),
+                   normal_init(inner ** -0.5))
+
+    # -- shared pieces -------------------------------------------------------
+    def _project(self, p, x):
+        pre = self.prefix
+        proj = x @ p[f"{pre}.in_proj"].astype(x.dtype)
+        z, xbc, dt_raw = jnp.split(
+            proj, [self.inner, self.inner + self.conv_dim], axis=-1)
+        return z, xbc, dt_raw
+
+    def _split_xbc(self, xbc):
+        return jnp.split(xbc, [self.inner, self.inner + self.N], axis=-1)
+
+    def _gates(self, p, dt_raw):
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                             p[f"{self.prefix}.dt_bias"])
+        A = -jnp.exp(p[f"{self.prefix}.A_log"])          # [H] negative
+        return dt, A
+
+    def _out(self, p, y, z):
+        y = rms_norm(y * jax.nn.silu(z), p[f"{self.prefix}.norm"],
+                     self.cfg.norm_eps)
+        return y @ p[f"{self.prefix}.out_proj"].astype(y.dtype)
+
+    # -- training / prefill: chunked SSD -------------------------------------
+    def forward(self, p, x, *, return_state: bool = False):
+        cfg, s = self.cfg, self.cfg.ssm
+        B, S, d = x.shape
+        H, P, N, Q = self.heads, self.P, self.N, min(s.chunk, S)
+        assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+        z, xbc, dt_raw = self._project(p, x)
+
+        # causal depthwise conv over (x, B, C)
+        w = p[f"{self.prefix}.conv_w"].astype(x.dtype)
+        pad = jnp.zeros((B, s.conv_width - 1, self.conv_dim), x.dtype)
+        xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+        conv = sum(xbc_pad[:, i:i + S] * w[i] for i in range(s.conv_width))
+        conv = jax.nn.silu(conv)
+        xs, Bm, Cm = self._split_xbc(conv)
+
+        dt, A = self._gates(p, dt_raw)                    # [B,S,H], [H]
+        xh = xs.reshape(B, S, H, P)
+        xbar = xh * dt[..., None].astype(x.dtype)         # dt-scaled input
+        loga = dt * A                                     # [B,S,H] log decay
+
+        nc = S // Q
+        xbar = xbar.reshape(B, nc, Q, H, P)
+        Bc = Bm.reshape(B, nc, Q, N)
+        Cc = Cm.reshape(B, nc, Q, N)
+        la = loga.reshape(B, nc, Q, H)
+        g = jnp.cumsum(la, axis=2)                        # [B,nc,Q,H]
+
+        # intra-chunk (attention-like, strictly causal within chunk)
+        rel = g[:, :, :, None, :] - g[:, :, None, :, :]   # [B,nc,Q,Q,H]
+        iq = jnp.arange(Q)
+        causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+        L = jnp.where(causal, jnp.exp(rel), 0.0).astype(x.dtype)
+        cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)        # [B,nc,Q,Q]
+        y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, L, xbar)
+
+        # chunk summary states  [B,nc,H,N,P]
+        decay_tail = jnp.exp(g[:, :, -1:, :] - g)         # [B,nc,Q,H]
+        states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                            Bc, decay_tail.astype(x.dtype), xbar)
+
+        # inter-chunk recurrence (scan over nc)
+        chunk_decay = jnp.exp(g[:, :, -1, :])             # [B,nc,H]
+
+        def step(s_prev, inp):
+            st, dec = inp
+            s_new = s_prev * dec[..., None, None].astype(s_prev.dtype) + st
+            return s_new, s_prev
+
+        s0 = jnp.zeros((B, H, N, P), x.dtype)
+        s_last, s_prevs = jax.lax.scan(
+            step, s0, (states.transpose(1, 0, 2, 3, 4),
+                       chunk_decay.transpose(1, 0, 2)))
+        s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)        # [B,nc,H,N,P]
+
+        y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                             Cc, jnp.exp(g).astype(x.dtype), s_prevs)
+        y = (y_intra + y_inter).reshape(B, S, H, P)
+        y = y + xh * p[f"{self.prefix}.D"].astype(x.dtype)[None, None, :, None]
+        y = y.reshape(B, S, self.inner)
+        out = self._out(p, y, z)
+        if return_state:
+            tail = jnp.concatenate([pad, xbc], axis=1)[:, -(s.conv_width - 1):]
+            return out, SSMState(s_last, tail)
+        return out
+
+    # -- decode ---------------------------------------------------------------
+    def init_state(self, batch: int) -> SSMState:
+        dt = jnp.dtype(self.cfg.compute_dtype)
+        return SSMState(
+            jnp.zeros((batch, self.heads, self.N, self.P), dt),
+            jnp.zeros((batch, self.cfg.ssm.conv_width - 1, self.conv_dim), dt))
+
+    def decode(self, p, x, state: SSMState):
+        """x: [B, 1, d] -> ([B, 1, d], new state)."""
+        s_cfg = self.cfg.ssm
+        B = x.shape[0]
+        z, xbc, dt_raw = self._project(p, x)
+        window = jnp.concatenate([state.conv, xbc], axis=1)  # [B, W, conv_dim]
+        w = p[f"{self.prefix}.conv_w"].astype(x.dtype)
+        conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w))[:, None]
+        xs, Bm, Cm = self._split_xbc(conv)
+        dt, A = self._gates(p, dt_raw)                    # [B,1,H]
+        xh = xs.reshape(B, 1, self.heads, self.P)
+        a = jnp.exp(dt * A)[..., 0, :]                    # [B,H]
+        xbar = (xh * dt[..., None].astype(x.dtype))[:, 0]  # [B,H,P]
+        s_new = (state.s * a[..., None, None].astype(state.s.dtype)
+                 + jnp.einsum("bn,bhp->bhnp", Bm[:, 0], xbar))
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], s_new)
+        y = y + xh[:, 0] * p[f"{self.prefix}.D"].astype(x.dtype)[None, :, None]
+        y = y.reshape(B, 1, self.inner)
+        out = self._out(p, y, z)
+        return out, SSMState(s_new, window[:, 1:])

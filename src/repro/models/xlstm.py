@@ -1,0 +1,250 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel form) and sLSTM (scalar
+memory, recurrent scan), per Beck et al. 2024 (arXiv:2405.04517).
+
+mLSTM trains with the stabilized parallel formulation (attention-like
+[S, S] matmuls with log-sigmoid cumulative forget-gate decay) and decodes
+with the O(1) recurrent matrix state C [B, H, dk, dv].  sLSTM is inherently
+recurrent (its recurrent gate connections break the parallel form), so both
+train and decode run a lax.scan over time with per-head block-diagonal
+recurrence — faithful to the paper, and the reason xLSTM long-context decode
+is O(1) in sequence length (long_500k runs for this family).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (ParamCollector, normal_init, rms_norm,
+                                 zeros_init)
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # [B, H, dk, dv]
+    n: jax.Array   # [B, H, dk]
+    m: jax.Array   # [B, H]
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # [B, inner]
+    n: jax.Array   # [B, inner]
+    h: jax.Array   # [B, inner]
+    m: jax.Array   # [B, inner]
+
+
+class MLSTMBlock:
+    """Up-proj (pf=2) -> mLSTM cell -> gated skip -> down-proj."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str) -> None:
+        assert cfg.xlstm is not None
+        self.cfg = cfg
+        self.prefix = prefix
+        x = cfg.xlstm
+        d = cfg.d_model
+        inner = int(d * x.mlstm_proj_factor)
+        self.inner = inner
+        self.dk = x.mlstm_head_dim
+        self.heads = max(inner // self.dk, 1)
+        self.dv = inner // self.heads
+        dt = jnp.dtype(cfg.param_dtype)
+        init = normal_init(d ** -0.5)
+        pc.declare(f"{prefix}.up", (d, 2 * inner), dt, ("embed", "ff"), init)
+        pc.declare(f"{prefix}.wq", (inner, self.heads, self.dk), dt,
+                   ("ff", "heads", "head"), init)
+        pc.declare(f"{prefix}.wk", (inner, self.heads, self.dk), dt,
+                   ("ff", "heads", "head"), init)
+        pc.declare(f"{prefix}.wv", (inner, self.heads, self.dv), dt,
+                   ("ff", "heads", "head"), init)
+        pc.declare(f"{prefix}.wif", (inner, 2 * self.heads), jnp.float32,
+                   ("ff", None), init)
+        pc.declare(f"{prefix}.norm", (inner,), dt, ("ff",), zeros_init())
+        pc.declare(f"{prefix}.down", (inner, d), dt, ("ff", "embed"),
+                   normal_init(inner ** -0.5))
+
+    def _proj(self, p, x):
+        up = x @ p[f"{self.prefix}.up"].astype(x.dtype)
+        u, z = jnp.split(up, 2, axis=-1)
+        q = jnp.einsum("bsi,ihk->bshk", u, p[f"{self.prefix}.wq"].astype(x.dtype))
+        k = jnp.einsum("bsi,ihk->bshk", u, p[f"{self.prefix}.wk"].astype(x.dtype))
+        v = jnp.einsum("bsi,ihk->bshk", u, p[f"{self.prefix}.wv"].astype(x.dtype))
+        gates = u.astype(jnp.float32) @ p[f"{self.prefix}.wif"]
+        i_raw, f_raw = jnp.split(gates, 2, axis=-1)       # [B,S,H]
+        return u, z, q, k, v, i_raw, f_raw
+
+    def forward(self, p, x, *, return_state: bool = False, chunk: int = 256):
+        """Chunkwise-parallel mLSTM (the memory-bounded form).
+
+        The naive parallel form materializes [B, S, S, H] — terabytes at
+        32k — so, like Mamba2's SSD, we run intra-chunk attention-with-decay
+        matmuls plus an inter-chunk recurrence over the stabilized matrix
+        state (C, n, m).  Exactly equal to the recurrent cell (tests)."""
+        B, S, _ = x.shape
+        H, dk, dv = self.heads, self.dk, self.dv
+        Q = min(chunk, S)
+        assert S % Q == 0, (S, Q)
+        nc = S // Q
+        u, z, q, k, v, i_raw, f_raw = self._proj(p, x)
+        logf = jax.nn.log_sigmoid(f_raw)                  # [B,S,H] f32
+        qs = (q.astype(jnp.float32) * dk ** -0.5).reshape(B, nc, Q, H, dk)
+        ks = k.astype(jnp.float32).reshape(B, nc, Q, H, dk)
+        vs = v.astype(jnp.float32).reshape(B, nc, Q, H, dv)
+        ic = i_raw.reshape(B, nc, Q, H)
+        Fc = jnp.cumsum(logf.reshape(B, nc, Q, H), axis=2)  # incl. cumsum
+        Ftot = Fc[:, :, -1, :]                              # [B,nc,H]
+
+        # intra-chunk decay matrix rel[i,j] = F_i - F_j + itilde_j (j <= i)
+        rel = Fc[:, :, :, None, :] - Fc[:, :, None, :, :] + ic[:, :, None, :, :]
+        iq = jnp.arange(Q)
+        causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+        rel = jnp.where(causal, rel, -jnp.inf)              # [B,nc,Q,Q,H]
+        m_intra = jnp.maximum(jnp.max(rel, axis=3), -1e30)  # [B,nc,Q,H]
+
+        # per-chunk state summaries (for the recurrence)
+        g_tail = Ftot[:, :, None, :] - Fc + ic              # [B,nc,Q,H]
+        m_state = jnp.max(g_tail, axis=2)                   # [B,nc,H]
+
+        def chunk_step(carry, inp):
+            C, n, m_prev = carry                            # [B,H,dk,dv] ...
+            qb, kb, vb, relb, m_in, Fb, Ftb, gtb, msb = inp
+            # combined stabilizer per position
+            m_i = jnp.maximum(m_in, Fb + m_prev[:, None])   # [B,Q,H]
+            w_intra = jnp.exp(relb - m_i[:, :, None, :])    # [B,Q,Q,H]
+            sc = jnp.einsum("bqhk,bshk->bqsh", qb, kb) * w_intra
+            num = jnp.einsum("bqsh,bshv->bqhv", sc, vb)
+            den = sc.sum(2)                                 # [B,Q,H]
+            w_inter = jnp.exp(Fb + m_prev[:, None] - m_i)   # [B,Q,H]
+            num = num + w_inter[..., None] * jnp.einsum(
+                "bqhk,bhkv->bqhv", qb, C)
+            den = den + w_inter * jnp.einsum("bqhk,bhk->bqh", qb, n)
+            den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+            h = num / den[..., None]                        # [B,Q,H,dv]
+            # state update to chunk end
+            m_next = jnp.maximum(Ftb + m_prev, msb)         # [B,H]
+            wk = jnp.exp(gtb - m_next[:, None])             # [B,Q,H]
+            C_new = (jnp.exp(Ftb + m_prev - m_next)[:, :, None, None] * C +
+                     jnp.einsum("bqh,bqhk,bqhv->bhkv", wk, kb, vb))
+            n_new = (jnp.exp(Ftb + m_prev - m_next)[:, :, None] * n +
+                     jnp.einsum("bqh,bqhk->bhk", wk, kb))
+            return (C_new, n_new, m_next), h
+
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+        xs = (qs.transpose(1, 0, 2, 3, 4), ks.transpose(1, 0, 2, 3, 4),
+              vs.transpose(1, 0, 2, 3, 4), rel.transpose(1, 0, 2, 3, 4),
+              m_intra.transpose(1, 0, 2, 3), Fc.transpose(1, 0, 2, 3),
+              Ftot.transpose(1, 0, 2), g_tail.transpose(1, 0, 2, 3),
+              m_state.transpose(1, 0, 2))
+        (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, self.inner).astype(x.dtype)
+        h = rms_norm(h, p[f"{self.prefix}.norm"], self.cfg.norm_eps)
+        h = h * jax.nn.silu(z)
+        out = h @ p[f"{self.prefix}.down"].astype(x.dtype)
+        if return_state:
+            return out, MLSTMState(C, n, m)
+        return out
+
+    def init_state(self, batch: int) -> MLSTMState:
+        return MLSTMState(
+            jnp.zeros((batch, self.heads, self.dk, self.dv), jnp.float32),
+            jnp.zeros((batch, self.heads, self.dk), jnp.float32),
+            jnp.full((batch, self.heads), -1e30, jnp.float32))
+
+    def decode(self, p, x, state: MLSTMState):
+        B = x.shape[0]
+        u, z, q, k, v, i_raw, f_raw = self._proj(p, x)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]               # [B,H,dk/dv]
+        i_t = i_raw[:, 0]
+        logf = jax.nn.log_sigmoid(f_raw[:, 0])            # [B,H]
+        m_new = jnp.maximum(logf + state.m, i_t)
+        a = jnp.exp(logf + state.m - m_new)
+        b = jnp.exp(i_t - m_new)
+        c = (state.c * a[..., None, None] +
+             b[..., None, None] * jnp.einsum("bhk,bhv->bhkv",
+                                             k.astype(jnp.float32),
+                                             v.astype(jnp.float32)))
+        n = state.n * a[..., None] + b[..., None] * k.astype(jnp.float32)
+        # q is pre-scaled by dk^-1/2 so num/den match the parallel form
+        qs = q.astype(jnp.float32) * (self.dk ** -0.5)
+        num = jnp.einsum("bhk,bhkv->bhv", qs, c)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        y = (num / den[..., None]).astype(x.dtype).reshape(B, 1, self.inner)
+        y = rms_norm(y, p[f"{self.prefix}.norm"], self.cfg.norm_eps)
+        y = y * jax.nn.silu(z)
+        out = y @ p[f"{self.prefix}.down"].astype(x.dtype)
+        return out, MLSTMState(c, n, m_new)
+
+
+class SLSTMBlock:
+    """sLSTM with per-head recurrent gate connections + pf=4/3 FFN."""
+
+    def __init__(self, cfg: ModelConfig, pc: ParamCollector, prefix: str) -> None:
+        assert cfg.xlstm is not None
+        self.cfg = cfg
+        self.prefix = prefix
+        d = cfg.d_model
+        self.inner = d
+        self.heads = cfg.num_heads
+        self.hd = d // self.heads
+        # 128-align the up-projection so the TP axis always divides it
+        ff = -(-int(d * cfg.xlstm.slstm_proj_factor) // 128) * 128
+        dt = jnp.dtype(cfg.param_dtype)
+        init = normal_init(d ** -0.5)
+        pc.declare(f"{prefix}.wx", (d, 4 * d), jnp.float32, ("embed", "ff"), init)
+        pc.declare(f"{prefix}.r", (self.heads, self.hd, 4 * self.hd), jnp.float32,
+                   ("heads", "head", None), normal_init(self.hd ** -0.5))
+        pc.declare(f"{prefix}.norm", (d,), dt, ("embed",), zeros_init())
+        pc.declare(f"{prefix}.up", (d, 2 * ff), dt, ("embed", "ff"), init)
+        pc.declare(f"{prefix}.down", (ff, d), dt, ("ff", "embed"),
+                   normal_init(ff ** -0.5))
+
+    def init_state(self, batch: int) -> SLSTMState:
+        z = jnp.zeros((batch, self.inner), jnp.float32)
+        return SLSTMState(z, z, z, jnp.full_like(z, -1e30))
+
+    def _cell(self, p, xt, state: SLSTMState) -> Tuple[jax.Array, SLSTMState]:
+        """One timestep. xt: [B, 4d] pre-activations from the input side."""
+        B = xt.shape[0]
+        h_heads = state.h.reshape(B, self.heads, self.hd)
+        rec = jnp.einsum("bhk,hkg->bhg", h_heads, p[f"{self.prefix}.r"])
+        rec = rec.reshape(B, 4 * self.inner)
+        zi, ii, fi, oi = jnp.split(xt + rec, 4, axis=-1)
+        zt = jnp.tanh(zi)
+        it = ii                                           # exp gate (log space)
+        ft = jax.nn.log_sigmoid(fi)
+        ot = jax.nn.sigmoid(oi)
+        m_new = jnp.maximum(ft + state.m, it)
+        a = jnp.exp(ft + state.m - m_new)
+        b = jnp.exp(it - m_new)
+        c = a * state.c + b * zt
+        n = a * state.n + b
+        h = ot * c / jnp.maximum(n, 1.0)
+        return h, SLSTMState(c, n, h, m_new)
+
+    def forward(self, p, x):
+        B, S, d = x.shape
+        xg = x.astype(jnp.float32) @ p[f"{self.prefix}.wx"]   # [B,S,4d]
+
+        def step(state, xt):
+            h, state = self._cell(p, xt, state)
+            return state, h
+
+        _, hs = jax.lax.scan(step, self.init_state(B), xg.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2).astype(x.dtype)
+        h = rms_norm(h, p[f"{self.prefix}.norm"], self.cfg.norm_eps)
+        u, g = jnp.split(h @ p[f"{self.prefix}.up"].astype(x.dtype), 2, -1)
+        return (jax.nn.gelu(u) * g) @ p[f"{self.prefix}.down"].astype(x.dtype)
+
+    def decode(self, p, x, state: SLSTMState):
+        B = x.shape[0]
+        xg = x[:, 0].astype(jnp.float32) @ p[f"{self.prefix}.wx"]
+        h, state = self._cell(p, xg, state)
+        h = h[:, None].astype(x.dtype)
+        h = rms_norm(h, p[f"{self.prefix}.norm"], self.cfg.norm_eps)
+        u, g = jnp.split(h @ p[f"{self.prefix}.up"].astype(x.dtype), 2, -1)
+        out = (jax.nn.gelu(u) * g) @ p[f"{self.prefix}.down"].astype(x.dtype)
+        return out, state

@@ -1,0 +1,22 @@
+"""Relational substrate: tables, catalogs, join-query descriptions, IO,
+and synthetic dataset generators used by benchmarks and tests.
+
+This layer is deliberately framework-free (pure numpy): it is the "storage
+engine" under the Graphical Join core.  Dictionary encoding into dense int32
+codes happens here (``repro.relational.encoding``), so that everything
+downstream (the GJ core, the JAX engine, the Pallas kernels) operates on
+TPU-friendly dense integer arrays.
+"""
+
+from repro.relational.table import Table, Catalog
+from repro.relational.query import QueryTable, JoinQuery
+from repro.relational.encoding import Domain, encode_query
+
+__all__ = [
+    "Table",
+    "Catalog",
+    "QueryTable",
+    "JoinQuery",
+    "Domain",
+    "encode_query",
+]

@@ -1,0 +1,107 @@
+"""Join-query descriptions.
+
+A :class:`JoinQuery` is an n-way natural equi-join over *variables*.  Each
+participating table maps some of its columns onto query variables via
+``var_map`` (column name -> variable name); two occurrences of the same
+variable join.  Renaming through ``var_map`` supports self-joins (e.g. the
+paper's lastFM_A1 joins ``user_artists`` twice under different variables)
+and cyclic queries (triangles).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+
+@dataclass(frozen=True)
+class QueryTable:
+    """One occurrence of a base table inside a join query."""
+
+    table: str                       # base-table name in the catalog
+    var_map: Tuple[Tuple[str, str], ...]  # (column, variable) pairs
+
+    @staticmethod
+    def of(table: str, var_map: Dict[str, str]) -> "QueryTable":
+        return QueryTable(table, tuple(sorted(var_map.items())))
+
+    @property
+    def variables(self) -> Tuple[str, ...]:
+        return tuple(v for _, v in self.var_map)
+
+    @property
+    def columns(self) -> Tuple[str, ...]:
+        return tuple(c for c, _ in self.var_map)
+
+
+@dataclass(frozen=True)
+class JoinQuery:
+    """An n-way equi-join: SELECT <output> FROM tables NATURAL-JOIN on vars."""
+
+    name: str
+    tables: Tuple[QueryTable, ...]
+    output: Optional[Tuple[str, ...]] = None  # None => all variables
+
+    @staticmethod
+    def of(
+        name: str,
+        tables: Sequence[Tuple[str, Dict[str, str]]],
+        output: Optional[Sequence[str]] = None,
+    ) -> "JoinQuery":
+        qts = tuple(QueryTable.of(t, vm) for t, vm in tables)
+        return JoinQuery(name, qts, tuple(output) if output is not None else None)
+
+    # -- structural helpers ----------------------------------------------
+    @property
+    def variables(self) -> List[str]:
+        seen: List[str] = []
+        for qt in self.tables:
+            for v in qt.variables:
+                if v not in seen:
+                    seen.append(v)
+        return seen
+
+    @property
+    def output_variables(self) -> List[str]:
+        if self.output is None:
+            return self.variables
+        return list(self.output)
+
+    def hyperedges(self) -> List[FrozenSet[str]]:
+        """One hyperedge (clique) per table occurrence."""
+        return [frozenset(qt.variables) for qt in self.tables]
+
+    def join_variables(self) -> Set[str]:
+        """Variables appearing in >= 2 table occurrences."""
+        count: Dict[str, int] = {}
+        for qt in self.tables:
+            for v in set(qt.variables):
+                count[v] = count.get(v, 0) + 1
+        return {v for v, c in count.items() if c >= 2}
+
+    def is_cyclic(self) -> bool:
+        """True iff the query hypergraph is cyclic (GYO reduction fails).
+
+        GYO: repeatedly remove 'ear' hyperedges (edges whose variables are
+        all private or contained in another edge).  Acyclic iff reduction
+        empties the edge set.
+        """
+        edges = [set(e) for e in self.hyperedges()]
+        changed = True
+        while changed and len(edges) > 1:
+            changed = False
+            for i, e in enumerate(edges):
+                others: Set[str] = set()
+                for j, o in enumerate(edges):
+                    if j != i:
+                        others |= o
+                shared = e & others
+                # e is an ear if its shared part is contained in one other edge
+                for j, o in enumerate(edges):
+                    if j != i and shared <= o:
+                        edges.pop(i)
+                        changed = True
+                        break
+                if changed:
+                    break
+        return len(edges) > 1

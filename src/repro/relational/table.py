@@ -1,0 +1,129 @@
+"""Column-oriented in-memory tables and catalogs.
+
+A :class:`Table` is a named set of equal-length numpy columns.  Columns may
+be integer (any width; normalized to int64), float, or string (numpy unicode
+or object; normalized to numpy unicode).  GJ is a *physical* join operator:
+all filters are assumed to have been applied before a table reaches it.
+"""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+
+def _normalize_column(values) -> np.ndarray:
+    arr = np.asarray(values)
+    if arr.dtype.kind in ("i", "u", "b"):
+        return arr.astype(np.int64)
+    if arr.dtype.kind == "f":
+        return arr.astype(np.float64)
+    if arr.dtype.kind in ("U", "S", "O"):
+        return arr.astype(np.str_)
+    raise TypeError(f"unsupported column dtype {arr.dtype!r}")
+
+
+@dataclass
+class Table:
+    """A named columnar table."""
+
+    name: str
+    columns: Dict[str, np.ndarray]
+
+    def __post_init__(self) -> None:
+        self.columns = {k: _normalize_column(v) for k, v in self.columns.items()}
+        lengths = {len(v) for v in self.columns.values()}
+        if len(lengths) > 1:
+            raise ValueError(f"ragged columns in table {self.name!r}: {lengths}")
+
+    # -- basic accessors -------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        if not self.columns:
+            return 0
+        return len(next(iter(self.columns.values())))
+
+    @property
+    def column_names(self) -> List[str]:
+        return list(self.columns.keys())
+
+    def __getitem__(self, col: str) -> np.ndarray:
+        return self.columns[col]
+
+    def select(self, cols: Sequence[str]) -> "Table":
+        return Table(self.name, {c: self.columns[c] for c in cols})
+
+    def take(self, idx: np.ndarray) -> "Table":
+        return Table(self.name, {c: v[idx] for c, v in self.columns.items()})
+
+    def concat(self, other: "Table") -> "Table":
+        if self.column_names != other.column_names:
+            raise ValueError("column mismatch in concat")
+        return Table(
+            self.name,
+            {c: np.concatenate([self.columns[c], other.columns[c]]) for c in self.column_names},
+        )
+
+    # -- IO ----------------------------------------------------------------
+    def to_csv(self, path: str) -> int:
+        """Write the table as CSV; returns bytes written (paper stores CSVs)."""
+        with open(path, "w", newline="") as f:
+            writer = csv.writer(f)
+            writer.writerow(self.column_names)
+            cols = [self.columns[c] for c in self.column_names]
+            for row in zip(*cols):
+                writer.writerow(row)
+        return os.path.getsize(path)
+
+    @staticmethod
+    def from_csv(path: str, name: Optional[str] = None) -> "Table":
+        with open(path, newline="") as f:
+            reader = csv.reader(f)
+            header = next(reader)
+            rows = list(reader)
+        cols: Dict[str, np.ndarray] = {}
+        for j, col in enumerate(header):
+            raw = [r[j] for r in rows]
+            try:
+                cols[col] = np.asarray([int(x) for x in raw], dtype=np.int64)
+            except ValueError:
+                cols[col] = np.asarray(raw, dtype=np.str_)
+        return Table(name or os.path.splitext(os.path.basename(path))[0], cols)
+
+    def nbytes(self) -> int:
+        return int(sum(v.nbytes for v in self.columns.values()))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Table({self.name!r}, rows={self.num_rows}, cols={self.column_names})"
+
+
+@dataclass
+class Catalog:
+    """A named collection of tables (the 'database')."""
+
+    tables: Dict[str, Table] = field(default_factory=dict)
+
+    def add(self, table: Table) -> "Catalog":
+        self.tables[table.name] = table
+        return self
+
+    def __getitem__(self, name: str) -> Table:
+        return self.tables[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.tables
+
+    @staticmethod
+    def of(*tables: Table) -> "Catalog":
+        cat = Catalog()
+        for t in tables:
+            cat.add(t)
+        return cat
+
+    def names(self) -> List[str]:
+        return list(self.tables.keys())

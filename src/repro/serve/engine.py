@@ -1,0 +1,85 @@
+"""Batched serving engine: jitted prefill + decode with a static-shape
+request batch (the production pattern: fixed [B, S_max] slots, per-slot
+progress, greedy/temperature sampling).
+
+``serve_step`` is the function the dry-run lowers for the decode shapes:
+one new token per sequence against a KV cache of the shape's seq_len.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LM
+
+
+@dataclass
+class ServeConfig:
+    max_seq: int
+    temperature: float = 0.0
+    eos_id: int = -1              # -1 => never stop early
+
+
+class ServeEngine:
+    def __init__(self, lm: LM, params, cfg: ServeConfig) -> None:
+        self.lm = lm
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(
+            functools.partial(lm.prefill, s_max=cfg.max_seq))
+        self._decode = jax.jit(lm.decode_step)
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        scaled = logits[:, -1] / self.cfg.temperature
+        return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, jax.Array], max_new: int,
+                 *, seed: int = 0) -> np.ndarray:
+        """Prefill the prompt batch then decode max_new tokens."""
+        logits, caches = self._prefill(self.params, batch)
+        key = jax.random.key(seed)
+        out = []
+        tok = self._sample(logits, key)[:, None]
+        vision = batch.get("vision")
+        for i in range(max_new):
+            out.append(np.asarray(tok))
+            key, sub = jax.random.split(key)
+            if vision is not None:
+                logits, caches = self._decode(self.params, tok, caches,
+                                              vision=vision)
+            else:
+                logits, caches = self._decode(self.params, tok, caches)
+            tok = self._sample(logits, sub)[:, None]
+        return np.concatenate(out, axis=1)
+
+
+def make_serve_step(lm: LM, *, mode: str):
+    """The lowered serving entry points for the dry-run.
+
+    mode == "prefill": (params, batch) -> logits                (encode too)
+    mode == "decode":  (params, tokens, caches) -> (logits, caches)
+    """
+    if mode == "prefill":
+        if lm.cfg.is_encoder_only or lm.cfg.family == "audio":
+            def encode_step(params, batch):
+                return lm.forward(params, batch)
+            return encode_step
+
+        def prefill_step(params, batch, *, s_max: int):
+            return lm.prefill(params, batch, s_max=s_max)
+        return prefill_step
+
+    if mode == "decode":
+        def decode_step(params, tokens, caches, **kw):
+            return lm.decode_step(params, tokens, caches, **kw)
+        return decode_step
+
+    raise ValueError(mode)

@@ -1,0 +1,2 @@
+from repro.train.optim import AdamWConfig, init_state, apply_updates
+from repro.train.train_step import TrainState, make_train_step

@@ -1,0 +1,177 @@
+"""The jitted train step: loss -> grad -> clip -> AdamW, with optional
+microbatch gradient accumulation (lax.scan) and int8 gradient compression
+with error feedback for the data-parallel all-reduce.
+
+Two distribution modes:
+
+* **gspmd** (default): the step is a plain function jitted with
+  in/out_shardings; XLA GSPMD places every collective.  This is the
+  paper-faithful baseline the dry-run lowers.
+* **dp_shard_map**: the gradient all-reduce is taken over explicitly with
+  ``shard_map`` + :func:`compressed_psum` — int8-quantized gradient
+  exchange with per-leaf scales and an error-feedback residual carried in
+  the optimizer state.  This is the distributed-optimization trick
+  evaluated in tests/test_dist.py on a fake 8-device mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import LM
+from repro.train.optim import AdamWConfig, AdamWState, apply_updates, init_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_loss_fn(lm: LM) -> Callable:
+    def loss_fn(params, batch):
+        return lm.loss(params, batch)
+    return loss_fn
+
+
+def make_train_step(
+    lm: LM,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict]]:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    With microbatches > 1, the batch's leading dim is split and gradients
+    are accumulated in f32 across a lax.scan — memory drops by the
+    microbatch factor while keeping the same global batch semantics.
+    """
+    loss_fn = make_loss_fn(lm)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if microbatches == 1:
+            loss, grads = grads_of(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = grads_of(state.params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(acc, (zero, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+
+        params, opt, metrics = apply_updates(opt_cfg, state.params, grads,
+                                             state.opt)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params, opt), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (explicit-DP mode)
+# ---------------------------------------------------------------------------
+
+def compressed_psum(g: jax.Array, axis_name: str,
+                    residual: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """int8-quantized all-reduce with error feedback.
+
+    The quantization scale is SHARED across the axis (one scalar pmax), so
+    summing the int8 payloads dequantizes exactly: psum(q_i)*s = sum(q_i*s).
+    Per-shard rounding error goes into the residual and is re-injected next
+    step (error feedback), keeping compression unbiased over time.  Wire
+    bytes drop 4x vs f32 (int8 payload + one scalar).
+    """
+    x = g.astype(jnp.float32)
+    if residual is not None:
+        x = x + residual
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_residual = x - deq
+    # int8 on the wire; int32 accumulation avoids overflow at large worlds
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = total * scale / n
+    return mean, new_residual
+
+
+def make_dp_shard_map_step(
+    lm: LM,
+    opt_cfg: AdamWConfig,
+    mesh: Mesh,
+    *,
+    compress: bool = True,
+    axis: str = "data",
+):
+    """Explicit data-parallel step: per-shard grads, compressed psum,
+    replicated update.  Params replicated across `axis` (pure DP)."""
+    from jax.experimental.shard_map import shard_map
+
+    loss_fn = make_loss_fn(lm)
+
+    class DPState(NamedTuple):
+        params: Any
+        opt: AdamWState
+        residual: Any
+
+    def init(params):
+        return DPState(params, init_state(params),
+                       jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params))
+
+    def step(state: DPState, batch):
+        def shard_fn(params, opt, residual, local_batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, local_batch)
+            if compress:
+                flat_g, tdef = jax.tree.flatten(grads)
+                flat_r = tdef.flatten_up_to(residual)
+                out = [compressed_psum(g, axis, r)
+                       for g, r in zip(flat_g, flat_r)]
+                grads = tdef.unflatten([o[0] for o in out])
+                new_res = tdef.unflatten([o[1] for o in out])
+            else:
+                grads = jax.tree.map(
+                    lambda g: jax.lax.pmean(g.astype(jnp.float32), axis), grads)
+                new_res = residual
+            loss = jax.lax.pmean(loss, axis)
+            params, opt, metrics = apply_updates(opt_cfg, params, grads, opt)
+            metrics = dict(metrics, loss=loss)
+            return params, opt, new_res, metrics
+
+        rep = P()
+        pspec = jax.tree.map(lambda _: rep, state.params)
+        bspec = jax.tree.map(lambda _: P(axis), batch)
+        fn = shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(pspec, jax.tree.map(lambda _: rep, state.opt),
+                      jax.tree.map(lambda _: rep, state.residual), bspec),
+            out_specs=(pspec, jax.tree.map(lambda _: rep, state.opt),
+                       jax.tree.map(lambda _: rep, state.residual),
+                       {"grad_norm": rep, "lr": rep, "loss": rep}),
+            check_rep=False)
+        params, opt, res, metrics = fn(state.params, state.opt,
+                                       state.residual, batch)
+        return DPState(params, opt, res), metrics
+
+    return init, step

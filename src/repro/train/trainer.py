@@ -1,0 +1,126 @@
+"""The fault-tolerant training driver.
+
+Responsibilities beyond calling train_step in a loop:
+
+* periodic async checkpoints (params + optimizer + data-iterator state),
+  resume-from-latest on start — preemption-safe by construction;
+* deterministic data order across restarts (the batcher cursor is part of
+  the checkpoint, so a resumed run consumes exactly the batches the dead
+  run would have);
+* failure injection hooks for the FT test-suite (`crash_after_step`);
+* straggler mitigation at the host level: data batches are produced by a
+  lookahead prefetch thread so a slow storage read never stalls the step;
+  on a real fleet the same queue is fed by the GFJS range owned by the
+  host, which is O(1) to re-balance when hosts change (see data/pipeline).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import TokenBatcher
+from repro.models.model import LM
+from repro.train.optim import AdamWConfig, init_state
+from repro.train.train_step import TrainState, make_train_step
+
+
+class _Prefetcher:
+    """Lookahead batch producer (host-level straggler mitigation).
+
+    Each queue item is (batch, iterator-state-after-this-batch): the trainer
+    checkpoints the state of the last *consumed* batch, never the producer's
+    lookahead position — that is what makes crash/resume bit-exact even with
+    prefetching (tests/test_train_ft.py).
+    """
+
+    def __init__(self, make_batch: Callable[[], Dict],
+                 get_state: Callable[[], Dict], depth: int = 2) -> None:
+        self.make_batch = make_batch
+        self.get_state = get_state
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self) -> None:
+        pending = None
+        while not self.stop.is_set():
+            if pending is None:
+                batch = self.make_batch()
+                pending = (batch, dict(self.get_state()))
+            try:
+                self.q.put(pending, timeout=0.5)
+                pending = None
+            except queue.Full:
+                continue
+
+    def next(self) -> Tuple[Dict, Dict]:
+        return self.q.get()
+
+    def close(self) -> None:
+        self.stop.set()
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    microbatches: int = 1
+    crash_after_step: Optional[int] = None   # failure injection (tests)
+
+
+class Trainer:
+    def __init__(self, lm: LM, opt_cfg: AdamWConfig, batcher: TokenBatcher,
+                 cfg: TrainerConfig) -> None:
+        self.lm = lm
+        self.opt_cfg = opt_cfg
+        self.batcher = batcher
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(cfg.checkpoint_dir)
+        self.step_fn = jax.jit(make_train_step(lm, opt_cfg,
+                                               microbatches=cfg.microbatches))
+        self.metrics_log: List[Dict[str, float]] = []
+
+    def _init_state(self, seed: int = 0) -> TrainState:
+        params = self.lm.init(jax.random.key(seed))
+        return TrainState(params, init_state(params))
+
+    def run(self, seed: int = 0) -> TrainState:
+        cfg = self.cfg
+        start_step = 0
+        state = self._init_state(seed)
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state, start_step, extra = self.ckpt.restore(state)
+            self.batcher.load_state(extra["batcher"])
+
+        prefetch = _Prefetcher(self.batcher.next_batch, self.batcher.state)
+        consumed_state = self.batcher.state()
+        try:
+            for step in range(start_step, cfg.steps):
+                batch, consumed_state = prefetch.next()
+                state, metrics = self.step_fn(state, batch)
+                if (step + 1) % cfg.log_every == 0 or step == cfg.steps - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = step + 1
+                    self.metrics_log.append(m)
+                if (step + 1) % cfg.checkpoint_every == 0:
+                    self.ckpt.save(step + 1, state,
+                                   extra={"batcher": consumed_state})
+                if cfg.crash_after_step is not None and \
+                        (step + 1) == cfg.crash_after_step:
+                    raise RuntimeError("injected failure (test)")
+        finally:
+            prefetch.close()
+            self.ckpt.wait()
+        return state

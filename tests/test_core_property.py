@@ -1,0 +1,168 @@
+"""Property-based tests (hypothesis) for the GJ core invariants.
+
+Invariants, on randomized schemas/data covering chains, stars, trees,
+self-joins, triangles and 4-cycles (the JT path):
+
+  P1  desummarize(GFJS) == join result sorted by the GFJS column order
+  P2  GFJS == grouped per-level RLE of that sorted result (Definition 1)
+  P3  every level's run lengths sum to |Q|
+  P4  |Q| from the root marginal == true join size
+  P5  GJ == leapfrog (WCOJ baseline) == binary plan, as multisets
+  P6  consecutive-level consistency: child runs under a parent run sum to it
+"""
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core.api import GraphicalJoin
+from repro.core.baselines import binary_join_plan, leapfrog_join
+from repro.core.oracle import grouped_rle, oracle_join, sort_rows
+from repro.relational.query import JoinQuery
+from repro.relational.table import Catalog, Table
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+SHAPES = ["chain2", "chain3", "chain4", "star3", "selfjoin", "triangle",
+          "cycle4", "bowtie", "wide_table"]
+
+
+def _mk_query(shape: str) -> Tuple[List[Tuple[str, Dict[str, str], int]], JoinQuery]:
+    """Returns ([(table, var_map, arity)], query). arity = #cols."""
+    if shape == "chain2":
+        spec = [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"})]
+    elif shape == "chain3":
+        spec = [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+                ("t2", {"x0": "C", "x1": "D"})]
+    elif shape == "chain4":
+        spec = [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+                ("t2", {"x0": "C", "x1": "D"}), ("t3", {"x0": "D", "x1": "E"})]
+    elif shape == "star3":
+        spec = [("t0", {"x0": "M", "x1": "A"}), ("t1", {"x0": "M", "x1": "B"}),
+                ("t2", {"x0": "M", "x1": "C"})]
+    elif shape == "selfjoin":
+        spec = [("t0", {"x0": "A", "x1": "B"}), ("t0", {"x0": "B", "x1": "C"})]
+    elif shape == "triangle":
+        spec = [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+                ("t2", {"x0": "C", "x1": "A"})]
+    elif shape == "cycle4":
+        spec = [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+                ("t2", {"x0": "C", "x1": "D"}), ("t3", {"x0": "D", "x1": "A"})]
+    elif shape == "bowtie":  # two triangles sharing a vertex
+        spec = [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+                ("t2", {"x0": "C", "x1": "A"}), ("t3", {"x0": "C", "x1": "D"}),
+                ("t4", {"x0": "D", "x1": "E"}), ("t5", {"x0": "E", "x1": "C"})]
+    elif shape == "wide_table":  # 3-attr hyperedges
+        spec = [("t0", {"x0": "A", "x1": "B", "x2": "C"}),
+                ("t1", {"x0": "B", "x1": "C", "x2": "D"})]
+    else:
+        raise ValueError(shape)
+    tables = [(t, vm, len(vm)) for t, vm in spec]
+    query = JoinQuery.of(shape, [(t, vm) for t, vm in spec])
+    return tables, query
+
+
+@st.composite
+def join_instances(draw):
+    shape = draw(st.sampled_from(SHAPES))
+    tables, query = _mk_query(shape)
+    domain = draw(st.integers(min_value=1, max_value=5))
+    cat = Catalog()
+    seen = set()
+    for tname, vm, arity in tables:
+        if tname in seen:
+            continue
+        seen.add(tname)
+        nrows = draw(st.integers(min_value=0, max_value=24))
+        cols = {}
+        for j in range(arity):
+            cols[f"x{j}"] = draw(
+                st.lists(st.integers(min_value=0, max_value=domain - 1),
+                         min_size=nrows, max_size=nrows))
+        cat.add(Table(tname, {k: np.asarray(v, dtype=np.int64) for k, v in cols.items()}))
+    return cat, query
+
+
+COMMON = dict(deadline=None,
+              suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+
+
+@settings(max_examples=120, **COMMON)
+@given(join_instances())
+def test_gj_equals_oracle(inst):
+    cat, query = inst
+    gj = GraphicalJoin(cat, query)
+    gfjs = gj.run()
+    res = gj.desummarize(gfjs, decode=False)
+    oc = oracle_join(gj.enc)
+    o = sort_rows(oc, gfjs.column_order)
+    g = (np.stack([res[v] for v in gfjs.column_order], axis=1)
+         if gfjs.join_size else np.zeros((0, len(gfjs.column_order)), np.int64))
+    # P4
+    assert gj.join_size() == len(o)
+    # P1
+    assert np.array_equal(o, g)
+    # P2
+    groups = [len(l.vars) for l in gfjs.levels]
+    for lvl, (vals, freqs) in zip(gfjs.levels, grouped_rle(o, groups)):
+        got = np.stack([lvl.key_cols[v] for v in lvl.vars], axis=1) \
+            if lvl.num_runs else np.zeros((0, len(lvl.vars)), np.int64)
+        assert np.array_equal(got, vals) and np.array_equal(lvl.freq, freqs)
+    # P3
+    for lvl in gfjs.levels:
+        assert int(lvl.freq.sum()) == gfjs.join_size
+
+
+@settings(max_examples=60, **COMMON)
+@given(join_instances())
+def test_baselines_agree(inst):
+    cat, query = inst
+    gj = GraphicalJoin(cat, query)
+    gfjs = gj.run()
+    res = gj.desummarize(gfjs, decode=False)
+    lf = leapfrog_join(gj.enc)
+    bp = binary_join_plan(gj.enc)
+    assert lf.rows == bp.rows == gfjs.join_size
+    cols = gfjs.column_order
+    g = np.stack([res[v] for v in cols], axis=1) if gfjs.join_size else \
+        np.zeros((0, len(cols)), np.int64)
+    for run in (lf, bp):
+        m = np.stack([run.columns[v] for v in cols], axis=1) if run.rows else \
+            np.zeros((0, len(cols)), np.int64)
+        m = m[np.lexsort(m.T[::-1])]
+        assert np.array_equal(g, m)
+
+
+@settings(max_examples=60, **COMMON)
+@given(join_instances())
+def test_level_consistency(inst):
+    """P6: expanding level i's runs refines level i-1's runs exactly."""
+    cat, query = inst
+    gj = GraphicalJoin(cat, query)
+    gfjs = gj.run()
+    for a, b in zip(gfjs.levels[:-1], gfjs.levels[1:]):
+        ca = np.concatenate([[0], np.cumsum(a.freq)])
+        cb = np.concatenate([[0], np.cumsum(b.freq)])
+        # every parent boundary must appear among child boundaries
+        assert np.all(np.isin(ca, cb))
+
+
+@settings(max_examples=40, **COMMON)
+@given(join_instances(), st.integers(min_value=0, max_value=10_000))
+def test_range_desummarize(inst, raw_lo):
+    from repro.core.gfjs import desummarize_range
+    cat, query = inst
+    gj = GraphicalJoin(cat, query)
+    gfjs = gj.run()
+    if gfjs.join_size == 0:
+        return
+    lo = raw_lo % gfjs.join_size
+    hi = min(lo + 7, gfjs.join_size)
+    full = gj.desummarize(gfjs, decode=False)
+    part = desummarize_range(gfjs, lo, hi, decode=False)
+    for v in gfjs.column_order:
+        assert np.array_equal(full[v][lo:hi], part[v])

@@ -1,0 +1,101 @@
+"""Junction-tree machinery tests (paper §2.2.1): min-fill, chordality, RIP."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (QueryGraph, is_chordal, junction_tree,
+                              min_fill_order)
+from repro.relational.query import JoinQuery
+from repro.relational.synth import figure1, lastfm_like
+
+
+def _graph_from_edges(edges):
+    variables = sorted({v for e in edges for v in e})
+    adj = {v: set() for v in variables}
+    for a, b in edges:
+        adj[a].add(b)
+        adj[b].add(a)
+    hyper = [frozenset(e) for e in edges]
+    return QueryGraph(variables, adj, hyper)
+
+
+def test_tree_query_has_perfect_elimination_order():
+    cat, query = figure1()
+    g = QueryGraph.from_query(query)
+    tri = min_fill_order(g)
+    assert tri.fill_edges == []           # trees need no fill-ins
+    assert len(tri.maxcliques) == 3       # the three table edges
+
+
+def test_four_cycle_needs_one_fill_edge():
+    g = _graph_from_edges([("A", "B"), ("B", "C"), ("C", "D"), ("D", "A")])
+    tri = min_fill_order(g)
+    assert len(tri.fill_edges) == 1       # one chord triangulates a 4-cycle
+    assert max(len(c) for c in tri.maxcliques) == 3
+
+
+def test_lastfm_cyc_junction_tree_shape():
+    """The paper's Figure 6: three maxcliques of size 3, RIP holds."""
+    _, queries = lastfm_like(n_users=10, n_artists=10)
+    q = queries["lastfm_cyc"]
+    g = QueryGraph.from_query(q)
+    tri = min_fill_order(g)
+    jt = junction_tree(tri.maxcliques)
+    assert max(len(c) for c in tri.maxcliques) == 3
+    assert len(tri.maxcliques) == 3
+    assert jt.satisfies_rip()
+
+
+def test_triangulated_graph_is_chordal():
+    g = _graph_from_edges([("A", "B"), ("B", "C"), ("C", "D"), ("D", "E"),
+                           ("E", "A"), ("B", "D")])
+    tri = min_fill_order(g)
+    adj = {v: set(ns) for v, ns in g.adjacency.items()}
+    for a, b in tri.fill_edges:
+        adj[a].add(b)
+        adj[b].add(a)
+    assert is_chordal(adj)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(3, 8), st.data())
+def test_random_graph_triangulation_properties(n, data):
+    """Min-fill output is chordal; its JT satisfies RIP; maxcliques cover
+    every original hyperedge."""
+    vars_ = [f"v{i}" for i in range(n)]
+    edges = []
+    # random connected graph: spanning path + random extras
+    for i in range(n - 1):
+        edges.append((vars_[i], vars_[i + 1]))
+    extra = data.draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)), max_size=8))
+    for a, b in extra:
+        if a != b:
+            edges.append((vars_[a], vars_[b]))
+    g = _graph_from_edges(edges)
+    tri = min_fill_order(g)
+
+    adj = {v: set(ns) for v, ns in g.adjacency.items()}
+    for a, b in tri.fill_edges:
+        adj[a].add(b)
+        adj[b].add(a)
+    assert is_chordal(adj)
+
+    for e in g.hyperedges:
+        assert any(e <= c for c in tri.maxcliques), "hyperedge not covered"
+
+    jt = junction_tree(tri.maxcliques)
+    assert jt.satisfies_rip()
+
+    # elimination order covers every variable exactly once
+    assert sorted(tri.order) == sorted(vars_)
+
+
+def test_early_projection_order_puts_non_output_first():
+    cat, query = figure1()
+    q = JoinQuery.of("p", [(qt.table, dict(qt.var_map)) for qt in query.tables],
+                     output=["A", "D"])
+    g = QueryGraph.from_query(q)
+    tri = min_fill_order(g, first=["B", "C"])
+    assert set(tri.order[:2]) == {"B", "C"}

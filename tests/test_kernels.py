@@ -1,0 +1,145 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept across shapes and dtypes (per the repo's kernel contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.expand import expand_gather
+from repro.kernels.segsum import mul_segsum as segsum_kernel
+from repro.kernels.boundaries import run_boundaries as boundaries_kernel
+from repro.kernels.dense_contract import dense_message as dense_kernel
+
+
+# ---------------------------------------------------------------------------
+# expand_gather (RLE desummarization / frontier expansion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_runs", [1, 7, 500, 513, 2048])
+@pytest.mark.parametrize("payload_dtype", [jnp.int32, jnp.float32])
+def test_expand_gather_shapes(n_runs, payload_dtype):
+    rng = np.random.default_rng(n_runs)
+    freqs = rng.integers(1, 9, size=n_runs)
+    bounds = np.cumsum(freqs).astype(np.int32)
+    total = int(bounds[-1])
+    payload = jnp.asarray(rng.integers(0, 1 << 20, n_runs), payload_dtype)
+    t_pad = ops.next_bucket(total)
+    got = expand_gather(payload, jnp.asarray(bounds), t_pad=t_pad, interpret=True)
+    want = ref.expand_gather_ref(payload, jnp.asarray(bounds), total)
+    np.testing.assert_allclose(np.asarray(got[:total]), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 12), min_size=1, max_size=300), st.integers(0, 2**31 - 1))
+def test_expand_gather_property(freqs, seed):
+    rng = np.random.default_rng(seed)
+    bounds = np.cumsum(freqs).astype(np.int32)
+    total = int(bounds[-1])
+    payload = jnp.asarray(rng.integers(0, 1 << 30, len(freqs)), jnp.int32)
+    got = ops.rle_expand(payload, jnp.asarray(bounds), total, interpret=True)
+    want = np.repeat(np.asarray(payload), freqs)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_expand_indices_matches_numpy_repeat():
+    freqs = np.asarray([3, 1, 4, 1, 5, 9, 2, 6])
+    bounds = np.cumsum(freqs).astype(np.int32)
+    got = ops.expand_indices(jnp.asarray(bounds), int(bounds[-1]), interpret=True)
+    want = np.repeat(np.arange(len(freqs)), freqs)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# mul_segsum (message passing sum half)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,segs", [(1, 1), (100, 3), (512, 512), (1500, 40), (4096, 1000)])
+def test_mul_segsum_shapes(n, segs):
+    rng = np.random.default_rng(n)
+    # dense sorted ids covering all segs
+    seg = np.sort(np.concatenate([np.arange(segs), rng.integers(0, segs, max(n - segs, 0))]))[:n]
+    seg = np.sort(seg).astype(np.int32)
+    # re-densify in case truncation dropped the tail segments
+    _, seg = np.unique(seg, return_inverse=True)
+    segs_eff = int(seg.max()) + 1
+    x = rng.integers(0, 100, n).astype(np.float32)
+    y = rng.integers(0, 100, n).astype(np.float32)
+    got = segsum_kernel(jnp.asarray(seg, jnp.int32), jnp.asarray(x), jnp.asarray(y),
+                        num_segments=segs_eff, interpret=True)
+    want = ref.mul_segsum_ref(jnp.asarray(seg, jnp.int32), jnp.asarray(x),
+                              jnp.asarray(y), segs_eff)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 6), min_size=1, max_size=200), st.integers(0, 2**31 - 1))
+def test_mul_segsum_property(run_lengths, seed):
+    rng = np.random.default_rng(seed)
+    seg = np.repeat(np.arange(len(run_lengths)), run_lengths).astype(np.int32)
+    n = len(seg)
+    x = rng.integers(0, 50, n).astype(np.float32)
+    y = rng.integers(0, 50, n).astype(np.float32)
+    got = ops.mul_segsum(seg, x, y, len(run_lengths), interpret=True)
+    want = ref.mul_segsum_ref(jnp.asarray(seg), jnp.asarray(x), jnp.asarray(y),
+                              len(run_lengths))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# run_boundaries (GROUP BY build)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 5, 1024, 1025, 5000])
+def test_run_boundaries_shapes(n):
+    rng = np.random.default_rng(n)
+    keys = np.sort(rng.integers(0, max(n // 3, 1), n)).astype(np.int32)
+    got = boundaries_kernel(jnp.asarray(keys), interpret=True)
+    want = ref.run_boundaries_ref(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=400))
+def test_run_boundaries_property(vals):
+    keys = np.sort(np.asarray(vals, dtype=np.int32))
+    got = ops.run_boundaries(keys, interpret=True)
+    want = ref.run_boundaries_ref(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_group_by_count_composition():
+    keys = np.sort(np.random.default_rng(0).integers(0, 50, 3000)).astype(np.int32)
+    seg, counts, num = ops.group_by_count(keys, interpret=True)
+    uniq, want = np.unique(keys, return_counts=True)
+    assert num == len(uniq)
+    np.testing.assert_allclose(np.asarray(counts), want.astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# dense_message (counting-semiring MXU matmul)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P,V,K", [(1, 1, 1), (128, 128, 1), (300, 257, 5),
+                                   (256, 512, 128), (513, 100, 130)])
+def test_dense_message_shapes(P, V, K):
+    rng = np.random.default_rng(P * V + K)
+    phi = rng.integers(0, 100, (P, V)).astype(np.float32)
+    m = rng.integers(0, 100, (V, K)).astype(np.float32)
+    got = dense_kernel(jnp.asarray(phi), jnp.asarray(m), interpret=True)
+    want = ref.dense_message_ref(jnp.asarray(phi), jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 80), st.integers(1, 8),
+       st.integers(0, 2**31 - 1))
+def test_dense_message_property(P, V, K, seed):
+    rng = np.random.default_rng(seed)
+    phi = rng.integers(0, 9, (P, V)).astype(np.float32)
+    m = rng.integers(0, 9, (V, K)).astype(np.float32)
+    got = ops.dense_message(phi, m, interpret=True)
+    want = np.asarray(phi @ m)
+    np.testing.assert_allclose(np.asarray(got), want)
