@@ -17,11 +17,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single section (table1..table6, "
-                         "sensitivity, kernels)")
+                         "sensitivity, summary, kernels)")
     args = ap.parse_args()
 
     from benchmarks import tables
     from benchmarks.kernels_bench import bench_kernels
+    from benchmarks.summary_bench import bench_summary
 
     sections = {
         "table1": tables.bench_table1,
@@ -31,6 +32,7 @@ def main() -> None:
         "table5": tables.bench_table5,
         "table6": tables.bench_table6,
         "sensitivity": tables.bench_sensitivity,
+        "summary": lambda tmp: bench_summary(),
     }
 
     print("name,us_per_call,derived")

@@ -87,14 +87,20 @@ def run_workload(w: Workload, tmpdir: str) -> RunRecord:
         rec.base_bytes = os.path.getsize(bpath)
 
         def _load_flat():
-            import zstandard
+            import struct
+
+            from repro.core.storage import decompress_bytes
             with open(bpath, "rb") as f:
                 raw = f.read()
-            d = zstandard.ZstdDecompressor()
-            # stream-decompress all column frames
-            off = 0
-            # stored as concatenated frames; decode via stream reader
-            return d.decompressobj().decompress(raw)
+            # length-prefixed column frames (see store_result_binary)
+            out, off = [], 0
+            while off < len(raw):
+                codec, n = struct.unpack_from("<4sQ", raw, off)
+                off += 12
+                out.append(decompress_bytes(raw[off:off + n],
+                                            codec.rstrip(b" \x00").decode()))
+                off += n
+            return out
 
         _, rec.base_load = timer(_load_flat)
     else:

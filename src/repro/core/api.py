@@ -86,6 +86,45 @@ class GraphicalJoin:
         """build_model -> build_generator -> summarize."""
         return self.summarize()
 
+    def aggregate(self, op: str, var: Optional[str] = None, *,
+                  by: Optional[Sequence[str]] = None,
+                  where: Optional[Dict] = None,
+                  gfjs: Optional[GFJS] = None):
+        """Answer an aggregate from the summary — O(runs), never O(|Q|).
+
+            gj.aggregate("count")
+            gj.aggregate("sum", "D", by=["A"], where={"B": "b1"})
+
+        ``op``: count / sum / mean / min / max / distinct / count_distinct.
+        Pass a previously computed ``gfjs`` to reuse it (the compute-and-
+        reuse path); otherwise the pipeline runs (or re-runs) first.  The
+        summary-side time lands in ``timings["aggregate"]``.
+        """
+        from repro.summary.algebra import SummaryFrame
+        if gfjs is None:
+            gfjs = self.run()
+        t0 = time.perf_counter()
+        frame = SummaryFrame.of(gfjs)
+        if where:
+            frame = frame.filter(where)
+        if by:
+            if op == "count":
+                out = frame.group_by(list(by), count="count")
+            else:
+                if var is None:
+                    raise ValueError(f"aggregate {op!r} needs a variable")
+                out = frame.group_by(list(by), **{op: (op, var)})
+        elif op == "count":
+            out = frame.count()
+        elif op in ("sum", "mean", "min", "max", "distinct", "count_distinct"):
+            if var is None:
+                raise ValueError(f"aggregate {op!r} needs a variable")
+            out = getattr(frame, op)(var)
+        else:
+            raise ValueError(f"unknown aggregate op {op!r}")
+        self.timings["aggregate"] = time.perf_counter() - t0
+        return out
+
     def desummarize(self, gfjs: GFJS, *, decode: bool = True) -> Dict[str, np.ndarray]:
         t0 = time.perf_counter()
         out = desummarize(gfjs, decode=decode)

@@ -109,11 +109,18 @@ def store_result_csv(columns: Dict[str, np.ndarray], domains, path: str) -> int:
 
 
 def store_result_binary(columns: Dict[str, np.ndarray], path: str) -> int:
-    """Columnar binary storage of a flat result (MonetDB-style), zstd'd."""
+    """Columnar binary storage of a flat result (MonetDB-style), compressed.
+
+    Frames are self-describing: each column is one length-prefixed compressed
+    block so the loader needs no external schema (see benchmarks/tables.py).
+    """
     import os
-    import zstandard
-    cctx = zstandard.ZstdCompressor(level=3)
+    import struct
+
+    from repro.core.storage import compress_bytes
     with open(path, "wb") as f:
         for v, c in columns.items():
-            f.write(cctx.compress(np.ascontiguousarray(c).tobytes()))
+            codec, comp = compress_bytes(np.ascontiguousarray(c).tobytes())
+            f.write(struct.pack("<4sQ", codec.encode().ljust(4), len(comp)))
+            f.write(comp)
     return os.path.getsize(path)

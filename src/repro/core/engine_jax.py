@@ -19,6 +19,7 @@ optimization measured in benchmarks/table5_inmemory.py.
 
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -107,6 +108,72 @@ def maybe_dense_message(
                             jnp.asarray(msg_vals, jnp.float32)[:, None],
                             interpret=interpret)
     return np.asarray(out[:, 0]).astype(INT)
+
+
+# ---------------------------------------------------------------------------
+# summary-side reductions (repro.summary.algebra's hot loop)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "acc_dtype"))
+def _segsum_padded(seg, x, w, *, num_segments: int, acc_dtype):
+    """Fused multiply + segment-sum on bucket-padded inputs (DESIGN.md §2)."""
+    prod = x.astype(acc_dtype) * w.astype(acc_dtype)
+    return jax.ops.segment_sum(prod, seg, num_segments=num_segments)
+
+
+def segment_weighted_sum(
+    seg_ids: np.ndarray, values: np.ndarray, weights: np.ndarray,
+    num_segments: int, *, interpret: Optional[bool] = None,
+) -> np.ndarray:
+    """Per-segment sum of values*weights over sorted dense segment ids.
+
+    The dispatch point for every summary-side aggregate: on TPU, integer
+    inputs whose total magnitude fits f32-exact range ride the Pallas
+    ``mul_segsum`` kernel (MXU one-hot matmul per tile); everything else —
+    including all CPU traffic, where the kernel would only run interpreted —
+    takes a jit'd XLA segment-sum with bucketized padding (int64 exact for
+    integers, f64 for floats), so the jit cache stays O(log^2 max-size).
+    """
+    values = np.asarray(values)
+    weights = np.asarray(weights)
+    n = len(values)
+    floaty = values.dtype.kind == "f" or weights.dtype.kind == "f"
+    if n == 0:
+        return np.zeros(num_segments, np.float64 if floaty else np.int64)
+    interpret = ops.default_interpret() if interpret is None else interpret
+    if not floaty and not interpret:
+        # TPU fast path when f32 accumulation is exact: one cheap O(n) bound
+        total = float(np.abs(values.astype(np.float64)
+                             * weights.astype(np.float64)).sum())
+        if total < ops.F32_EXACT:
+            out = ops.mul_segsum(seg_ids, values, weights, num_segments,
+                                 interpret=interpret)
+            return np.asarray(out).astype(INT)
+    # exact path: pad entries + segment count to power-of-two buckets;
+    # padding rows land in a dead trailing segment that gets sliced off
+    acc = jnp.float64 if floaty else jnp.int64
+    s_pad = ops.next_bucket(num_segments + 1)
+    n_pad = ops.next_bucket(n)
+    seg_p = np.full(n_pad, s_pad - 1, np.int32)
+    seg_p[:n] = seg_ids
+    x_p = np.zeros(n_pad, values.dtype)
+    x_p[:n] = values
+    w_p = np.zeros(n_pad, weights.dtype)
+    w_p[:n] = weights
+    out = _segsum_padded(jnp.asarray(seg_p), jnp.asarray(x_p),
+                         jnp.asarray(w_p), num_segments=s_pad, acc_dtype=acc)
+    res = np.asarray(out)[:num_segments]
+    return res if floaty else res.astype(INT)
+
+
+def weighted_total(
+    values: np.ndarray, weights: np.ndarray,
+    *, interpret: Optional[bool] = None,
+):
+    """sum(values * weights) — a one-segment reduction."""
+    seg = np.zeros(len(np.asarray(values)), np.int32)
+    out = segment_weighted_sum(seg, values, weights, 1, interpret=interpret)
+    return out[0] if len(out) else out.dtype.type(0)
 
 
 # ---------------------------------------------------------------------------

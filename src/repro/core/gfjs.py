@@ -80,13 +80,17 @@ def _lookup_groups(
     """Group index in psi for each frontier row (-1 if absent)."""
     if len(psi.parents) == 0:
         return np.zeros(len(frontier_keys), INT)
+    if len(psi.parent_keys) == 0:
+        # empty psi: no parent group exists, so every frontier row misses;
+        # never index pr[pos] on the zero-length array
+        return np.full(len(frontier_keys), -1, INT)
     (fr, pr), _ = _rank_rows_joint(frontier_keys, psi.parent_keys,
                                    list(psi.parent_sizes))
     # psi.parent_keys rows are lex-sorted, and both rankings are
     # lex-order-consistent, so pr is sorted ascending.
     pos = np.searchsorted(pr, fr)
-    pos = np.clip(pos, 0, max(len(pr) - 1, 0))
-    ok = (pr[pos] == fr) if len(pr) else np.zeros(len(fr), bool)
+    pos = np.clip(pos, 0, len(pr) - 1)
+    ok = pr[pos] == fr
     return np.where(ok, pos, -1).astype(INT)
 
 
@@ -123,7 +127,9 @@ def generate_gfjs(gen: Generator, domains: Dict[str, Domain]) -> GFJS:
             pk = (np.stack([cols[p] for p in psi.parents], axis=1)
                   if psi.parents else np.zeros((len(p_bucket), 0), INT))
             g = _lookup_groups(pk, psi)
-            counts = np.where(g >= 0, psi.count[np.clip(g, 0, None)], 0)
+            counts = np.zeros(len(g), INT)
+            hit = g >= 0
+            counts[hit] = psi.count[g[hit]]
             src, within = _expand(counts)
             cidx = psi.start[g[src]] + within
             cols = {v: a[src] for v, a in cols.items()}

@@ -1,13 +1,19 @@
 """GFJS disk format — the compute-and-reuse scenario's store/load path.
 
 Single-file container: an 8-byte magic+version, a JSON manifest (level
-structure, dtypes, domains metadata), then zstd-compressed binary blobs.
-Each level's freq column and each variable's code column are separate blobs
-so a loader can stream one column at a time; domains (the raw dictionary
-values) are stored so the file is self-contained.
+structure, dtypes, domains metadata), then compressed binary blobs.  Each
+level's freq column and each variable's code column are separate blobs so a
+loader can stream one column at a time; domains (the raw dictionary values)
+are stored so the file is self-contained.
+
+Compression codec: zstd when the ``zstandard`` package is importable, else
+stdlib zlib.  The codec is recorded both in the file header flags and per
+blob in the manifest, so a reader with either capability set can decode
+files written by the other (zstd-written files still need zstandard to
+*read*, and loaders raise a clear error if it's absent).
 
 The paper stores GFJS as one CSV per column; we keep the per-column layout
-but use dictionary codes + zstd, which is the columnar-RDBMS-internal
+but use dictionary codes + compression, which is the columnar-RDBMS-internal
 encoding the paper says would make GJ "even faster".  A `to_csv` escape
 hatch writes the paper's exact format for the storage benchmark.
 """
@@ -18,37 +24,75 @@ import io
 import json
 import os
 import struct
-from typing import BinaryIO, Dict, List, Tuple
+import zlib
+from typing import BinaryIO, Dict, List, Optional, Tuple
 
 import numpy as np
-import zstandard
+
+try:  # optional: the container may not ship zstandard
+    import zstandard  # type: ignore
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
 
 from repro.core.gfjs import GFJS, LevelSummary
 from repro.relational.encoding import Domain
 
 MAGIC = b"GFJS"
-VERSION = 1
+VERSION = 2
+
+CODEC_ZSTD = "zstd"
+CODEC_ZLIB = "zlib"
+_CODEC_FLAG = {CODEC_ZSTD: 1, CODEC_ZLIB: 2}
+_FLAG_CODEC = {v: k for k, v in _CODEC_FLAG.items()}
 
 
-def _write_blob(f: BinaryIO, arr: np.ndarray, cctx: zstandard.ZstdCompressor) -> Tuple[int, int]:
-    raw = arr.tobytes()
-    comp = cctx.compress(raw)
-    off = f.tell()
-    f.write(comp)
-    return off, len(comp)
+def default_codec() -> str:
+    """zstd when available, else the always-present zlib fallback."""
+    return CODEC_ZSTD if zstandard is not None else CODEC_ZLIB
 
 
-def save_gfjs(gfjs: GFJS, path: str, *, level: int = 3) -> int:
+def compress_bytes(raw: bytes, *, codec: Optional[str] = None,
+                   level: int = 3) -> Tuple[str, bytes]:
+    """Compress ``raw``; returns (codec actually used, payload)."""
+    codec = default_codec() if codec is None else codec
+    if codec == CODEC_ZSTD:
+        if zstandard is None:
+            raise RuntimeError("zstd codec requested but zstandard is not installed")
+        return codec, zstandard.ZstdCompressor(level=level).compress(raw)
+    if codec == CODEC_ZLIB:
+        return codec, zlib.compress(raw, level)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decompress_bytes(payload: bytes, codec: str,
+                     *, max_output_size: int = 1 << 34) -> bytes:
+    if codec == CODEC_ZSTD:
+        if zstandard is None:
+            raise RuntimeError(
+                "file was written with the zstd codec but zstandard is not "
+                "installed; install it or re-save with the zlib codec")
+        return zstandard.ZstdDecompressor().decompress(
+            payload, max_output_size=max_output_size)
+    if codec == CODEC_ZLIB:
+        return zlib.decompress(payload)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def save_gfjs(gfjs: GFJS, path: str, *, level: int = 3,
+              codec: Optional[str] = None) -> int:
     """Write the summary; returns bytes on disk (Table 4's metric)."""
-    cctx = zstandard.ZstdCompressor(level=level)
+    codec = default_codec() if codec is None else codec
     blobs: List[Dict] = []
     body = io.BytesIO()
 
     def add(name: str, arr: np.ndarray) -> None:
         arr = np.ascontiguousarray(arr)
-        off, n = _write_blob(body, arr, cctx)
-        blobs.append({"name": name, "offset": off, "nbytes": n,
-                      "dtype": str(arr.dtype), "shape": list(arr.shape)})
+        used, comp = compress_bytes(arr.tobytes(), codec=codec, level=level)
+        off = body.tell()
+        body.write(comp)
+        blobs.append({"name": name, "offset": off, "nbytes": len(comp),
+                      "dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "codec": used})
 
     for i, lvl in enumerate(gfjs.levels):
         add(f"level{i}/freq", lvl.freq)
@@ -59,6 +103,7 @@ def save_gfjs(gfjs: GFJS, path: str, *, level: int = 3) -> int:
 
     manifest = {
         "version": VERSION,
+        "codec": codec,
         "join_size": gfjs.join_size,
         "column_order": gfjs.column_order,
         "levels": [{"vars": list(l.vars)} for l in gfjs.levels],
@@ -69,7 +114,7 @@ def save_gfjs(gfjs: GFJS, path: str, *, level: int = 3) -> int:
 
     with open(path, "wb") as f:
         f.write(MAGIC)
-        f.write(struct.pack("<I", VERSION))
+        f.write(struct.pack("<HH", VERSION, _CODEC_FLAG[codec]))
         f.write(struct.pack("<Q", len(mjson)))
         f.write(mjson)
         f.write(body.getvalue())
@@ -77,24 +122,28 @@ def save_gfjs(gfjs: GFJS, path: str, *, level: int = 3) -> int:
 
 
 def load_gfjs(path: str) -> GFJS:
-    dctx = zstandard.ZstdDecompressor()
     with open(path, "rb") as f:
         if f.read(4) != MAGIC:
             raise ValueError(f"{path} is not a GFJS file")
-        (version,) = struct.unpack("<I", f.read(4))
-        if version != VERSION:
+        (version, codec_flag) = struct.unpack("<HH", f.read(4))
+        if version == 1:
+            # v1 headers packed version as one <I (no codec flag) and wrote
+            # zstd-only blobs without per-blob codec entries
+            header_codec = CODEC_ZSTD
+        elif version == VERSION:
+            header_codec = _FLAG_CODEC.get(codec_flag, CODEC_ZSTD)
+        else:
             raise ValueError(f"unsupported GFJS version {version}")
         (mlen,) = struct.unpack("<Q", f.read(8))
         manifest = json.loads(f.read(mlen))
-        base = f.tell()
         data = f.read()
 
     def get(name: str) -> np.ndarray:
         for b in manifest["blobs"]:
             if b["name"] == name:
-                raw = dctx.decompress(
+                raw = decompress_bytes(
                     data[b["offset"]: b["offset"] + b["nbytes"]],
-                    max_output_size=1 << 34)
+                    b.get("codec", header_codec))
                 return np.frombuffer(raw, dtype=np.dtype(b["dtype"])).reshape(b["shape"]).copy()
         raise KeyError(name)
 

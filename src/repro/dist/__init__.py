@@ -1,0 +1,16 @@
+"""Distribution layer: logical-axis sharding rules, activation-sharding
+context, and GJ-specific data-parallel primitives.
+
+Models declare *logical* axes ("embed", "heads", "ff", ...) per parameter
+leaf (repro/models/layers.py); :mod:`repro.dist.sharding` maps those to mesh
+``PartitionSpec``s so model code never mentions mesh axes.
+:mod:`repro.dist.gj_parallel` carries the GJ-side primitives: sharded
+potential counts and range-sharded desummarization (DESIGN.md §7).
+"""
+
+from repro.dist.sharding import (DEFAULT_RULES, SP_FSDP_RULES, ShardingRules,
+                                 param_specs)
+from repro.dist.act_sharding import constrain, use
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "SP_FSDP_RULES", "param_specs",
+           "constrain", "use"]

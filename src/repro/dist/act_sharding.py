@@ -1,0 +1,43 @@
+"""Activation-sharding constraints as an ambient context.
+
+Model code calls :func:`constrain` on every residual-stream activation; by
+default that's the identity, so single-device tests and benchmarks pay
+nothing.  The dry-run's sequence-parallel preset installs a (mesh, spec)
+context via :func:`use`, turning every call into
+``jax.lax.with_sharding_constraint`` — model code never names mesh axes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_state = threading.local()
+
+
+def current() -> Optional[Tuple[Mesh, PartitionSpec]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use(mesh: Mesh, spec: PartitionSpec) -> Iterator[None]:
+    """Install an activation sharding constraint for the enclosed trace."""
+    prev = current()
+    _state.ctx = (mesh, spec)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    """Apply the ambient activation constraint (identity when unset)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, spec = ctx
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,96 @@
+"""Data-parallel GJ primitives (DESIGN.md §7).
+
+GFJS is range-shardable: run boundaries are prefix sums, so any contiguous
+row range of the join result is addressable independently.  That makes both
+hot phases embarrassingly parallel:
+
+* quantitative learning — per-shard GROUP BY counts + an all-reduce
+  (:func:`sharded_potential_counts`);
+* desummarization — every device/host expands only its own row slice
+  (:func:`parallel_desummarize_codes`, :func:`host_parallel_desummarize`).
+"""
+
+from __future__ import annotations
+
+import functools
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.gfjs import GFJS, desummarize_range
+
+
+def sharded_potential_counts(
+    mesh: Mesh, axis: str, codes: jax.Array, num_codes: int
+) -> jax.Array:
+    """GROUP BY count of dense codes, sharded over ``axis`` + psum.
+
+    Padding rows get code ``num_codes`` (a dead slot sliced off at the end),
+    so uneven shard sizes never perturb the histogram.
+    """
+    ndev = mesh.shape[axis]
+    n = codes.shape[0]
+    n_pad = -(-max(n, 1) // ndev) * ndev
+    padded = jnp.full((n_pad,), num_codes, jnp.int32).at[:n].set(
+        jnp.asarray(codes, jnp.int32))
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=P(axis), out_specs=P())
+    def _count(local: jax.Array) -> jax.Array:
+        hist = jnp.zeros((num_codes + 1,), jnp.int64).at[local].add(1)
+        return jax.lax.psum(hist, axis)
+
+    return _count(padded)[:num_codes]
+
+
+def parallel_desummarize_codes(
+    mesh: Mesh, axis: str, values: jax.Array, bounds: jax.Array, total: int
+) -> jax.Array:
+    """RLE-expand (values, inclusive-prefix bounds) across a device mesh.
+
+    Each device materializes its own row slice by binary-searching the run
+    boundaries — no device ever touches another's output range.
+    """
+    ndev = mesh.shape[axis]
+    per = -(-max(total, 1) // ndev)
+    values = jnp.asarray(values, jnp.int32)
+    bounds = jnp.asarray(bounds, jnp.int32)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(), P()), out_specs=P(axis))
+    def _expand(vals: jax.Array, bnds: jax.Array) -> jax.Array:
+        shard = jax.lax.axis_index(axis)
+        rows = shard * per + jnp.arange(per, dtype=jnp.int32)
+        run = jnp.searchsorted(bnds, rows, side="right")
+        run = jnp.minimum(run, vals.shape[0] - 1)
+        return vals[run]
+
+    return _expand(values, bounds)[:total]
+
+
+def host_parallel_desummarize(
+    gfjs: GFJS, num_shards: int, *, decode: bool = False
+) -> Dict[str, np.ndarray]:
+    """Desummarize via ``num_shards`` concurrent row-range expansions.
+
+    The host-level analog of the mesh path: each worker runs
+    ``desummarize_range`` on its own slice (numpy releases the GIL inside
+    repeat/searchsorted), results concatenate in row order.
+    """
+    total = gfjs.join_size
+    num_shards = max(1, min(num_shards, max(total, 1)))
+    step = -(-max(total, 1) // num_shards)
+    ranges = [(lo, min(lo + step, total)) for lo in range(0, total, step)]
+    if not ranges:
+        return desummarize_range(gfjs, 0, 0, decode=decode)
+    with ThreadPoolExecutor(max_workers=num_shards) as ex:
+        parts = list(ex.map(
+            lambda r: desummarize_range(gfjs, r[0], r[1], decode=decode),
+            ranges))
+    return {v: np.concatenate([p[v] for p in parts])
+            for v in gfjs.column_order}

@@ -1,0 +1,94 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+A :class:`ShardingRules` maps each *logical* parameter axis name (the tuples
+declared through ``ParamCollector.declare``) to the mesh axes it shards
+over: ``None`` (replicate), a single mesh-axis name, or a tuple of them.
+``param_specs`` applies the rules to a model's logical-axes pytree, dropping
+mesh axes the current mesh doesn't have and never using one mesh axis twice
+in a single spec (a PartitionSpec invariant).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Mapping, Optional, Tuple, Union
+
+from jax.sharding import Mesh, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+
+def _as_tuple(spec: AxisSpec) -> Tuple[str, ...]:
+    if spec is None:
+        return ()
+    if isinstance(spec, str):
+        return (spec,)
+    return tuple(spec)
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping: logical axis name -> mesh axes (None/str/tuple)."""
+
+    rules: Mapping[str, AxisSpec] = field(default_factory=dict)
+
+    def with_overrides(self, **kw: AxisSpec) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(kw)
+        return ShardingRules(merged)
+
+    def mesh_axes(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        return _as_tuple(self.rules.get(logical))
+
+    def spec_for(self, axes: Tuple[Optional[str], ...], mesh: Mesh) -> P:
+        """PartitionSpec for one parameter's logical-axes tuple."""
+        used: set = set()
+        parts = []
+        for logical in axes:
+            cand = tuple(a for a in self.mesh_axes(logical)
+                         if a in mesh.axis_names and a not in used)
+            used.update(cand)
+            if not cand:
+                parts.append(None)
+            elif len(cand) == 1:
+                parts.append(cand[0])
+            else:
+                parts.append(cand)
+        while parts and parts[-1] is None:  # trailing Nones are implicit
+            parts.pop()
+        return P(*parts)
+
+
+# Megatron-style tensor parallelism over the 'model' axis: shard the
+# per-head/per-neuron dimensions, replicate d_model (activations stay
+# contracted over replicated embed).
+DEFAULT_RULES = ShardingRules({
+    "embed": None,
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head": None,
+    "ff": ("model",),
+    "moe_ff": ("model",),
+    "experts": None,
+    "expert_cap": None,
+    "layers": None,
+    "audio": None,
+})
+
+# Sequence-parallel FSDP preset (the dry-run's 'sp_fsdp' grid): params
+# additionally sharded over the data axes on their embed dimension;
+# activations get a (batch, seq->model) constraint via repro.dist.act_sharding.
+SP_FSDP_RULES = DEFAULT_RULES.with_overrides(embed=("data",))
+
+
+def param_specs(
+    logical_axes: Dict[str, Tuple[Optional[str], ...]],
+    mesh: Mesh,
+    rules: ShardingRules = DEFAULT_RULES,
+) -> Dict[str, P]:
+    """PartitionSpec per parameter name from its logical axes."""
+    return {name: rules.spec_for(axes, mesh)
+            for name, axes in logical_axes.items()}

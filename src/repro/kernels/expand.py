@@ -52,12 +52,15 @@ def _expand_kernel(start_block, bounds0, bounds1, payload0, payload1, out_ref):
 
     # comparison-matrix run search: idx[k] = #j with bounds[j] <= t[k]
     cmp = (bounds[None, :] <= t).astype(jnp.int32)             # [OT, 2RB]
-    idx = jnp.sum(cmp, axis=1, keepdims=True)                  # [OT, 1]
+    # pin the accumulator dtypes: x64 mode would promote these sums to int64,
+    # which the int32 output ref rejects
+    idx = jnp.sum(cmp, axis=1, keepdims=True, dtype=jnp.int32)  # [OT, 1]
     idx = jnp.minimum(idx, 2 * RB - 1)
 
     # select-and-sum payload pick (exact for any int payload)
     pick = (j == idx).astype(payload.dtype)                    # [OT, 2RB]
-    out_ref[...] = jnp.sum(pick * payload[None, :], axis=1)
+    out_ref[...] = jnp.sum(pick * payload[None, :], axis=1,
+                           dtype=out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("t_pad", "interpret"))

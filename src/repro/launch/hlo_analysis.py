@@ -179,8 +179,8 @@ def _op_bytes(op: "Op", comp: "Computation") -> float:
         # read + write the update region (the big operand is aliased)
         upd = _nbytes(comp.symtab.get(op.operands[1], ""))             if len(op.operands) > 1 else 0
         return 2.0 * upd + _nbytes(op.result_type) * 0.0 if upd else             2.0 * _nbytes(op.result_type)
-    if op.kind == "while":
-        return 0.0          # carry stays resident; body traffic is counted
+    if op.kind in ("while", "call"):
+        return 0.0          # pass-through: the callee's traffic is counted
     b = _nbytes(op.result_type)
     for o in op.operands:
         b += _nbytes(comp.symtab.get(o, ""))

@@ -10,6 +10,8 @@ and cyclic queries (triangles).
 
 from __future__ import annotations
 
+import hashlib
+import json
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
@@ -78,6 +80,27 @@ class JoinQuery:
             for v in set(qt.variables):
                 count[v] = count.get(v, 0) + 1
         return {v for v, c in count.items() if c >= 2}
+
+    def fingerprint(self) -> str:
+        """Canonical content hash of the join shape (cache key half).
+
+        Two queries that join the same table occurrences on the same
+        variables with the same projection hash identically, regardless of
+        the order tables were listed in, the query's display ``name``, or
+        the insertion order inside each ``var_map``.  An explicit projection
+        equal to all variables canonicalizes to the implicit one.
+        """
+        occurrences = sorted(
+            (qt.table, tuple(sorted(qt.var_map))) for qt in self.tables)
+        output = self.output
+        if output is not None and sorted(output) == sorted(self.variables):
+            output = None
+        canon = {
+            "tables": [[t, list(map(list, vm))] for t, vm in occurrences],
+            "output": sorted(output) if output is not None else None,
+        }
+        return hashlib.sha256(
+            json.dumps(canon, separators=(",", ":")).encode()).hexdigest()
 
     def is_cyclic(self) -> bool:
         """True iff the query hypergraph is cyclic (GYO reduction fails).

@@ -9,6 +9,7 @@ all filters are assumed to have been applied before a table reaches it.
 from __future__ import annotations
 
 import csv
+import hashlib
 import io
 import os
 from dataclasses import dataclass, field
@@ -98,6 +99,26 @@ class Table:
     def nbytes(self) -> int:
         return int(sum(v.nbytes for v in self.columns.values()))
 
+    def version(self) -> str:
+        """Content hash of the table (schema + data).
+
+        The compute-and-reuse cache keys summaries on (query fingerprint,
+        table versions): replacing a table in the catalog — even with one of
+        the same name and shape — invalidates every summary built on it.
+        Computed lazily and memoized; Table treats columns as immutable after
+        construction (mutate by building a new Table, as `take`/`concat` do).
+        """
+        cached = self.__dict__.get("_version")
+        if cached is None:
+            h = hashlib.sha256(self.name.encode())
+            for c in sorted(self.columns):
+                v = self.columns[c]
+                h.update(c.encode())
+                h.update(str(v.dtype).encode())
+                h.update(np.ascontiguousarray(v).tobytes())
+            cached = self.__dict__["_version"] = h.hexdigest()
+        return cached
+
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"Table({self.name!r}, rows={self.num_rows}, cols={self.column_names})"
 
@@ -127,3 +148,9 @@ class Catalog:
 
     def names(self) -> List[str]:
         return list(self.tables.keys())
+
+    def versions(self, names: Optional[Sequence[str]] = None) -> Dict[str, str]:
+        """Content versions of the named tables (default: all)."""
+        if names is None:
+            names = self.names()
+        return {n: self.tables[n].version() for n in names}

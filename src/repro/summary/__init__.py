@@ -1,0 +1,22 @@
+"""Summary-side query answering (DESIGN.md §9).
+
+The GFJS "entails all statistics necessary to materialize the join result"
+(paper Definition 1) — this package exploits that in the other direction:
+COUNT / SUM / MIN / MAX / AVG / GROUP BY / DISTINCT and predicate filters
+are answered directly from the RLE runs in O(num_runs), never paying the
+O(|Q|) desummarization the paper's storage scenario budgets for.
+
+* :mod:`repro.summary.algebra` — :class:`SummaryFrame`, the summary-side
+  relational algebra;
+* :mod:`repro.summary.cache` — :class:`SummaryCache`, the compute-and-reuse
+  LRU store keyed by (query fingerprint, table versions);
+* :mod:`repro.summary.service` — :class:`JoinService`, the front-end that
+  consults the cache and runs :class:`repro.core.api.GraphicalJoin` on miss.
+"""
+
+from repro.summary.algebra import SummaryFrame
+from repro.summary.cache import CacheStats, SummaryCache
+from repro.summary.service import JoinService, ServiceReply
+
+__all__ = ["SummaryFrame", "SummaryCache", "CacheStats", "JoinService",
+           "ServiceReply"]

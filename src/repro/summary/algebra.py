@@ -1,0 +1,319 @@
+"""GFJS relational algebra — aggregates and filters in O(num_runs).
+
+Every operator here reads the RLE runs of the summary, never the |Q| rows
+they encode.  The enabling facts (paper Definition 1 + DESIGN.md §9):
+
+* a level's run lengths sum to |Q|, so COUNT is one reduction;
+* consecutive levels *refine* each other (every parent boundary appears
+  among child boundaries), so any run maps to its enclosing run at a
+  shallower level with one ``searchsorted`` of start offsets — that is how
+  GROUP BY keys and filter masks travel between levels;
+* dictionary codes are assigned in sorted raw order, so MIN/MAX over codes
+  equal MIN/MAX over values.
+
+A :class:`SummaryFrame` pairs an (immutable) GFJS with per-level *effective*
+run weights.  ``filter`` zeroes the weights of runs whose codes fail a
+predicate and re-propagates down the level chain: children of a zeroed run
+die with it, and every shallower level's weights are recomputed as the
+segment-sum of its surviving deepest-level weights — so all levels keep
+counting the same filtered multiset.  Weighted reductions route through
+``repro.core.engine_jax.segment_weighted_sum`` (the Pallas ``mul_segsum``
+path), which is the jit-backed hot loop of the whole subsystem.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.gfjs import GFJS
+from repro.core.potentials import INT, _rank_rows
+
+Predicate = Union[Callable[[np.ndarray], np.ndarray], int, float, str,
+                  Sequence, set, frozenset]
+
+# (op, variable) pairs; "count" needs no variable
+AggSpec = Union[str, Tuple[str, str]]
+
+_NUMERIC_KINDS = ("i", "u", "f")
+
+
+def _run_values(gfjs: GFJS, var: str, codes: np.ndarray) -> np.ndarray:
+    vals = gfjs.domains[var].decode(codes)
+    if vals.dtype.kind not in _NUMERIC_KINDS:
+        raise TypeError(f"variable {var!r} has non-numeric domain "
+                        f"({vals.dtype}); only count/distinct apply")
+    return vals
+
+
+def _eval_predicate(pred: Predicate, values: np.ndarray) -> np.ndarray:
+    if callable(pred):
+        mask = np.asarray(pred(values), dtype=bool)
+        if mask.shape != values.shape:
+            raise ValueError("predicate must return one bool per run value")
+        return mask
+    if isinstance(pred, (list, tuple, set, frozenset)):
+        return np.isin(values, np.asarray(sorted(pred)))
+    return values == pred
+
+
+@dataclass
+class SummaryFrame:
+    """A GFJS plus per-level effective run weights (filters applied)."""
+
+    gfjs: GFJS
+    weights: List[np.ndarray]  # one int64 array per level, same runs as gfjs
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def of(gfjs: GFJS) -> "SummaryFrame":
+        return SummaryFrame(gfjs, [lvl.freq.astype(INT) for lvl in gfjs.levels])
+
+    # -- structure helpers -------------------------------------------------
+    def level_of(self, var: str) -> int:
+        for i, lvl in enumerate(self.gfjs.levels):
+            if var in lvl.vars:
+                return i
+        raise KeyError(f"variable {var!r} is not in the summary "
+                       f"(columns: {self.gfjs.column_order})")
+
+    def _starts(self, level: int) -> np.ndarray:
+        """Exclusive row-offset starts of a level's runs."""
+        lvl = self.gfjs.levels[level]
+        return self.gfjs.bounds(level) - lvl.freq
+
+    def _ancestors(self, deep: int, shallow: int) -> np.ndarray:
+        """Enclosing run index at ``shallow`` for every run of ``deep``.
+
+        Levels refine, so each deep run's start offset falls inside exactly
+        one shallow run: one binary search over the cached prefix bounds.
+        """
+        if deep == shallow:
+            return np.arange(self.gfjs.levels[deep].num_runs, dtype=INT)
+        return np.searchsorted(self.gfjs.bounds(shallow),
+                               self._starts(deep), side="right").astype(INT)
+
+    @property
+    def _deepest(self) -> int:
+        return len(self.gfjs.levels) - 1
+
+    def _codes_at(self, var: str, level: int) -> np.ndarray:
+        """``var``'s code per run of ``level`` (>= var's own level)."""
+        own = self.level_of(var)
+        codes = self.gfjs.levels[own].key_cols[var]
+        if own == level:
+            return codes
+        return codes[self._ancestors(level, own)]
+
+    # -- filtering ---------------------------------------------------------
+    def filter(self, preds: Optional[Mapping[str, Predicate]] = None,
+               **kw: Predicate) -> "SummaryFrame":
+        """Predicate pushdown: zero failing runs, re-propagate weights.
+
+        ``preds`` maps variable -> predicate (a callable over the run's raw
+        values, a scalar for equality, or a list/set for membership).  Cost
+        is O(runs log runs); the result is a new frame over the same GFJS.
+        """
+        merged: Dict[str, Predicate] = dict(preds or {})
+        merged.update(kw)
+        if not merged:
+            return self
+        deep = self._deepest
+        nd = self.gfjs.levels[deep].num_runs
+        keep = np.ones(nd, dtype=bool)
+        for var, pred in merged.items():
+            own = self.level_of(var)
+            codes = self.gfjs.levels[own].key_cols[var]
+            mask = _eval_predicate(pred, self.gfjs.domains[var].decode(codes))
+            keep &= mask if own == deep else mask[self._ancestors(deep, own)]
+        deep_w = np.where(keep, self.weights[deep], 0).astype(INT)
+        return self._with_deep_weights(deep_w)
+
+    def _with_deep_weights(self, deep_w: np.ndarray) -> "SummaryFrame":
+        """Rebuild every level's weights from new deepest-level weights."""
+        from repro.core.engine_jax import segment_weighted_sum
+        deep = self._deepest
+        ones = np.ones(len(deep_w), INT)
+        new: List[np.ndarray] = [None] * (deep + 1)  # type: ignore[list-item]
+        new[deep] = deep_w
+        for j in range(deep):
+            anc = self._ancestors(deep, j)
+            # anc is sorted ascending and dense over 0..runs_j-1
+            new[j] = segment_weighted_sum(
+                anc.astype(np.int32), deep_w, ones,
+                self.gfjs.levels[j].num_runs)
+        return SummaryFrame(self.gfjs, new)
+
+    # -- scalar aggregates -------------------------------------------------
+    def count(self) -> int:
+        """|Q| under the current filters — one O(runs) reduction.
+
+        Filter propagation keeps every level summing to the same filtered
+        total, so the root level (fewest runs) is the cheapest to read.
+        """
+        return int(self.weights[0].sum()) if self.gfjs.levels else 0
+
+    def sum(self, var: str):
+        """SUM(var) over the (filtered) join multiset."""
+        from repro.core.engine_jax import weighted_total
+        lv = self.level_of(var)
+        vals = _run_values(self.gfjs, var, self.gfjs.levels[lv].key_cols[var])
+        out = weighted_total(vals, self.weights[lv])
+        return float(out) if vals.dtype.kind == "f" else int(out)
+
+    def mean(self, var: str) -> Optional[float]:
+        c = self.count()
+        return None if c == 0 else self.sum(var) / c
+
+    def min(self, var: str):
+        return self._extreme(var, np.min)
+
+    def max(self, var: str):
+        return self._extreme(var, np.max)
+
+    def _extreme(self, var: str, reduce_fn):
+        lv = self.level_of(var)
+        codes = self.gfjs.levels[lv].key_cols[var]
+        live = self.weights[lv] > 0
+        if not live.any():
+            return None
+        # codes order == raw-value order (dictionary encode is sorted)
+        code = reduce_fn(codes[live])
+        return self.gfjs.domains[var].decode(np.asarray([code]))[0]
+
+    def distinct(self, var: str) -> np.ndarray:
+        """Sorted distinct raw values of ``var`` with surviving weight."""
+        lv = self.level_of(var)
+        codes = self.gfjs.levels[lv].key_cols[var]
+        live = np.unique(codes[self.weights[lv] > 0])
+        return self.gfjs.domains[var].decode(live)
+
+    def count_distinct(self, var: str) -> int:
+        lv = self.level_of(var)
+        codes = self.gfjs.levels[lv].key_cols[var]
+        return int(len(np.unique(codes[self.weights[lv] > 0])))
+
+    # -- grouped aggregates ------------------------------------------------
+    def group_by(self, keys: Union[str, Sequence[str]],
+                 **aggs: AggSpec) -> Dict[str, np.ndarray]:
+        """GROUP BY ``keys`` with named aggregates, all in O(runs log runs).
+
+            frame.group_by("A", n="count", total=("sum", "D"))
+            frame.group_by(["A", "B"], lo=("min", "D"), avg=("mean", "D"))
+
+        Returns a dict of aligned arrays: one decoded column per key plus
+        one per aggregate, rows sorted by key values.  Supported ops:
+        count, sum, mean, min, max.
+        """
+        from repro.core.engine_jax import segment_weighted_sum
+        if isinstance(keys, str):
+            keys = [keys]
+        if not keys:
+            raise ValueError("group_by needs at least one key variable")
+        if not aggs:
+            aggs = {"count": "count"}
+        specs: Dict[str, Tuple[str, Optional[str]]] = {}
+        for name, spec in aggs.items():
+            if spec == "count":
+                specs[name] = ("count", None)
+            else:
+                op, var = spec  # type: ignore[misc]
+                if op not in ("sum", "mean", "min", "max", "count"):
+                    raise ValueError(f"unknown aggregate op {op!r}")
+                specs[name] = (op, var)
+
+        involved = list(keys) + [v for _, v in specs.values() if v is not None]
+        work = max(self.level_of(v) for v in involved)
+        w = self.weights[work]
+        live = w > 0
+
+        key_codes = np.stack(
+            [self._codes_at(k, work)[live] for k in keys], axis=1)
+        w = w[live].astype(INT)
+        nlive = key_codes.shape[0]
+        empty: Dict[str, np.ndarray] = {}
+        if nlive == 0:
+            for k in keys:
+                empty[k] = self.gfjs.domains[k].decode(np.zeros(0, INT))
+            for name, (op, var) in specs.items():
+                # dtype-match the non-empty result so callers can concatenate
+                if op == "count":
+                    empty[name] = np.zeros(0, INT)
+                elif op == "mean":
+                    empty[name] = np.zeros(0, np.float64)
+                else:
+                    assert var is not None
+                    empty[name] = np.zeros(
+                        0, self.gfjs.domains[var].values.dtype)
+            return empty
+
+        sizes = [self.gfjs.domains[k].size for k in keys]
+        ranks, _ = _rank_rows(key_codes, sizes)
+        order = np.argsort(ranks, kind="stable")
+        sranks = ranks[order]
+        new = np.ones(nlive, dtype=bool)
+        new[1:] = sranks[1:] != sranks[:-1]
+        seg = (np.cumsum(new) - 1).astype(np.int32)
+        starts = np.flatnonzero(new)
+        ngroups = len(starts)
+        w_s = w[order]
+        sorted_codes = key_codes[order]
+
+        out: Dict[str, np.ndarray] = {}
+        for j, k in enumerate(keys):
+            out[k] = self.gfjs.domains[k].decode(sorted_codes[starts, j])
+
+        counts: Optional[np.ndarray] = None
+
+        def group_counts() -> np.ndarray:
+            nonlocal counts
+            if counts is None:
+                counts = segment_weighted_sum(
+                    seg, np.ones(nlive, INT), w_s, ngroups)
+            return counts
+
+        for name, (op, var) in specs.items():
+            if op == "count":
+                out[name] = group_counts().copy()
+                continue
+            assert var is not None
+            vals = _run_values(self.gfjs, var,
+                               self._codes_at(var, work)[live])[order]
+            if op in ("sum", "mean"):
+                sums = segment_weighted_sum(seg, vals, w_s, ngroups)
+                if op == "sum":
+                    out[name] = sums
+                else:
+                    out[name] = sums / group_counts()
+            else:  # min / max — ufunc scatter over runs, O(runs)
+                if op == "min":
+                    acc = np.full(ngroups, np.inf)
+                    np.minimum.at(acc, seg, vals)
+                else:
+                    acc = np.full(ngroups, -np.inf)
+                    np.maximum.at(acc, seg, vals)
+                if vals.dtype.kind in ("i", "u"):
+                    acc = acc.astype(vals.dtype)
+                out[name] = acc
+        return out
+
+    # -- interop -----------------------------------------------------------
+    def to_gfjs(self) -> GFJS:
+        """Materialize the filtered frame as a standalone GFJS.
+
+        Zero-weight runs are dropped; run boundaries are rebuilt from the
+        surviving weights.  The result desummarizes to exactly the filtered
+        join result (used by tests to cross-check filters row-by-row).
+        """
+        from repro.core.gfjs import LevelSummary
+        levels = []
+        for lvl, w in zip(self.gfjs.levels, self.weights):
+            live = w > 0
+            levels.append(LevelSummary(
+                lvl.vars,
+                {v: lvl.key_cols[v][live] for v in lvl.vars},
+                w[live].astype(INT)))
+        return GFJS(levels, list(self.gfjs.column_order), self.count(),
+                    self.gfjs.domains)

@@ -1,0 +1,133 @@
+"""Compute-and-reuse summary cache.
+
+The paper's 100X+ wins come from storing the (tiny) GFJS and answering
+later requests from it instead of re-joining.  :class:`SummaryCache` makes
+that a service-grade component:
+
+* keys are (canonical query fingerprint, content versions of every table
+  occurrence) — replacing a base table invalidates exactly the summaries
+  built on it, nothing else;
+* a byte budget bounds resident summaries, LRU order decides eviction;
+* evictions optionally *spill* to disk through the GFJS container format
+  (repro/core/storage.py), so a later request pays a load, not a re-join;
+* hit/miss/eviction counters feed the service's observability.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.gfjs import GFJS
+from repro.core.storage import load_gfjs, save_gfjs
+from repro.relational.query import JoinQuery
+from repro.relational.table import Catalog
+
+
+def cache_key(query: JoinQuery, catalog: Catalog) -> str:
+    """(query fingerprint, table versions) -> one stable hex key."""
+    h = hashlib.sha256(query.fingerprint().encode())
+    for name in sorted({qt.table for qt in query.tables}):
+        h.update(name.encode())
+        h.update(catalog[name].version().encode())
+    return h.hexdigest()
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0            # served from memory
+    disk_hits: int = 0       # served from spill
+    misses: int = 0
+    evictions: int = 0
+    spills: int = 0
+    puts: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+class SummaryCache:
+    """LRU GFJS store with a byte budget and optional disk spill."""
+
+    def __init__(self, byte_budget: int = 256 << 20,
+                 spill_dir: Optional[str] = None) -> None:
+        if byte_budget <= 0:
+            raise ValueError("byte_budget must be positive")
+        self.byte_budget = int(byte_budget)
+        self.spill_dir = spill_dir
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+        self._entries: "OrderedDict[str, GFJS]" = OrderedDict()
+        self._nbytes: Dict[str, int] = {}
+        self.stats = CacheStats()
+
+    # -- introspection -----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(self._nbytes.values())
+
+    def _spill_path(self, key: str) -> Optional[str]:
+        if self.spill_dir is None:
+            return None
+        return os.path.join(self.spill_dir, f"{key}.gfjs")
+
+    # -- core API ----------------------------------------------------------
+    def get(self, key: str) -> Optional[GFJS]:
+        """Memory first, then spill; None on a true miss."""
+        hit = self._entries.get(key)
+        if hit is not None:
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return hit
+        path = self._spill_path(key)
+        if path is not None and os.path.exists(path):
+            gfjs = load_gfjs(path)
+            self.stats.disk_hits += 1
+            self._admit(key, gfjs)   # promote back into memory
+            return gfjs
+        self.stats.misses += 1
+        return None
+
+    def put(self, key: str, gfjs: GFJS) -> None:
+        self.stats.puts += 1
+        self._admit(key, gfjs)
+
+    def _admit(self, key: str, gfjs: GFJS) -> None:
+        self._entries[key] = gfjs      # replace on re-put, insert otherwise
+        self._entries.move_to_end(key)
+        self._nbytes[key] = gfjs.nbytes()
+        self._shrink(keep=key)
+
+    def _shrink(self, keep: Optional[str] = None) -> None:
+        """Evict LRU entries until the byte budget holds.
+
+        The entry named by ``keep`` survives even if it alone exceeds the
+        budget (an oversized summary is still better served hot once).
+        """
+        while self.resident_bytes > self.byte_budget and len(self._entries) > 1:
+            victim = next(iter(self._entries))
+            if victim == keep:
+                # keep must stay; evict the next-oldest instead
+                it = iter(self._entries)
+                next(it)
+                victim = next(it)
+            gfjs = self._entries.pop(victim)
+            self._nbytes.pop(victim)
+            self.stats.evictions += 1
+            path = self._spill_path(victim)
+            if path is not None and not os.path.exists(path):
+                save_gfjs(gfjs, path)
+                self.stats.spills += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._nbytes.clear()

@@ -1,0 +1,120 @@
+"""JoinService — the query-answering front-end over summaries.
+
+One object owns a catalog, a :class:`SummaryCache`, and the decision of
+when to actually run the Graphical Join:
+
+    svc = JoinService(catalog, byte_budget=64 << 20, spill_dir=".../spill")
+    n    = svc.count(query)                              # O(runs) after 1st
+    tbl  = svc.group_by(query, "A", total=("sum", "D"))
+    r    = svc.frame(query)            # SummaryFrame + provenance/timings
+
+Cache hits skip ``build_model`` / ``build_generator`` / ``summarize``
+entirely — a request served from cache carries no build-phase timings,
+which is the service-level observable the tests assert on.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.api import GraphicalJoin
+from repro.relational.query import JoinQuery
+from repro.relational.table import Catalog
+from repro.summary.algebra import AggSpec, Predicate, SummaryFrame
+from repro.summary.cache import SummaryCache, cache_key
+
+
+@dataclass
+class ServiceReply:
+    """A frame plus how it was produced (the service's provenance record)."""
+
+    frame: SummaryFrame
+    source: str                      # "memory" | "disk" | "computed"
+    key: str
+    timings: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def cache_hit(self) -> bool:
+        return self.source != "computed"
+
+
+class JoinService:
+    """Answer join queries from cached summaries; compute-and-reuse on miss."""
+
+    def __init__(self, catalog: Catalog, *,
+                 cache: Optional[SummaryCache] = None,
+                 byte_budget: int = 256 << 20,
+                 spill_dir: Optional[str] = None) -> None:
+        self.catalog = catalog
+        self.cache = cache if cache is not None else SummaryCache(
+            byte_budget=byte_budget, spill_dir=spill_dir)
+        self.requests = 0
+
+    # -- summary acquisition ----------------------------------------------
+    def frame(self, query: JoinQuery) -> ServiceReply:
+        """The summary for ``query``: cache first, GraphicalJoin on miss."""
+        self.requests += 1
+        key = cache_key(query, self.catalog)
+        disk_before = self.cache.stats.disk_hits
+        t0 = time.perf_counter()
+        cached = self.cache.get(key)
+        lookup = time.perf_counter() - t0
+        if cached is not None:
+            source = "disk" if self.cache.stats.disk_hits > disk_before \
+                else "memory"
+            return ServiceReply(SummaryFrame.of(cached), source, key,
+                                {"cache_lookup": lookup})
+        gj = GraphicalJoin(self.catalog, query)
+        gfjs = gj.run()
+        self.cache.put(key, gfjs)
+        timings = dict(gj.timings)
+        timings["cache_lookup"] = lookup
+        return ServiceReply(SummaryFrame.of(gfjs), "computed", key, timings)
+
+    # -- one-shot aggregate API -------------------------------------------
+    def count(self, query: JoinQuery,
+              where: Optional[Mapping[str, Predicate]] = None) -> int:
+        return self._filtered(query, where).frame.count()
+
+    def sum(self, query: JoinQuery, var: str,
+            where: Optional[Mapping[str, Predicate]] = None):
+        return self._filtered(query, where).frame.sum(var)
+
+    def mean(self, query: JoinQuery, var: str,
+             where: Optional[Mapping[str, Predicate]] = None):
+        return self._filtered(query, where).frame.mean(var)
+
+    def min(self, query: JoinQuery, var: str,
+            where: Optional[Mapping[str, Predicate]] = None):
+        return self._filtered(query, where).frame.min(var)
+
+    def max(self, query: JoinQuery, var: str,
+            where: Optional[Mapping[str, Predicate]] = None):
+        return self._filtered(query, where).frame.max(var)
+
+    def distinct(self, query: JoinQuery, var: str) -> np.ndarray:
+        return self.frame(query).frame.distinct(var)
+
+    def group_by(self, query: JoinQuery, keys: Union[str, Sequence[str]],
+                 where: Optional[Mapping[str, Predicate]] = None,
+                 **aggs: AggSpec) -> Dict[str, np.ndarray]:
+        return self._filtered(query, where).frame.group_by(keys, **aggs)
+
+    def _filtered(self, query: JoinQuery,
+                  where: Optional[Mapping[str, Predicate]]) -> ServiceReply:
+        reply = self.frame(query)
+        if where:
+            reply.frame = reply.frame.filter(where)
+        return reply
+
+    # -- observability -----------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        out = self.cache.stats.as_dict()
+        out["requests"] = self.requests
+        out["resident_bytes"] = self.cache.resident_bytes
+        out["resident_entries"] = len(self.cache)
+        return out

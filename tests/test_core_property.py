@@ -15,6 +15,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; absent in minimal envs
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core.api import GraphicalJoin

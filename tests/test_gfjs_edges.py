@@ -1,0 +1,156 @@
+"""Edge cases: desummarize_range / row_at boundaries, empty-psi lookup
+regression, and the storage codec fallback."""
+
+import numpy as np
+import pytest
+
+from repro.core.api import GraphicalJoin
+from repro.core.elimination import Psi
+from repro.core.gfjs import (_lookup_groups, desummarize, desummarize_range,
+                             generate_gfjs, row_at)
+from repro.core.potentials import INT
+from repro.relational.synth import figure1, lastfm_like
+from repro.relational.query import JoinQuery
+from repro.relational.table import Catalog, Table
+
+
+@pytest.fixture(scope="module")
+def fig1_gfjs():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query)
+    gfjs = gj.run()
+    return gfjs, desummarize(gfjs, decode=False)
+
+
+# ---------------------------------------------------------------------------
+# desummarize_range / row_at
+# ---------------------------------------------------------------------------
+
+def test_range_empty_when_lo_equals_hi(fig1_gfjs):
+    gfjs, _ = fig1_gfjs
+    for lo in (0, 1, gfjs.join_size // 2, gfjs.join_size):
+        part = desummarize_range(gfjs, lo, lo, decode=False)
+        assert all(len(part[v]) == 0 for v in gfjs.column_order)
+
+
+def test_range_inverted_bounds_are_empty(fig1_gfjs):
+    gfjs, _ = fig1_gfjs
+    part = desummarize_range(gfjs, 10, 3, decode=False)
+    assert all(len(v) == 0 for v in part.values())
+
+
+def test_range_full_equals_desummarize(fig1_gfjs):
+    gfjs, full = fig1_gfjs
+    part = desummarize_range(gfjs, 0, gfjs.join_size, decode=False)
+    for v in gfjs.column_order:
+        assert np.array_equal(part[v], full[v])
+    # out-of-bounds clamp
+    part = desummarize_range(gfjs, -5, gfjs.join_size + 100, decode=False)
+    for v in gfjs.column_order:
+        assert np.array_equal(part[v], full[v])
+
+
+def test_range_aligned_on_run_boundaries(fig1_gfjs):
+    gfjs, full = fig1_gfjs
+    # every prefix-sum boundary of every level, as both lo and hi
+    cuts = sorted({0, gfjs.join_size}
+                  | {int(b) for li in range(len(gfjs.levels))
+                     for b in gfjs.bounds(li)})
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        part = desummarize_range(gfjs, lo, hi, decode=False)
+        for v in gfjs.column_order:
+            assert np.array_equal(part[v], full[v][lo:hi]), (lo, hi, v)
+
+
+def test_range_single_rows_match_row_at(fig1_gfjs):
+    gfjs, full = fig1_gfjs
+    for t in range(gfjs.join_size):
+        part = desummarize_range(gfjs, t, t + 1, decode=False)
+        row = row_at(gfjs, t, decode=False)
+        for v in gfjs.column_order:
+            assert part[v][0] == full[v][t] == row[v]
+    with pytest.raises(IndexError):
+        row_at(gfjs, gfjs.join_size)
+    with pytest.raises(IndexError):
+        row_at(gfjs, -1)
+
+
+# ---------------------------------------------------------------------------
+# empty-psi regression (_lookup_groups on zero-group conditional factors)
+# ---------------------------------------------------------------------------
+
+def _empty_psi() -> Psi:
+    return Psi(child="B", parents=("A",),
+               parent_keys=np.zeros((0, 1), INT),
+               start=np.zeros(0, INT), count=np.zeros(0, INT),
+               child_codes=np.zeros(0, INT), bucket=np.zeros(0, INT),
+               fac=np.zeros(0, INT), parent_sizes=(4,), child_size=4)
+
+
+def test_lookup_groups_empty_psi_returns_misses():
+    frontier = np.asarray([[0], [1], [3]], dtype=INT)
+    got = _lookup_groups(frontier, _empty_psi())
+    assert got.tolist() == [-1, -1, -1]
+
+
+def test_lookup_groups_empty_frontier_and_psi():
+    got = _lookup_groups(np.zeros((0, 1), INT), _empty_psi())
+    assert got.shape == (0,)
+
+
+def test_generate_gfjs_with_empty_join_branch():
+    """A table with no rows empties the join; generation must not crash."""
+    cat = Catalog.of(
+        Table("t0", {"x0": np.asarray([0, 1, 2]), "x1": np.asarray([0, 1, 2])}),
+        Table("t1", {"x0": np.zeros(0, np.int64), "x1": np.zeros(0, np.int64)}))
+    query = JoinQuery.of("empty", [("t0", {"x0": "A", "x1": "B"}),
+                                   ("t1", {"x0": "B", "x1": "C"})])
+    gj = GraphicalJoin(cat, query)
+    gfjs = gj.run()
+    assert gfjs.join_size == 0
+    flat = desummarize(gfjs, decode=False)
+    assert all(len(flat[v]) == 0 for v in gfjs.column_order)
+
+
+# ---------------------------------------------------------------------------
+# storage codec
+# ---------------------------------------------------------------------------
+
+def test_zlib_codec_roundtrip(tmp_path):
+    from repro.core.storage import load_gfjs, save_gfjs
+    cat, query = figure1()
+    gfjs = GraphicalJoin(cat, query).run()
+    p = str(tmp_path / "fig1.zlib.gfjs")
+    n = save_gfjs(gfjs, p, codec="zlib")
+    assert n > 0
+    back = load_gfjs(p)
+    assert back.join_size == gfjs.join_size
+    for a, b in zip(gfjs.levels, back.levels):
+        assert np.array_equal(a.freq, b.freq)
+        for v in a.vars:
+            assert np.array_equal(a.key_cols[v], b.key_cols[v])
+
+
+def test_default_codec_always_loadable(tmp_path):
+    """Whatever the environment, save with defaults must load back."""
+    from repro.core.storage import default_codec, load_gfjs, save_gfjs
+    cat, qs = lastfm_like(n_users=40, n_artists=30, artists_per_user=3,
+                          friends_per_user=2)
+    gfjs = GraphicalJoin(cat, qs["lastfm_A1"]).run()
+    p = str(tmp_path / "a1.gfjs")
+    save_gfjs(gfjs, p)
+    assert default_codec() in ("zstd", "zlib")
+    back = load_gfjs(p)
+    assert back.column_order == gfjs.column_order
+    assert back.join_size == gfjs.join_size
+
+
+def test_compress_roundtrip_helpers():
+    from repro.core.storage import compress_bytes, decompress_bytes
+    raw = b"graphical join summary" * 100
+    codec, payload = compress_bytes(raw)
+    assert len(payload) < len(raw)
+    assert decompress_bytes(payload, codec) == raw
+    codec2, payload2 = compress_bytes(raw, codec="zlib")
+    assert codec2 == "zlib"
+    assert decompress_bytes(payload2, "zlib") == raw

@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; absent in minimal envs
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import (QueryGraph, is_chordal, junction_tree,

@@ -1,0 +1,192 @@
+"""Summary-side algebra vs the oracle join — the subsystem's ground truth.
+
+Every aggregate the SummaryFrame computes in O(runs) must equal the same
+aggregate over the fully materialized (oracle) join result, on randomized
+acyclic AND cyclic queries.  Randomization uses plain numpy RNG so these
+run in minimal environments (no hypothesis dependency).
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core.api import GraphicalJoin
+from repro.core.gfjs import desummarize
+from repro.core.oracle import oracle_join
+from repro.relational.query import JoinQuery
+from repro.relational.synth import figure1, lastfm_like
+from repro.relational.table import Catalog, Table
+from repro.summary.algebra import SummaryFrame
+
+SHAPES = {
+    "chain3": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+               ("t2", {"x0": "C", "x1": "D"})],
+    "star3": [("t0", {"x0": "M", "x1": "A"}), ("t1", {"x0": "M", "x1": "B"}),
+              ("t2", {"x0": "M", "x1": "C"})],
+    "selfjoin": [("t0", {"x0": "A", "x1": "B"}), ("t0", {"x0": "B", "x1": "C"})],
+    "triangle": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+                 ("t2", {"x0": "C", "x1": "A"})],
+    "cycle4": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+               ("t2", {"x0": "C", "x1": "D"}), ("t3", {"x0": "D", "x1": "A"})],
+}
+
+
+def random_instance(shape: str, seed: int):
+    spec = SHAPES[shape]
+    rng = np.random.default_rng(seed)
+    domain = int(rng.integers(1, 6))
+    cat = Catalog()
+    for tname, vm in spec:
+        if tname in cat:
+            continue
+        nrows = int(rng.integers(0, 25))
+        cols = {c: rng.integers(0, domain, nrows).astype(np.int64)
+                for c in vm.keys()}
+        cat.add(Table(tname, cols))
+    return cat, JoinQuery.of(shape, spec)
+
+
+def oracle_raw(gj: GraphicalJoin):
+    oc = oracle_join(gj.enc)
+    return {v: gj.enc.domains[v].decode(c) for v, c in oc.items()}
+
+
+CASES = [(s, seed) for s in SHAPES for seed in range(6)]
+
+
+@pytest.mark.parametrize("shape,seed", CASES)
+def test_scalar_aggregates_match_oracle(shape, seed):
+    cat, query = random_instance(shape, seed)
+    gj = GraphicalJoin(cat, query)
+    frame = SummaryFrame.of(gj.run())
+    raw = oracle_raw(gj)
+    some_var = gj.enc.query.variables[0]
+    n = len(raw[some_var])
+
+    assert frame.count() == n
+    for v in frame.gfjs.column_order:
+        if n == 0:
+            assert frame.sum(v) == 0
+            assert frame.mean(v) is None
+            assert frame.min(v) is None and frame.max(v) is None
+            assert frame.count_distinct(v) == 0
+        else:
+            assert frame.sum(v) == int(raw[v].sum())
+            assert frame.mean(v) == pytest.approx(raw[v].mean())
+            assert frame.min(v) == raw[v].min()
+            assert frame.max(v) == raw[v].max()
+            assert frame.count_distinct(v) == len(np.unique(raw[v]))
+            assert np.array_equal(frame.distinct(v), np.unique(raw[v]))
+
+
+@pytest.mark.parametrize("shape,seed", CASES)
+def test_group_by_matches_oracle(shape, seed):
+    cat, query = random_instance(shape, seed)
+    gj = GraphicalJoin(cat, query)
+    frame = SummaryFrame.of(gj.run())
+    raw = oracle_raw(gj)
+    cols = frame.gfjs.column_order
+    key, val = cols[0], cols[-1]
+
+    got = frame.group_by(key, n="count", total=("sum", val),
+                         lo=("min", val), hi=("max", val), avg=("mean", val))
+    cnts = collections.Counter(raw[key])
+    sums = collections.defaultdict(int)
+    los, his = {}, {}
+    for k, x in zip(raw[key], raw[val]):
+        sums[k] += x
+        los[k] = min(los.get(k, x), x)
+        his[k] = max(his.get(k, x), x)
+    ks = sorted(cnts)
+    assert list(got[key]) == ks
+    assert [int(x) for x in got["n"]] == [cnts[k] for k in ks]
+    assert [int(x) for x in got["total"]] == [sums[k] for k in ks]
+    assert [int(x) for x in got["lo"]] == [los[k] for k in ks]
+    assert [int(x) for x in got["hi"]] == [his[k] for k in ks]
+    assert np.allclose(got["avg"], [sums[k] / cnts[k] for k in ks])
+
+
+@pytest.mark.parametrize("shape,seed", CASES)
+def test_multi_key_group_by_matches_oracle(shape, seed):
+    cat, query = random_instance(shape, seed)
+    gj = GraphicalJoin(cat, query)
+    frame = SummaryFrame.of(gj.run())
+    raw = oracle_raw(gj)
+    cols = frame.gfjs.column_order
+    if len(cols) < 2:
+        pytest.skip("needs two variables")
+    k1, k2 = cols[0], cols[1]
+    got = frame.group_by([k1, k2], n="count")
+    want = collections.Counter(zip(raw[k1], raw[k2]))
+    pairs = list(zip(got[k1], got[k2]))
+    assert pairs == sorted(want)
+    assert {p: int(c) for p, c in zip(pairs, got["n"])} == dict(want)
+
+
+@pytest.mark.parametrize("shape,seed", CASES)
+def test_filter_pushdown_matches_oracle(shape, seed):
+    cat, query = random_instance(shape, seed)
+    gj = GraphicalJoin(cat, query)
+    frame = SummaryFrame.of(gj.run())
+    raw = oracle_raw(gj)
+    cols = frame.gfjs.column_order
+    some_var = cols[0]
+    n = len(raw[some_var])
+
+    # equality predicate on the deepest variable, range on the shallowest
+    deep_var = cols[-1]
+    rng = np.random.default_rng(seed + 1000)
+    pivot = int(rng.integers(0, 5))
+    filtered = frame.filter({deep_var: pivot}, **{some_var: lambda v: v >= 1})
+    mask = np.ones(n, dtype=bool)
+    mask &= raw[deep_var] == pivot
+    mask &= raw[some_var] >= 1
+
+    assert filtered.count() == int(mask.sum())
+    if mask.any():
+        mid = cols[len(cols) // 2]
+        assert filtered.sum(mid) == int(raw[mid][mask].sum())
+        g = filtered.group_by(mid, n="count")
+        want = collections.Counter(raw[mid][mask])
+        assert {k: int(c) for k, c in zip(g[mid], g["n"])} == dict(want)
+
+    # filters compose: two-step == one-step
+    two_step = frame.filter({deep_var: pivot}).filter(
+        **{some_var: lambda v: v >= 1})
+    assert two_step.count() == filtered.count()
+
+    # the filtered frame re-materializes to exactly the filtered multiset
+    flat = desummarize(filtered.to_gfjs())
+    assert len(flat[some_var]) == int(mask.sum())
+    got_rows = sorted(zip(*(flat[v] for v in cols)))
+    want_rows = sorted(zip(*(raw[v][mask] for v in cols)))
+    assert got_rows == want_rows
+
+
+def test_weights_stay_level_consistent_after_filter():
+    cat, qs = lastfm_like(n_users=50, n_artists=40, artists_per_user=4,
+                          friends_per_user=3)
+    gj = GraphicalJoin(cat, qs["lastfm_A1"])
+    frame = SummaryFrame.of(gj.run()).filter(U2=lambda u: u % 3 == 0)
+    # every level's weights must sum to the same filtered count
+    totals = {int(w.sum()) for w in frame.weights}
+    assert totals == {frame.count()}
+
+
+def test_string_domains_reject_numeric_aggregates():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query)
+    frame = SummaryFrame.of(gj.run())
+    with pytest.raises(TypeError):
+        frame.sum("A")
+    # but counting and membership filters work on strings
+    assert frame.count() == 32
+    assert frame.filter(A=["a3"]).count() == frame.group_by("A")["count"][-1]
+
+
+def test_unknown_variable_raises():
+    cat, query = figure1()
+    frame = SummaryFrame.of(GraphicalJoin(cat, query).run())
+    with pytest.raises(KeyError):
+        frame.count_distinct("Z")
