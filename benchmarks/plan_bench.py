@@ -1,0 +1,103 @@
+"""Order-search micro-benchmark + planner smoke check.
+
+Two modes:
+
+* ``python -m benchmarks.plan_bench``          — time `plan_query` on every
+  benchmark workload; print chosen vs. min-fill orders and estimated costs
+  (the planner must stay a sub-millisecond-per-variable affair: it runs on
+  statistics, never on data).
+* ``python -m benchmarks.plan_bench --smoke``  — CI gate: plan the
+  quickstart (Figure 1) query + one skewed cyclic query, print `explain()`,
+  and FAIL (exit 1) if the search emits an inadmissible order, a candidate
+  disagrees on join size, or planning takes absurdly long.  Planner
+  regressions fail fast here, before any slow benchmark runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import csv_line
+from repro.core.api import GraphicalJoin
+from repro.plan.search import plan_query
+from repro.relational.encoding import encode_query
+from repro.relational.synth import figure1, lastfm_like
+
+SEARCH_BUDGET_S = 2.0      # smoke ceiling for one plan_query call
+
+
+def bench_search() -> None:
+    from benchmarks.common import workloads
+    print("name,us_per_call,derived")
+    for w in workloads():
+        enc = encode_query(w.catalog, w.query)
+        t0 = time.perf_counter()
+        logical, phys = plan_query(enc)
+        dt = time.perf_counter() - t0
+        mf = next((c for c in phys.alternatives if c.source == "min_fill"),
+                  None)
+        derived = (f"chosen={phys.source};order={'|'.join(phys.order)};"
+                   f"est={phys.est_cost:.3g}")
+        if mf is not None:
+            derived += f";minfill_est={mf.cost:.3g}"
+        print(csv_line(f"plan_search/{w.name}", dt * 1e6, derived), flush=True)
+
+
+def smoke() -> int:
+    failures = []
+
+    def check(name, catalog, query):
+        enc = encode_query(catalog, query)
+        t0 = time.perf_counter()
+        logical, phys = plan_query(enc)
+        dt = time.perf_counter() - t0
+        print(f"== {name} (search {dt * 1e3:.2f}ms) ==")
+        if dt > SEARCH_BUDGET_S:
+            failures.append(f"{name}: search took {dt:.2f}s")
+        out = set(query.output_variables)
+        sizes = set()
+        for cand in phys.alternatives:
+            if sorted(cand.order) != sorted(query.variables):
+                failures.append(f"{name}: {cand.source} order not a permutation")
+            if cand.order and cand.order[-1] not in out:
+                failures.append(f"{name}: {cand.source} root is projected out")
+            gj = GraphicalJoin(catalog, query,
+                               elimination_order=list(cand.order))
+            sizes.add(gj.join_size())
+        if len(sizes) > 1:
+            failures.append(f"{name}: candidates disagree on join size {sizes}")
+        gj = GraphicalJoin(catalog, query)
+        gj.run()
+        print(gj.explain())
+        print()
+
+    cat, query = figure1()
+    check("quickstart/figure1", cat, query)
+
+    cat, qs = lastfm_like(n_users=300, n_artists=250, artists_per_user=8,
+                          friends_per_user=4, alpha=1.4, seed=0)
+    check("skewed/lastfm_cyc", cat, qs["lastfm_cyc"])
+
+    if failures:
+        print("PLANNER SMOKE FAILURES:")
+        for f in failures:
+            print(" -", f)
+        return 1
+    print("planner smoke: OK")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate instead of the full sweep")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    bench_search()
+
+
+if __name__ == "__main__":
+    main()

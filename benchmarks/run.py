@@ -17,7 +17,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single section (table1..table6, "
-                         "sensitivity, summary, kernels)")
+                         "sensitivity, planner, summary, kernels)")
     args = ap.parse_args()
 
     from benchmarks import tables
@@ -32,6 +32,7 @@ def main() -> None:
         "table5": tables.bench_table5,
         "table6": tables.bench_table6,
         "sensitivity": tables.bench_sensitivity,
+        "planner": tables.bench_planner,
         "summary": lambda tmp: bench_summary(),
     }
 

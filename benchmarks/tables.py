@@ -203,6 +203,46 @@ def bench_table6(tmpdir: str) -> List[str]:
     return out
 
 
+def bench_planner(tmpdir: str) -> List[str]:
+    """Planner-chosen vs. min-fill order, side by side.
+
+    Runs the full pipeline twice per query — once with the cost-based
+    search (the default) and once pinned to lone min-fill — so the perf
+    trajectory shows what the cost model buys.  ``lastfm_hot`` is the
+    skew-stress case: hotter artist popularity (alpha=1.4) makes the
+    min-fill-preferred artist-first elimination pay a quadratic
+    pairs-sharing-an-artist product that the degree-vector cost model
+    sees and sidesteps.
+    """
+    out = []
+    cases = [(w.name, w.catalog, w.query) for w in workloads()
+             if w.name in ("lastfm_cyc", "lastfm_A2", "job_D")]
+    s = float(os.environ.get("BENCH_SCALE", "1.0"))
+    hot_cat, hot_qs = lastfm_like(
+        n_users=int(1500 * s), n_artists=int(1200 * s), artists_per_user=10,
+        friends_per_user=4, alpha=1.4, seed=0)
+    cases.append(("lastfm_hot", hot_cat, hot_qs["lastfm_cyc"]))
+
+    for name, cat, query in cases:
+        times: Dict[str, float] = {}
+        orders: Dict[str, str] = {}
+        for mode in ("cost", "min_fill"):
+            gj = GraphicalJoin(cat, query, planner=mode)
+            gfjs, t = timer(gj.run)
+            times[mode] = t
+            plan = gj.plan()
+            orders[mode] = f"{plan.source}:{'|'.join(plan.order)}"
+        speedup = times["min_fill"] / max(times["cost"], 1e-9)
+        out.append(csv_line(
+            f"planner/{name}/cost", times["cost"] * 1e6,
+            f"seconds={times['cost']:.3f};{orders['cost']}"))
+        out.append(csv_line(
+            f"planner/{name}/min_fill", times["min_fill"] * 1e6,
+            f"seconds={times['min_fill']:.3f};{orders['min_fill']};"
+            f"planner_speedup={speedup:.2f}x"))
+    return out
+
+
 def bench_sensitivity(tmpdir: str) -> List[str]:
     """Figs 11-14: UIR (A2) and redundancy (A1_dup) sensitivity."""
     out = []

@@ -36,6 +36,12 @@ def main() -> None:
     print("\nphase timings:", {k: f"{v * 1e3:.2f}ms"
                                for k, v in gj.timings.items()})
 
+    # the plan behind the run: cost-based order search over candidates
+    # (min-fill included), per-step estimates, chosen backends
+    planned = GraphicalJoin(catalog, query)   # no forced order: search runs
+    planned.run()
+    print("\n" + planned.explain())
+
 
 if __name__ == "__main__":
     main()

@@ -1,6 +1,11 @@
 """Batched serving example: prefill a prompt batch, decode with the KV cache.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3_8b]
+Optionally augments each request with relational features pulled through the
+Graphical-Join summary service under a pre-compiled physical plan
+(``--features``): the steady state per request is a summary-cache hit plus
+an O(runs) group-by — no joins, no re-planning.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3_8b] [--features]
 """
 
 import argparse
@@ -11,7 +16,22 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models.model import LM
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import (RelationalFeatureProvider, ServeConfig,
+                                ServeEngine)
+
+
+def make_feature_provider() -> RelationalFeatureProvider:
+    """GJ-backed per-user features (listen counts over a friend join)."""
+    from repro.relational.synth import lastfm_like
+    from repro.summary.service import JoinService
+    cat, qs = lastfm_like(n_users=200, n_artists=150, artists_per_user=6,
+                          friends_per_user=3)
+    svc = JoinService(cat)
+    prov = RelationalFeatureProvider(
+        svc, qs["lastfm_A1"], key_var="U1", aggs={"n_paths": "count"})
+    print("serve plan:", " -> ".join(prov.plan.order),
+          f"(chosen={prov.plan.source})")
+    return prov
 
 
 def main() -> None:
@@ -20,6 +40,8 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--features", action="store_true",
+                    help="attach GJ relational features to each request")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
@@ -34,9 +56,16 @@ def main() -> None:
             rng.normal(size=(args.batch, cfg.vlm.num_image_tokens,
                              cfg.vlm.vision_dim)), jnp.float32)
 
+    provider = make_feature_provider() if args.features else None
     engine = ServeEngine(lm, params,
                          ServeConfig(max_seq=args.prompt_len + args.max_new,
-                                     temperature=0.8))
+                                     temperature=0.8),
+                         feature_provider=provider)
+    if provider is not None:
+        user_ids = rng.integers(0, 200, args.batch)
+        enriched = engine.attach_features(batch, user_ids)
+        print("request features:", np.asarray(enriched["features"]).ravel())
+
     out = engine.generate(batch, max_new=args.max_new, seed=1)
     for i, row in enumerate(out):
         print(f"request {i}: {row.tolist()}")

@@ -1,11 +1,20 @@
-"""Public Graphical Join API — the paper's Figure 4 pipeline as one object.
+"""Public Graphical Join API — a thin facade over plan + execute.
 
     gj = GraphicalJoin(catalog, query)
     gj.build_model()        # qualitative + quantitative learning   (O(N))
+    plan = gj.plan()        # cost-based elimination-order search
     gj.build_generator()    # Algorithm 2 (+ Algorithm 1 on cycles) (O(M^rho))
     gfjs = gj.summarize()   # Algorithms 3/4                        (O(M^rho))
+    print(gj.explain())     # order, per-step estimates, backends, timings
     gj.store(path); gfjs = gj.load(path)          # compute-and-reuse
     result = gj.desummarize(gfjs)                 # O(|Q|)
+
+The pipeline itself lives in :mod:`repro.plan`: ``plan_query`` searches
+elimination orders with a statistics-driven cost model (min-fill is one
+candidate among several) and pins the physical choices; ``Executor`` runs
+the phases.  This class keeps the paper-shaped surface — and the
+``gj.timings`` / ``gj.enc`` / ``gj.generator`` attributes the tests and
+benchmarks read — stable across that refactor.
 
 Each phase records wall time into ``gj.timings`` — benchmark Table 6 (PGM
 build share) reads from there.
@@ -14,22 +23,30 @@ build share) reads from there.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.elimination import Generator, build_generator
-from repro.core.gfjs import (GFJS, desummarize, desummarize_range,
-                             generate_gfjs, stream_desummarize)
+from repro.core.elimination import Generator
+from repro.core.gfjs import GFJS, desummarize_range, stream_desummarize
 from repro.core.storage import load_gfjs, save_gfjs
-from repro.relational.encoding import EncodedQuery, encode_query
+from repro.relational.encoding import EncodedQuery
 from repro.relational.query import JoinQuery
 from repro.relational.table import Catalog
 
+# NOTE: repro.plan is imported lazily inside __init__ — the plan package
+# consumes repro.core.{graph,potentials,elimination}, so a module-level
+# import here would close an import cycle through repro.core.__init__.
+
 
 class GraphicalJoin:
-    """End-to-end driver for the Graphical Join."""
+    """End-to-end driver for the Graphical Join.
+
+    ``elimination_order`` forces a specific order (bypassing the search);
+    ``planner`` selects the search mode ("cost" — the default candidate
+    search, or "min_fill" — the paper's lone heuristic); ``plan`` injects a
+    pre-compiled :class:`PhysicalPlan` (the `JoinService` serve path).
+    """
 
     def __init__(
         self,
@@ -38,42 +55,83 @@ class GraphicalJoin:
         *,
         elimination_order: Optional[Sequence[str]] = None,
         early_projection: bool = True,
+        planner: str = "cost",
+        plan: Optional["PhysicalPlan"] = None,
     ) -> None:
+        from repro.plan.executor import Executor
         self.catalog = catalog
         self.query = query
-        self.elimination_order = elimination_order
-        self.early_projection = early_projection
-        self.timings: Dict[str, float] = {}
-        self.enc: Optional[EncodedQuery] = None
-        self.generator: Optional[Generator] = None
+        self._executor = Executor(
+            catalog, query,
+            elimination_order=elimination_order,
+            early_projection=early_projection,
+            planner=planner,
+            plan=plan,
+        )
+
+    # -- executor state, exposed under the historical names ----------------
+    @property
+    def timings(self) -> Dict[str, float]:
+        return self._executor.timings
+
+    @property
+    def enc(self) -> Optional[EncodedQuery]:
+        return self._executor.enc
+
+    @property
+    def generator(self) -> Optional[Generator]:
+        return self._executor.generator
+
+    # configuration reads/writes pass through to the executor so that
+    # post-construction mutation (the historical pattern
+    # ``gj.elimination_order = [...]; gj.build_generator()``) stays live —
+    # a pending plan is discarded so the next phase re-plans
+    @property
+    def elimination_order(self) -> Optional[Sequence[str]]:
+        return self._executor.elimination_order
+
+    @elimination_order.setter
+    def elimination_order(self, value: Optional[Sequence[str]]) -> None:
+        self._executor.elimination_order = value
+        self._invalidate_plan()
+
+    @property
+    def early_projection(self) -> bool:
+        return self._executor.early_projection
+
+    @early_projection.setter
+    def early_projection(self, value: bool) -> None:
+        self._executor.early_projection = value
+        self._invalidate_plan()
+
+    def _invalidate_plan(self) -> None:
+        ex = self._executor
+        if not ex._forced_plan:
+            ex.plan = None
+            ex.logical = None
+            ex.generator = None
 
     # -- phases ------------------------------------------------------------
     def build_model(self) -> "GraphicalJoin":
-        """Qualitative (graph) + quantitative (potentials at encode time)."""
-        t0 = time.perf_counter()
-        self.enc = encode_query(self.catalog, self.query)
-        self.timings["build_model"] = time.perf_counter() - t0
+        """Qualitative (graph) + quantitative (potentials at encode time).
+
+        Calling this again re-encodes and clears every downstream product
+        (plan, generator, timings): a re-planned query never silently
+        reuses a generator built on stale encodings.
+        """
+        self._executor.build_model()
         return self
 
+    def plan(self) -> "PhysicalPlan":
+        """The physical plan (computed on first use, then pinned)."""
+        return self._executor.build_plan()
+
     def build_generator(self) -> "GraphicalJoin":
-        if self.enc is None:
-            self.build_model()
-        t0 = time.perf_counter()
-        self.generator = build_generator(
-            self.enc,
-            elimination_order=self.elimination_order,
-            early_projection=self.early_projection,
-        )
-        self.timings["build_generator"] = time.perf_counter() - t0
+        self._executor.build_generator()
         return self
 
     def summarize(self) -> GFJS:
-        if self.generator is None:
-            self.build_generator()
-        t0 = time.perf_counter()
-        gfjs = generate_gfjs(self.generator, self.enc.domains)
-        self.timings["summarize"] = time.perf_counter() - t0
-        return gfjs
+        return self._executor.summarize()
 
     # -- convenience -------------------------------------------------------
     def join_size(self) -> int:
@@ -83,8 +141,12 @@ class GraphicalJoin:
         return self.generator.join_size
 
     def run(self) -> GFJS:
-        """build_model -> build_generator -> summarize."""
+        """build_model -> plan -> build_generator -> summarize."""
         return self.summarize()
+
+    def explain(self) -> str:
+        """Render the plan, annotated with any timings measured so far."""
+        return self._executor.explain()
 
     def aggregate(self, op: str, var: Optional[str] = None, *,
                   by: Optional[Sequence[str]] = None,
@@ -126,10 +188,7 @@ class GraphicalJoin:
         return out
 
     def desummarize(self, gfjs: GFJS, *, decode: bool = True) -> Dict[str, np.ndarray]:
-        t0 = time.perf_counter()
-        out = desummarize(gfjs, decode=decode)
-        self.timings["desummarize"] = time.perf_counter() - t0
-        return out
+        return self._executor.desummarize(gfjs, decode=decode)
 
     def desummarize_range(self, gfjs: GFJS, lo: int, hi: int, *, decode: bool = True):
         return desummarize_range(gfjs, lo, hi, decode=decode)

@@ -118,8 +118,14 @@ def build_generator(
     *,
     elimination_order: Optional[Sequence[str]] = None,
     early_projection: bool = True,
+    factors: Optional[List[Factor]] = None,
 ) -> Generator:
-    """Run Algorithm 2 over the (possibly cyclic) query graph."""
+    """Run Algorithm 2 over the (possibly cyclic) query graph.
+
+    ``factors``: pre-built quantitative-learning potentials (one per table
+    occurrence, in ``enc.encoded_tables`` order).  The planner builds them
+    for its statistics; passing them here avoids a second GROUP BY pass.
+    """
     query = enc.query
     sizes = enc.domain_sizes()
 
@@ -139,10 +145,13 @@ def build_generator(
     )
     order = tri.order
 
-    # quantitative learning: one GROUP BY per table occurrence
-    factors: List[Factor] = []
-    for enc_cols in enc.encoded_tables:
-        factors.append(Factor.from_columns(enc_cols, sizes))
+    # quantitative learning: one GROUP BY per table occurrence (unless the
+    # planner already built the potentials for its statistics)
+    if factors is None:
+        factors = [Factor.from_columns(enc_cols, sizes)
+                   for enc_cols in enc.encoded_tables]
+    else:
+        factors = list(factors)
 
     psis: Dict[str, Psi] = {}
     parents_of: Dict[str, Tuple[str, ...]] = {}
@@ -153,7 +162,15 @@ def build_generator(
         rest = [f for f in factors if v not in f.vars]
         if not rel:  # pragma: no cover - connected graph invariant
             raise AssertionError(f"no factor contains variable {v}")
-        phi_alpha = multiway_product(rel, var_order=[u for u in order if u != v] + [v])
+        # Bind v FIRST in the frontier: every rel factor contains v, so each
+        # later variable joins through it and prefix frontiers stay within
+        # the pairwise-product bounds anchored at v.  Binding v last lets a
+        # star of factors around v go cartesian over the satellite
+        # variables before v prunes them (observed 100x+ slowdowns on
+        # cyclic queries).  Output column order is (v, parents...) either
+        # way downstream consumers re-sort.
+        phi_alpha = multiway_product(
+            rel, var_order=[v] + [u for u in order if u != v])
         parents = tuple(u for u in phi_alpha.vars if u != v)
         parents_of[v] = parents
         if v in out_vars:

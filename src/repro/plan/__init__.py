@@ -1,0 +1,23 @@
+"""Join-plan IR: logical → physical planning and plan-driven execution.
+
+    enc = encode_query(catalog, query)
+    logical, physical = plan_query(enc)          # cost-based order search
+    print(physical.explain())
+    ex = Executor(catalog, query, plan=physical) # or let Executor plan
+    gfjs = ex.run()
+
+`repro.core.api.GraphicalJoin` is a thin facade over this package.
+"""
+
+from repro.plan.cost import CostModel, StepEstimate
+from repro.plan.executor import Executor
+from repro.plan.ir import LogicalPlan, OrderCandidate, PhysicalPlan
+from repro.plan.search import (beam_orders, build_logical_plan, greedy_order,
+                               plan_query)
+from repro.plan.stats import FactorStats, QueryStats
+
+__all__ = [
+    "CostModel", "StepEstimate", "Executor", "LogicalPlan", "OrderCandidate",
+    "PhysicalPlan", "beam_orders", "build_logical_plan", "greedy_order",
+    "plan_query", "FactorStats", "QueryStats",
+]

@@ -1,0 +1,155 @@
+"""Cost model: score an elimination order by simulating Algorithm 2 on stats.
+
+For every eliminated variable the real driver multiplies the factors that
+contain it (`multiway_product`) and sums the variable out.  The dominant
+cost of a step is the entry count of that product — both the expansion work
+and the memory of the conditional factor stored into the generator.  The
+model replays the same factor bookkeeping on :class:`FactorStats` instead of
+data:
+
+* joining two stat-factors that share a variable with degree vectors on
+  both sides uses the **exact** pairwise product size (dot product of the
+  degree vectors) — this is what sees skew;
+* additional shared variables apply the standard independence correction
+  ``1 / max(distinct_l, distinct_r)``;
+* summing a variable out caps the message size at the product of the
+  remaining variables' distinct counts (a separator-size / width bound in
+  the hypertree-duality sense: the separator is the clique the message
+  lives on).
+
+``simulate`` returns the per-step estimates and their sum — the plan cost.
+Estimates are heuristic; correctness never depends on them (every
+admissible order yields the same GFJS; see tests/test_plan.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.plan.stats import FactorStats, QueryStats
+
+_HUGE = 1e30
+
+
+@dataclass
+class StepEstimate:
+    """Planner's view of one elimination step."""
+
+    var: str
+    product_entries: float          # estimated |multiway_product(rel)|
+    separator: Tuple[str, ...]      # remaining vars of the product
+    message_entries: float          # estimated message size after summing out
+    num_factors: int                # how many factors contained the var
+
+    @property
+    def cost(self) -> float:
+        return self.product_entries
+
+
+def _join_stats(a: FactorStats, b: FactorStats) -> FactorStats:
+    """Estimated stats of the factor product a ⋈ b.
+
+    Deliberately conservative: the estimate is the *minimum single-variable
+    bound* — for each shared variable the dot product of the degree vectors
+    (the exact product size if that were the only join variable), taking
+    the tightest one.  Further shared variables only shrink the true
+    result, but applying independence corrections for them systematically
+    underestimates correlated intermediates (messages in a cyclic query are
+    highly correlated), and an optimistic planner is a dangerous planner:
+    one missed blow-up costs more than many slightly-loose bounds.
+    """
+    shared = [v for v in a.vars if v in b.vars]
+    out_vars = a.vars + tuple(v for v in b.vars if v not in a.vars)
+
+    if not shared:
+        entries = min(a.entries * b.entries, _HUGE)
+    else:
+        bounds = [float(a.degrees[v] @ b.degrees[v]) for v in shared
+                  if a.has_degrees(v) and b.has_degrees(v)]
+        # containment: if one side's variables are a subset of the other's,
+        # every result row extends exactly one row of the superset side
+        # (factor keys are unique), so the superset's cardinality bounds
+        # the product — this is what keeps same-separator message products
+        # (cyclic queries) from looking like cartesian blow-ups.
+        if set(a.vars) <= set(b.vars):
+            bounds.append(b.entries)
+        if set(b.vars) <= set(a.vars):
+            bounds.append(a.entries)
+        if not bounds:
+            # scalar fallback: one correction by the most selective variable
+            sel = max(max(a.distinct.get(v, 1.0), b.distinct.get(v, 1.0), 1.0)
+                      for v in shared)
+            bounds = [a.entries * b.entries / sel]
+        entries = min(min(bounds), _HUGE)
+
+    distinct: Dict[str, float] = {}
+    degrees: Dict[str, np.ndarray] = {}
+    for v in out_vars:
+        cands = [s.distinct[v] for s in (a, b) if v in s.distinct]
+        distinct[v] = min(min(cands), max(entries, 1.0))
+        if v in shared and a.has_degrees(v) and b.has_degrees(v):
+            degrees[v] = a.degrees[v] * b.degrees[v]
+        elif a.has_degrees(v):
+            degrees[v] = a.degrees[v] * (entries / max(a.entries, 1.0))
+        elif b.has_degrees(v):
+            degrees[v] = b.degrees[v] * (entries / max(b.entries, 1.0))
+    return FactorStats(out_vars, entries, distinct, degrees)
+
+
+def _sum_out(joint: FactorStats, var: str) -> FactorStats:
+    """Estimated stats of the message after marginalizing ``var`` out."""
+    keep = tuple(v for v in joint.vars if v != var)
+    cap = 1.0
+    for v in keep:
+        cap = min(cap * max(joint.distinct.get(v, 1.0), 1.0), _HUGE)
+    entries = min(joint.entries, cap) if keep else 1.0
+    scale = entries / max(joint.entries, 1.0)
+    distinct = {v: min(joint.distinct[v], max(entries, 1.0)) for v in keep}
+    degrees = {v: joint.degrees[v] * scale
+               for v in keep if v in joint.degrees}
+    return FactorStats(keep, entries, distinct, degrees)
+
+
+class CostModel:
+    """Scores elimination orders on a query's :class:`QueryStats`."""
+
+    def __init__(self, stats: QueryStats) -> None:
+        self.stats = stats
+
+    def initial_factors(self) -> List[FactorStats]:
+        return list(self.stats.factor_stats)
+
+    def eliminate(self, factors: List[FactorStats], var: str
+                  ) -> Tuple[StepEstimate, List[FactorStats]]:
+        """One simulated elimination step: returns (estimate, new factors)."""
+        rel = [f for f in factors if var in f.vars]
+        rest = [f for f in factors if var not in f.vars]
+        if not rel:
+            est = StepEstimate(var, 0.0, (), 0.0, 0)
+            return est, rest
+        joint = rel[0]
+        for f in rel[1:]:
+            joint = _join_stats(joint, f)
+        msg = _sum_out(joint, var)
+        est = StepEstimate(var, joint.entries, msg.vars, msg.entries, len(rel))
+        return est, rest + [msg]
+
+    def step_cost(self, factors: List[FactorStats], var: str) -> float:
+        """Cost of eliminating ``var`` next, without committing the step."""
+        return self.eliminate(factors, var)[0].cost
+
+    def simulate(self, order: Sequence[str]) -> Tuple[List[StepEstimate], float]:
+        """Replay a full order; returns per-step estimates and total cost.
+
+        The last variable of the order is the generator root — it is never
+        eliminated, so it contributes no step.
+        """
+        factors = self.initial_factors()
+        steps: List[StepEstimate] = []
+        for v in list(order)[:-1]:
+            est, factors = self.eliminate(factors, v)
+            steps.append(est)
+        return steps, float(sum(s.cost for s in steps))

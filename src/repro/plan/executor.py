@@ -1,0 +1,189 @@
+"""Executor — runs a PhysicalPlan phase by phase.
+
+The Figure 4 pipeline, with every choice read off the plan instead of being
+hardwired: elimination order, early-projection split, desummarize backend
+(numpy `np.repeat` vs the `expand_gather` Pallas wrapper from
+`repro/kernels`), streaming vs in-memory materialization.  Per-phase wall
+times land in ``timings`` (same keys `GraphicalJoin` always exposed, plus
+``"plan"``), and ``explain()`` renders the plan annotated with whatever has
+actually been measured so far.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.elimination import Generator, build_generator
+from repro.core.gfjs import (GFJS, desummarize, desummarize_range,
+                             generate_gfjs, stream_desummarize)
+from repro.plan.ir import LogicalPlan, PhysicalPlan
+from repro.plan.search import plan_query
+from repro.plan.stats import QueryStats
+from repro.relational.encoding import EncodedQuery, encode_query
+from repro.relational.query import JoinQuery
+from repro.relational.table import Catalog
+
+
+class Executor:
+    """Drive one query through encode → plan → generator → summarize."""
+
+    def __init__(self, catalog: Catalog, query: JoinQuery, *,
+                 elimination_order: Optional[Sequence[str]] = None,
+                 early_projection: bool = True,
+                 planner: str = "cost",
+                 plan: Optional[PhysicalPlan] = None) -> None:
+        self.catalog = catalog
+        self.query = query
+        self.elimination_order = elimination_order
+        self.early_projection = early_projection
+        self.planner = planner
+        self.timings: Dict[str, float] = {}
+        self.enc: Optional[EncodedQuery] = None
+        self.logical: Optional[LogicalPlan] = None
+        self.plan: Optional[PhysicalPlan] = plan
+        self._forced_plan = plan is not None
+        self.generator: Optional[Generator] = None
+
+    # -- phases ------------------------------------------------------------
+    def build_model(self) -> "Executor":
+        """Qualitative + quantitative learning (encode; potentials lazily).
+
+        Re-entry resets every downstream phase product — a re-encoded query
+        must never reuse a generator or plan built on the previous encoding.
+        """
+        self._reset_downstream()
+        t0 = time.perf_counter()
+        self.enc = encode_query(self.catalog, self.query)
+        self.timings = {"build_model": time.perf_counter() - t0}
+        return self
+
+    def _reset_downstream(self) -> None:
+        self.enc = None
+        self.logical = None
+        self.generator = None
+        if not self._forced_plan:
+            self.plan = None
+        self.timings = {}
+
+    def build_plan(self) -> PhysicalPlan:
+        """Logical plan + order search + physical pinning (cached)."""
+        if self.enc is None:
+            self.build_model()
+        if self.plan is not None and self.logical is not None:
+            return self.plan
+        t0 = time.perf_counter()
+        if self.plan is not None:
+            # pre-compiled plan: every choice is already pinned, so skip
+            # the statistics pass (degree-vector bincounts) and the search
+            # entirely — build only the potentials the generator needs and
+            # hand them to the shared logical-plan constructor
+            from repro.core.potentials import Factor
+            from repro.plan.search import build_logical_plan
+            sizes = self.enc.domain_sizes()
+            factors = [Factor.from_columns(cols, sizes)
+                       for cols in self.enc.encoded_tables]
+            self.logical = build_logical_plan(
+                self.enc, early_projection=self.plan.early_projection,
+                stats=QueryStats(sizes, factors, []))
+        else:
+            self.logical, self.plan = plan_query(
+                self.enc,
+                elimination_order=self.elimination_order,
+                early_projection=self.early_projection,
+                planner=self.planner)
+        self.timings["plan"] = time.perf_counter() - t0
+        return self.plan
+
+    def build_generator(self) -> "Executor":
+        plan = self.build_plan()
+        t0 = time.perf_counter()
+        self.generator = build_generator(
+            self.enc,
+            elimination_order=list(plan.order),
+            early_projection=plan.early_projection,
+            factors=list(self.logical.stats.factors),
+        )
+        self.timings["build_generator"] = time.perf_counter() - t0
+        return self
+
+    def summarize(self) -> GFJS:
+        if self.generator is None:
+            self.build_generator()
+        t0 = time.perf_counter()
+        gfjs = generate_gfjs(self.generator, self.enc.domains)
+        self.timings["summarize"] = time.perf_counter() - t0
+        return gfjs
+
+    def run(self) -> GFJS:
+        return self.summarize()
+
+    # -- plan-directed materialization ------------------------------------
+    def desummarize(self, gfjs: GFJS, *, decode: bool = True
+                    ) -> Dict[str, np.ndarray]:
+        """Full expansion on the plan's backend."""
+        t0 = time.perf_counter()
+        backend = (self.plan.backends.get("desummarize", "numpy")
+                   if self.plan is not None else "numpy")
+        if backend == "jax":
+            out = _desummarize_jax(gfjs, decode=decode)
+        else:
+            out = desummarize(gfjs, decode=decode)
+        self.timings["desummarize"] = time.perf_counter() - t0
+        return out
+
+    def materialize(self, gfjs: GFJS, *, decode: bool = True,
+                    chunk_rows: int = 1 << 20
+                    ) -> Union[Dict[str, np.ndarray],
+                               Iterator[Dict[str, np.ndarray]]]:
+        """In-memory dict or a row-chunk iterator.
+
+        The plan's pinned choice is a *hint* from distinct-key estimates;
+        the actual join size (frequency-weighted, known exactly once the
+        summary exists) makes the final call — a duplication-heavy join
+        can be orders of magnitude larger than its run count, and it must
+        stream regardless of what the planner guessed.
+        """
+        from repro.plan.search import STREAM_THRESHOLD
+        plan_streams = self.plan is not None and \
+            self.plan.materialize == "stream"
+        if plan_streams or gfjs.join_size > STREAM_THRESHOLD:
+            return stream_desummarize(gfjs, chunk_rows, decode=decode)
+        return self.desummarize(gfjs, decode=decode)
+
+    # -- observability -----------------------------------------------------
+    def explain(self) -> str:
+        plan = self.build_plan()
+        return plan.explain(timings=self.timings)
+
+
+_I32_MAX = (1 << 31) - 1
+
+
+def _desummarize_jax(gfjs: GFJS, *, decode: bool = True
+                     ) -> Dict[str, np.ndarray]:
+    """RLE expansion through the `expand_gather` kernel wrapper.
+
+    The kernel path is int32: any level whose prefix-sum bounds or codes
+    would overflow (join sizes or domains >= 2**31) falls back to the
+    numpy expansion instead of silently wrapping.
+    """
+    from repro.kernels import ops
+    out: Dict[str, np.ndarray] = {}
+    total = gfjs.join_size
+    for li, lvl in enumerate(gfjs.levels):
+        bounds = gfjs.bounds(li) if lvl.num_runs else None
+        fits_i32 = (0 < total <= _I32_MAX and bounds is not None
+                    and lvl.num_runs <= _I32_MAX)
+        for v in lvl.vars:
+            if fits_i32 and (lvl.key_cols[v].size == 0
+                             or lvl.key_cols[v].max() <= _I32_MAX):
+                col = np.asarray(
+                    ops.rle_expand(lvl.key_cols[v], bounds, total)
+                ).astype(np.int64)
+            else:
+                col = np.repeat(lvl.key_cols[v], lvl.freq)
+            out[v] = gfjs.domains[v].decode(col) if decode else col
+    return {v: out[v] for v in gfjs.column_order}

@@ -1,0 +1,126 @@
+"""The join-plan IR: LogicalPlan (what to join) → PhysicalPlan (how).
+
+A :class:`LogicalPlan` is the planner's view of a query: the primal graph,
+the projection split (the paper's O' / O), and the statistics bundle.  A
+:class:`PhysicalPlan` pins every choice the executor needs — elimination
+order, early-projection split, kernel backends, materialization strategy —
+plus the cost estimates that justified them, and renders all of it through
+``explain()``.
+
+PhysicalPlan identity (``signature()``) covers exactly the fields that
+change the produced GFJS or how it is computed; `JoinQuery.fingerprint`
+mixes it into the cache key so `SummaryCache`/`JoinService` distinguish
+summaries built under different plans.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import QueryGraph
+from repro.plan.cost import StepEstimate
+from repro.plan.stats import QueryStats
+from repro.relational.query import JoinQuery
+
+
+@dataclass
+class LogicalPlan:
+    """Query graph + projection split + planner statistics."""
+
+    query: JoinQuery
+    graph: QueryGraph
+    output_vars: Tuple[str, ...]          # the paper's O (generation order src)
+    projected_out: Tuple[str, ...]        # the paper's O' (eliminated silently)
+    stats: QueryStats
+
+    @property
+    def variables(self) -> List[str]:
+        return list(self.graph.variables)
+
+
+@dataclass
+class OrderCandidate:
+    """One scored elimination order considered by the search."""
+
+    source: str                           # "min_fill" | "greedy" | "beam" | ...
+    order: Tuple[str, ...]
+    cost: float
+
+
+@dataclass
+class PhysicalPlan:
+    """Every executable choice, pinned."""
+
+    query_name: str
+    order: Tuple[str, ...]
+    early_projection: bool
+    backends: Dict[str, str]              # phase -> "numpy" | "jax"
+    materialize: str                      # "inmem" | "stream"
+    source: str                           # which candidate won
+    est_cost: float
+    steps: Tuple[StepEstimate, ...] = ()
+    alternatives: Tuple[OrderCandidate, ...] = ()
+    planner: str = "cost"
+    search_seconds: float = 0.0
+
+    # -- identity ----------------------------------------------------------
+    def signature(self) -> str:
+        """Stable hash of the execution-relevant plan fields.
+
+        Cost estimates, alternatives, and search timings are advisory and
+        deliberately excluded: two plans that run the same way hash the
+        same even if their statistics were gathered at different times.
+        """
+        canon = {
+            "order": list(self.order),
+            "early_projection": bool(self.early_projection),
+            "backends": dict(sorted(self.backends.items())),
+            "materialize": self.materialize,
+        }
+        return hashlib.sha256(
+            json.dumps(canon, separators=(",", ":")).encode()).hexdigest()[:16]
+
+    # -- rendering ---------------------------------------------------------
+    def explain(self, timings: Optional[Dict[str, float]] = None) -> str:
+        """Human-readable plan: order, per-step estimates, backends.
+
+        Pass the executor's ``timings`` to annotate phases with measured
+        wall time next to the estimates.
+        """
+        lines = [
+            f"PhysicalPlan {self.query_name!r}  "
+            f"(planner={self.planner}, chosen={self.source}, "
+            f"signature={self.signature()})",
+            f"  elimination order : {' -> '.join(self.order)}"
+            f"   (root: {self.order[-1] if self.order else '-'})",
+            f"  early projection  : {'on' if self.early_projection else 'off'}",
+            f"  backends          : " + ", ".join(
+                f"{k}={v}" for k, v in sorted(self.backends.items())),
+            f"  materialize       : {self.materialize}",
+            f"  est cost          : {self.est_cost:.3g} product entries"
+            f"   (search {self.search_seconds * 1e3:.2f}ms)",
+        ]
+        if self.steps:
+            lines.append("  steps:")
+            for s in self.steps:
+                sep = ",".join(s.separator) or "()"
+                lines.append(
+                    f"    eliminate {s.var:<12s} factors={s.num_factors}"
+                    f"  est_product={s.product_entries:.3g}"
+                    f"  sep=({sep})  est_message={s.message_entries:.3g}")
+        if self.alternatives:
+            lines.append("  candidates:")
+            for c in self.alternatives:
+                mark = "*" if (c.source == self.source
+                               and tuple(c.order) == tuple(self.order)) else " "
+                lines.append(
+                    f"   {mark}{c.source:<10s} cost={c.cost:<12.4g} "
+                    f"[{', '.join(c.order)}]")
+        if timings:
+            lines.append("  measured:")
+            for k, v in timings.items():
+                lines.append(f"    {k:<16s} {v * 1e3:10.2f}ms")
+        return "\n".join(lines)

@@ -1,0 +1,183 @@
+"""Elimination-order search: min-fill joins a candidate pool it used to own.
+
+``plan_query`` builds the LogicalPlan (graph + projection split + stats),
+generates candidate orders, scores each with the :class:`CostModel`, and
+pins the winner into a :class:`PhysicalPlan`:
+
+* **min_fill**  — the paper's structural heuristic (always in the pool, so
+  the planner can never regress below the old behavior *by its own
+  estimate*);
+* **greedy**    — pick the cheapest next variable by simulated step cost
+  (skew-aware through the degree vectors);
+* **beam**      — width-``beam_width`` search over prefixes ranked by
+  accumulated step cost.
+
+Admissibility (what `build_generator` requires) is enforced structurally:
+projected-out variables (O') are eliminated before output variables (O),
+so the root — the last variable — is always an output variable.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.graph import QueryGraph, min_fill_order
+from repro.plan.cost import CostModel
+from repro.plan.ir import LogicalPlan, OrderCandidate, PhysicalPlan
+from repro.plan.stats import QueryStats
+from repro.relational.encoding import EncodedQuery
+
+STREAM_THRESHOLD = 60_000_000  # est rows above which desummarize streams
+
+
+def build_logical_plan(enc: EncodedQuery, *,
+                       early_projection: bool = True,
+                       stats: Optional[QueryStats] = None) -> LogicalPlan:
+    query = enc.query
+    graph = QueryGraph.from_query(query)
+    out_vars = tuple(query.output_variables)
+    projected_out = tuple(v for v in graph.variables if v not in out_vars) \
+        if early_projection else ()
+    if stats is None:
+        stats = QueryStats.of(enc)
+    return LogicalPlan(query, graph, out_vars, projected_out, stats)
+
+
+def _pool(remaining: List[str], first_set: frozenset) -> List[str]:
+    """Eligible next variables: O' while any remain, then O."""
+    early = [v for v in remaining if v in first_set]
+    return early if early else remaining
+
+
+def greedy_order(model: CostModel, variables: Sequence[str],
+                 first: Sequence[str]) -> Tuple[str, ...]:
+    """Cheapest-next-step order (ties break by name for determinism)."""
+    first_set = frozenset(first)
+    remaining = list(variables)
+    factors = model.initial_factors()
+    order: List[str] = []
+    while remaining:
+        pool = _pool(remaining, first_set)
+        if len(remaining) == 1:
+            v = remaining[0]
+        else:
+            v = min(pool, key=lambda u: (model.step_cost(factors, u), u))
+        est, factors = model.eliminate(factors, v)
+        remaining.remove(v)
+        order.append(v)
+    return tuple(order)
+
+
+def beam_orders(model: CostModel, variables: Sequence[str],
+                first: Sequence[str], *, beam_width: int = 4
+                ) -> List[Tuple[str, ...]]:
+    """Beam search over elimination prefixes; returns ranked full orders."""
+    first_set = frozenset(first)
+    # state: (accumulated cost, order-so-far, remaining, sim factors)
+    states = [(0.0, (), tuple(variables), model.initial_factors())]
+    n = len(variables)
+    for depth in range(n):
+        nxt = []
+        for cost, order, remaining, factors in states:
+            pool = _pool(list(remaining), first_set)
+            for v in pool:
+                est, nf = model.eliminate(factors, v)
+                step = est.cost if depth < n - 1 else 0.0  # root is free
+                nxt.append((cost + step, order + (v,),
+                            tuple(u for u in remaining if u != v), nf))
+        nxt.sort(key=lambda s: (s[0], s[1]))
+        states = nxt[:max(beam_width, 1)]
+    return [s[1] for s in states]
+
+
+def _select_backends() -> Dict[str, str]:
+    """Phase -> kernel backend.  TPU gets the Pallas paths, CPU stays numpy.
+
+    Only consults jax if something else already imported it: planning must
+    not pay (or force) the jax import — a process that never loaded jax is
+    running the numpy engine by definition.
+
+    Keys pinned here are the ones the executor actually consults:
+    "desummarize" picks between the numpy expansion and the
+    `kernels/expand.py` wrapper; "summarize" names the generation engine
+    (numpy is the only one implemented — recorded so explain() states the
+    fact and a future TPU generation path has its switch ready).
+    """
+    import sys
+    jx = sys.modules.get("jax")
+    on_tpu = False
+    if jx is not None:
+        try:
+            on_tpu = jx.default_backend() == "tpu"
+        except Exception:  # pragma: no cover - partially initialized jax
+            on_tpu = False
+    dev = "jax" if on_tpu else "numpy"
+    return {"summarize": "numpy", "desummarize": dev}
+
+
+def plan_query(enc: EncodedQuery, *,
+               elimination_order: Optional[Sequence[str]] = None,
+               early_projection: bool = True,
+               planner: str = "cost",
+               beam_width: int = 4,
+               stats: Optional[QueryStats] = None
+               ) -> Tuple[LogicalPlan, PhysicalPlan]:
+    """Logical + physical plan for an encoded query.
+
+    ``elimination_order`` forces the order (source="forced");
+    ``planner="min_fill"`` restores the pre-planner behavior;
+    ``planner="cost"`` runs the candidate search.
+    """
+    t0 = time.perf_counter()
+    logical = build_logical_plan(enc, early_projection=early_projection,
+                                 stats=stats)
+    model = CostModel(logical.stats)
+    graph, query = logical.graph, logical.query
+    first = list(logical.projected_out)
+
+    candidates: List[OrderCandidate] = []
+
+    def score(source: str, order: Sequence[str]) -> OrderCandidate:
+        _, total = model.simulate(order)
+        return OrderCandidate(source, tuple(order), total)
+
+    if elimination_order is not None:
+        chosen = score("forced", tuple(elimination_order))
+        candidates.append(chosen)
+    else:
+        tri = min_fill_order(graph, first=first)
+        candidates.append(score("min_fill", tri.order))
+        if planner == "cost" and len(graph.variables) > 1:
+            candidates.append(score(
+                "greedy", greedy_order(model, graph.variables, first)))
+            for order in beam_orders(model, graph.variables, first,
+                                     beam_width=beam_width)[:1]:
+                candidates.append(score("beam", order))
+        # dedupe identical orders, keep first source naming it
+        seen: Dict[Tuple[str, ...], OrderCandidate] = {}
+        for c in candidates:
+            seen.setdefault(c.order, c)
+        candidates = list(seen.values())
+        chosen = min(candidates, key=lambda c: (c.cost, c.source != "min_fill"))
+
+    steps, total = model.simulate(chosen.order)
+    # distinct-key estimate only (a lower bound on materialized rows —
+    # bucket/fac multiplicities are unknown at plan time); the executor
+    # re-checks the exact join_size before materializing, so "inmem" here
+    # is a hint, never a commitment to an in-memory blow-up
+    est_rows = max((s.message_entries for s in steps), default=0.0)
+    physical = PhysicalPlan(
+        query_name=query.name,
+        order=chosen.order,
+        early_projection=early_projection,
+        backends=_select_backends(),
+        materialize="stream" if est_rows > STREAM_THRESHOLD else "inmem",
+        source=chosen.source,
+        est_cost=total,
+        steps=tuple(steps),
+        alternatives=tuple(sorted(candidates, key=lambda c: c.cost)),
+        planner="forced" if elimination_order is not None else planner,
+        search_seconds=time.perf_counter() - t0,
+    )
+    return logical, physical

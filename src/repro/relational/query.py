@@ -81,7 +81,7 @@ class JoinQuery:
                 count[v] = count.get(v, 0) + 1
         return {v for v, c in count.items() if c >= 2}
 
-    def fingerprint(self) -> str:
+    def fingerprint(self, plan=None) -> str:
         """Canonical content hash of the join shape (cache key half).
 
         Two queries that join the same table occurrences on the same
@@ -89,6 +89,12 @@ class JoinQuery:
         the order tables were listed in, the query's display ``name``, or
         the insertion order inside each ``var_map``.  An explicit projection
         equal to all variables canonicalizes to the implicit one.
+
+        ``plan`` (a ``repro.plan.ir.PhysicalPlan``, or anything with a
+        ``signature()`` method) folds the chosen physical plan into the
+        hash: the GFJS depends on the elimination order, so summaries built
+        under different plans must never share a cache entry.  ``None``
+        keeps the plan-agnostic hash (pre-planner compatibility).
         """
         occurrences = sorted(
             (qt.table, tuple(sorted(qt.var_map))) for qt in self.tables)
@@ -99,6 +105,8 @@ class JoinQuery:
             "tables": [[t, list(map(list, vm))] for t, vm in occurrences],
             "output": sorted(output) if output is not None else None,
         }
+        if plan is not None:
+            canon["plan"] = plan.signature()
         return hashlib.sha256(
             json.dumps(canon, separators=(",", ":")).encode()).hexdigest()
 

@@ -4,6 +4,12 @@ progress, greedy/temperature sampling).
 
 ``serve_step`` is the function the dry-run lowers for the decode shapes:
 one new token per sequence against a KV cache of the shape's seq_len.
+
+:class:`RelationalFeatureProvider` is the GJ wire-in (ROADMAP "serve
+path"): per-request relational features are pulled through a
+:class:`~repro.summary.service.JoinService` with a **pre-compiled**
+physical plan, so the steady-state request path is a summary-cache hit plus
+an O(runs) group-by — never a join, never a re-plan.
 """
 
 from __future__ import annotations
@@ -26,14 +32,85 @@ class ServeConfig:
     eos_id: int = -1              # -1 => never stop early
 
 
+class RelationalFeatureProvider:
+    """Join-backed feature vectors for serve requests.
+
+        svc = JoinService(catalog)
+        prov = RelationalFeatureProvider(
+            svc, query, key_var="U1",
+            aggs={"n_rows": "count", "total": ("sum", "A2")})
+        feats = prov.features(np.asarray([uid0, uid1]))   # [2, 2] float32
+
+    The physical plan is compiled once at construction (`JoinService.
+    compile`), so every request keys the summary cache on the same plan
+    identity; the first `features` call computes the summary, later calls
+    are cache hits.  Keys missing from the join result get zero features.
+    """
+
+    def __init__(self, service, query, *, key_var: str,
+                 aggs: Dict[str, Any], plan=None) -> None:
+        self.service = service
+        self.query = query
+        self.key_var = key_var
+        self.aggs = dict(aggs)
+        self.plan = plan if plan is not None else service.compile(query)
+        self._table: Optional[Dict[str, np.ndarray]] = None
+
+    def _feature_table(self) -> Dict[str, np.ndarray]:
+        reply = self.service.frame(self.query, plan=self.plan)
+        return reply.frame.group_by([self.key_var], **self.aggs)
+
+    def refresh(self) -> None:
+        """Drop the memoized per-key table (e.g. after `invalidate`)."""
+        self._table = None
+
+    @property
+    def num_features(self) -> int:
+        return len(self.aggs)
+
+    def features(self, keys: np.ndarray) -> np.ndarray:
+        """[len(keys), num_features] float32; zeros for unknown keys."""
+        if self._table is None:
+            self._table = self._feature_table()
+        tab = self._table
+        uniq = np.asarray(tab[self.key_var])
+        keys = np.asarray(keys)
+        pos = np.searchsorted(uniq, keys)
+        pos_c = np.clip(pos, 0, max(len(uniq) - 1, 0))
+        ok = (uniq[pos_c] == keys) if len(uniq) else np.zeros(len(keys), bool)
+        out = np.zeros((len(keys), len(self.aggs)), np.float32)
+        for j, name in enumerate(self.aggs):
+            col = np.asarray(tab[name], np.float32)
+            if len(col):
+                out[:, j] = np.where(ok, col[pos_c], 0.0)
+        return out
+
+
 class ServeEngine:
-    def __init__(self, lm: LM, params, cfg: ServeConfig) -> None:
+    def __init__(self, lm: LM, params, cfg: ServeConfig, *,
+                 feature_provider: Optional[RelationalFeatureProvider] = None
+                 ) -> None:
         self.lm = lm
         self.params = params
         self.cfg = cfg
+        self.feature_provider = feature_provider
         self._prefill = jax.jit(
             functools.partial(lm.prefill, s_max=cfg.max_seq))
         self._decode = jax.jit(lm.decode_step)
+
+    def attach_features(self, batch: Dict[str, jax.Array],
+                        keys: np.ndarray) -> Dict[str, jax.Array]:
+        """Return ``batch`` + a ``"features"`` array pulled through GJ.
+
+        No-op (returns ``batch`` unchanged) when no provider is configured;
+        callers that conditionally enable relational features need no
+        branching.
+        """
+        if self.feature_provider is None:
+            return batch
+        out = dict(batch)
+        out["features"] = jnp.asarray(self.feature_provider.features(keys))
+        return out
 
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.cfg.temperature <= 0.0:

@@ -5,21 +5,31 @@ later requests from it instead of re-joining.  :class:`SummaryCache` makes
 that a service-grade component:
 
 * keys are (canonical query fingerprint, content versions of every table
-  occurrence) — replacing a base table invalidates exactly the summaries
-  built on it, nothing else;
+  occurrence, physical-plan signature) — replacing a base table invalidates
+  exactly the summaries built on it, and summaries built under different
+  elimination orders never collide;
 * a byte budget bounds resident summaries, LRU order decides eviction;
 * evictions optionally *spill* to disk through the GFJS container format
   (repro/core/storage.py), so a later request pays a load, not a re-join;
-* hit/miss/eviction counters feed the service's observability.
+* every public operation takes the cache lock, so one cache may serve
+  multiple threads (`JoinService` relies on this);
+* entries may carry a TTL (seconds); expired residents are dropped on
+  access, expired spill files (by mtime) are ignored and unlinked;
+* `invalidate(table)` force-drops every entry recorded as built on a base
+  table — the explicit override for when content-version keying is not
+  enough (e.g. a table mutated in place behind the catalog's back);
+* hit/miss/eviction/expiry counters feed the service's observability.
 """
 
 from __future__ import annotations
 
 import hashlib
 import os
+import threading
+import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 
 from repro.core.gfjs import GFJS
 from repro.core.storage import load_gfjs, save_gfjs
@@ -27,9 +37,9 @@ from repro.relational.query import JoinQuery
 from repro.relational.table import Catalog
 
 
-def cache_key(query: JoinQuery, catalog: Catalog) -> str:
-    """(query fingerprint, table versions) -> one stable hex key."""
-    h = hashlib.sha256(query.fingerprint().encode())
+def cache_key(query: JoinQuery, catalog: Catalog, plan=None) -> str:
+    """(query fingerprint [× plan signature], table versions) -> hex key."""
+    h = hashlib.sha256(query.fingerprint(plan=plan).encode())
     for name in sorted({qt.table for qt in query.tables}):
         h.update(name.encode())
         h.update(catalog[name].version().encode())
@@ -44,76 +54,195 @@ class CacheStats:
     evictions: int = 0
     spills: int = 0
     puts: int = 0
+    expirations: int = 0     # TTL drops (resident or spill)
+    invalidations: int = 0   # entries dropped by invalidate()
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
 
 
 class SummaryCache:
-    """LRU GFJS store with a byte budget and optional disk spill."""
+    """Thread-safe LRU GFJS store with byte budget, TTL, and disk spill."""
 
     def __init__(self, byte_budget: int = 256 << 20,
-                 spill_dir: Optional[str] = None) -> None:
+                 spill_dir: Optional[str] = None,
+                 ttl_seconds: Optional[float] = None) -> None:
         if byte_budget <= 0:
             raise ValueError("byte_budget must be positive")
+        if ttl_seconds is not None and ttl_seconds <= 0:
+            raise ValueError("ttl_seconds must be positive (or None)")
         self.byte_budget = int(byte_budget)
         self.spill_dir = spill_dir
+        self.ttl_seconds = ttl_seconds
         if spill_dir is not None:
             os.makedirs(spill_dir, exist_ok=True)
         self._entries: "OrderedDict[str, GFJS]" = OrderedDict()
         self._nbytes: Dict[str, int] = {}
+        self._born: Dict[str, float] = {}                # key -> creation time
+        self._tables: Dict[str, FrozenSet[str]] = {}     # key -> base tables
+        self._lock = threading.RLock()
         self.stats = CacheStats()
 
     # -- introspection -----------------------------------------------------
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     @property
     def resident_bytes(self) -> int:
-        return sum(self._nbytes.values())
+        with self._lock:
+            return sum(self._nbytes.values())
 
     def _spill_path(self, key: str) -> Optional[str]:
         if self.spill_dir is None:
             return None
         return os.path.join(self.spill_dir, f"{key}.gfjs")
 
+    # -- TTL ---------------------------------------------------------------
+    # TTL measures age since *computation* (the original put), not since the
+    # last promotion or eviction: `_born` carries the wall-clock creation
+    # time for resident entries and spill files store the same instant as
+    # their mtime (os.utime on write), so the clock survives
+    # evict/promote cycles in both directions.
+
+    def _expired(self, born: float) -> bool:
+        return (self.ttl_seconds is not None
+                and time.time() - born > self.ttl_seconds)
+
+    def _drop(self, key: str) -> None:
+        """Remove a resident entry (lock held)."""
+        self._entries.pop(key, None)
+        self._nbytes.pop(key, None)
+        self._born.pop(key, None)
+        self._prune_provenance(key)
+
+    def _prune_provenance(self, key: str) -> None:
+        """Drop the key's table provenance unless a spill file still needs
+        it (lock held) — keeps `_tables` from growing without bound as
+        version churn mints ever-new keys."""
+        path = self._spill_path(key)
+        if path is None or not os.path.exists(path):
+            self._tables.pop(key, None)
+
     # -- core API ----------------------------------------------------------
     def get(self, key: str) -> Optional[GFJS]:
-        """Memory first, then spill; None on a true miss."""
-        hit = self._entries.get(key)
-        if hit is not None:
-            self._entries.move_to_end(key)
-            self.stats.hits += 1
-            return hit
-        path = self._spill_path(key)
-        if path is not None and os.path.exists(path):
-            gfjs = load_gfjs(path)
+        """Memory first, then spill; None on a true miss or TTL expiry."""
+        return self.get_with_source(key)[0]
+
+    def get_with_source(self, key: str) -> Tuple[Optional[GFJS], str]:
+        """(gfjs, "memory" | "disk") on a hit; (None, "miss") otherwise.
+
+        The source tier is determined by *this* lookup, not inferred from
+        shared counters — concurrent requests cannot mislabel each other.
+        """
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                if self._expired(self._born.get(key, 0.0)):
+                    self._drop(key)
+                    self.stats.expirations += 1
+                else:
+                    self._entries.move_to_end(key)
+                    self.stats.hits += 1
+                    return hit, "memory"
+            path = self._spill_path(key)
+            load_from: Optional[str] = None
+            born = 0.0
+            if path is not None and os.path.exists(path):
+                born = os.path.getmtime(path)
+                if self._expired(born):
+                    os.remove(path)
+                    self._prune_provenance(key)
+                    self.stats.expirations += 1
+                else:
+                    load_from = path
+            if load_from is None:
+                self.stats.misses += 1
+                return None, "miss"
+        # disk I/O happens outside the lock: a slow spill promotion must not
+        # stall every other thread's memory hits.  Two threads promoting the
+        # same key both load; the second _admit is an idempotent replace.
+        try:
+            gfjs = load_gfjs(load_from)
+        except FileNotFoundError:      # raced with invalidate()/expiry
+            with self._lock:
+                self.stats.misses += 1
+            return None, "miss"
+        with self._lock:
+            if not os.path.exists(load_from):
+                # invalidate() removed the file while we were loading: the
+                # summary we hold is stale — do NOT resurrect it
+                self.stats.misses += 1
+                return None, "miss"
             self.stats.disk_hits += 1
-            self._admit(key, gfjs)   # promote back into memory
-            return gfjs
-        self.stats.misses += 1
-        return None
+            spills = self._admit(key, gfjs, born=born)
+        self._write_spills(spills)
+        return gfjs, "disk"
 
-    def put(self, key: str, gfjs: GFJS) -> None:
-        self.stats.puts += 1
-        self._admit(key, gfjs)
+    def put(self, key: str, gfjs: GFJS,
+            tables: Optional[Iterable[str]] = None) -> None:
+        """Insert/refresh an entry; ``tables`` names the base tables it was
+        built on (enables `invalidate`)."""
+        with self._lock:
+            self.stats.puts += 1
+            if tables is not None:
+                self._tables[key] = frozenset(tables)
+            spills = self._admit(key, gfjs, born=time.time())
+        self._write_spills(spills)
 
-    def _admit(self, key: str, gfjs: GFJS) -> None:
+    def invalidate(self, table: str) -> int:
+        """Drop every entry recorded as built on ``table``.
+
+        Covers resident entries and their spill files; returns the number
+        of entries removed.  Only entries `put` with ``tables`` provenance
+        in this process are discoverable — version-keyed misses already
+        handle tables replaced *through* the catalog.
+        """
+        removed = 0
+        with self._lock:
+            for key, tabs in list(self._tables.items()):
+                if table not in tabs:
+                    continue
+                hit = False
+                if key in self._entries:
+                    self._entries.pop(key)
+                    self._nbytes.pop(key, None)
+                    self._born.pop(key, None)
+                    hit = True
+                path = self._spill_path(key)
+                if path is not None and os.path.exists(path):
+                    os.remove(path)
+                    hit = True
+                self._tables.pop(key, None)
+                if hit:                  # one logical entry, however stored
+                    removed += 1
+            self.stats.invalidations += removed
+        return removed
+
+    def _admit(self, key: str, gfjs: GFJS, *, born: float) -> List[Tuple]:
+        """Insert/refresh + shrink (lock held); returns deferred spill work."""
         self._entries[key] = gfjs      # replace on re-put, insert otherwise
         self._entries.move_to_end(key)
         self._nbytes[key] = gfjs.nbytes()
-        self._shrink(keep=key)
+        self._born[key] = born
+        return self._shrink(keep=key)
 
-    def _shrink(self, keep: Optional[str] = None) -> None:
-        """Evict LRU entries until the byte budget holds.
+    def _shrink(self, keep: Optional[str] = None) -> List[Tuple]:
+        """Evict LRU entries until the byte budget holds (lock held).
 
         The entry named by ``keep`` survives even if it alone exceeds the
         budget (an oversized summary is still better served hot once).
+        Spill *writes* are deferred: this returns (key, gfjs, path, born)
+        work items for `_write_spills` to run after the lock is released —
+        serializing a large GFJS must not stall other threads' memory hits.
         """
-        while self.resident_bytes > self.byte_budget and len(self._entries) > 1:
+        pending: List[Tuple] = []
+        while sum(self._nbytes.values()) > self.byte_budget \
+                and len(self._entries) > 1:
             victim = next(iter(self._entries))
             if victim == keep:
                 # keep must stay; evict the next-oldest instead
@@ -122,12 +251,40 @@ class SummaryCache:
                 victim = next(it)
             gfjs = self._entries.pop(victim)
             self._nbytes.pop(victim)
+            born = self._born.pop(victim, time.time())
             self.stats.evictions += 1
             path = self._spill_path(victim)
-            if path is not None and not os.path.exists(path):
-                save_gfjs(gfjs, path)
+            if path is None:
+                self._tables.pop(victim, None)   # nothing left to invalidate
+            elif not os.path.exists(path):
+                pending.append((victim, gfjs, path, born,
+                                victim in self._tables))
+                # provenance stays: the spill file (about to exist) needs it
+        return pending
+
+    def _write_spills(self, pending: List[Tuple]) -> None:
+        """Run deferred spill writes (no lock held during disk I/O).
+
+        Writes go to a temp path and are renamed into place, so a reader
+        never sees a half-written container: until `os.replace`, the final
+        path simply does not exist and `get` reports a miss.
+        """
+        for key, gfjs, path, born, had_tables in pending:
+            with self._lock:
+                # invalidate() popped the provenance after eviction: this
+                # summary was declared stale — do not write it back
+                if had_tables and key not in self._tables:
+                    continue
+            tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+            save_gfjs(gfjs, tmp)
+            os.utime(tmp, (born, born))    # spill mtime == creation time
+            os.replace(tmp, path)          # atomic publish
+            with self._lock:
                 self.stats.spills += 1
 
     def clear(self) -> None:
-        self._entries.clear()
-        self._nbytes.clear()
+        with self._lock:
+            self._entries.clear()
+            self._nbytes.clear()
+            self._born.clear()
+            self._tables.clear()

@@ -1,27 +1,44 @@
 """JoinService — the query-answering front-end over summaries.
 
-One object owns a catalog, a :class:`SummaryCache`, and the decision of
-when to actually run the Graphical Join:
+One object owns a catalog, a :class:`SummaryCache`, a plan cache, and the
+decision of when to actually run the Graphical Join:
 
     svc = JoinService(catalog, byte_budget=64 << 20, spill_dir=".../spill")
     n    = svc.count(query)                              # O(runs) after 1st
     tbl  = svc.group_by(query, "A", total=("sum", "D"))
     r    = svc.frame(query)            # SummaryFrame + provenance/timings
+    plan = svc.compile(query)          # pre-compiled PhysicalPlan (serve path)
+    r2   = svc.frame(query, plan=plan) # keyed on plan identity
+
+Summaries are keyed on (canonical query fingerprint × table content
+versions × physical-plan signature): the same query executed under a
+different plan is a different summary (the GFJS column order depends on the
+elimination order).  `compile` runs the cost-based planner once and caches
+the PhysicalPlan per (query, table versions); `frame` reuses it so warm
+requests never re-plan.
 
 Cache hits skip ``build_model`` / ``build_generator`` / ``summarize``
 entirely — a request served from cache carries no build-phase timings,
 which is the service-level observable the tests assert on.
+
+The service is safe to call from multiple threads: the summary cache locks
+internally and the plan cache is guarded here.  Two threads racing on the
+same cold query may both compute it (last put wins) — duplicate work, never
+a wrong answer.
 """
 
 from __future__ import annotations
 
+import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, Mapping, Optional, Sequence, Union
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.api import GraphicalJoin
+from repro.plan.ir import PhysicalPlan
 from repro.relational.query import JoinQuery
 from repro.relational.table import Catalog
 from repro.summary.algebra import AggSpec, Predicate, SummaryFrame
@@ -36,6 +53,7 @@ class ServiceReply:
     source: str                      # "memory" | "disk" | "computed"
     key: str
     timings: Dict[str, float] = field(default_factory=dict)
+    plan: Optional[PhysicalPlan] = None
 
     @property
     def cache_hit(self) -> bool:
@@ -48,32 +66,105 @@ class JoinService:
     def __init__(self, catalog: Catalog, *,
                  cache: Optional[SummaryCache] = None,
                  byte_budget: int = 256 << 20,
-                 spill_dir: Optional[str] = None) -> None:
+                 spill_dir: Optional[str] = None,
+                 ttl_seconds: Optional[float] = None,
+                 planner: str = "cost",
+                 max_plans: int = 256) -> None:
         self.catalog = catalog
         self.cache = cache if cache is not None else SummaryCache(
-            byte_budget=byte_budget, spill_dir=spill_dir)
+            byte_budget=byte_budget, spill_dir=spill_dir,
+            ttl_seconds=ttl_seconds)
+        self.planner = planner
+        self.max_plans = int(max_plans)
         self.requests = 0
+        self._lock = threading.RLock()
+        # (query fingerprint, table versions) -> (plan, base-table names).
+        # Keys embed content versions, so every table refresh mints a new
+        # key — LRU-bounded at max_plans so version churn can't grow it
+        # without bound (plans are tiny; re-planning a evicted one is ms).
+        self._plans: "OrderedDict[Tuple[str, Tuple[str, ...]], " \
+                     "Tuple[PhysicalPlan, frozenset]]" = OrderedDict()
+
+    # -- planning -----------------------------------------------------------
+    def _plan_key(self, query: JoinQuery) -> Tuple[str, Tuple[str, ...]]:
+        names = sorted({qt.table for qt in query.tables})
+        return (query.fingerprint(),
+                tuple(self.catalog[n].version() for n in names))
+
+    def _remember_plan(self, pkey, plan: PhysicalPlan,
+                       tables: frozenset) -> None:
+        """Insert into the LRU-bounded plan cache (lock held by caller)."""
+        self._plans.setdefault(pkey, (plan, tables))
+        self._plans.move_to_end(pkey)
+        while len(self._plans) > self.max_plans:
+            self._plans.popitem(last=False)
+
+    def compile(self, query: JoinQuery) -> PhysicalPlan:
+        """The PhysicalPlan for ``query`` on the current table versions.
+
+        Compiled once per (query shape, table versions) and cached; the
+        serve path calls this up front and hands the plan to `frame`.
+        """
+        pkey = self._plan_key(query)
+        with self._lock:
+            hit = self._plans.get(pkey)
+            if hit is not None:
+                self._plans.move_to_end(pkey)
+                return hit[0]
+        gj = GraphicalJoin(self.catalog, query, planner=self.planner)
+        plan = gj.plan()
+        with self._lock:
+            self._remember_plan(
+                pkey, plan, frozenset(qt.table for qt in query.tables))
+        return plan
 
     # -- summary acquisition ----------------------------------------------
-    def frame(self, query: JoinQuery) -> ServiceReply:
+    def frame(self, query: JoinQuery,
+              plan: Optional[PhysicalPlan] = None) -> ServiceReply:
         """The summary for ``query``: cache first, GraphicalJoin on miss."""
-        self.requests += 1
-        key = cache_key(query, self.catalog)
-        disk_before = self.cache.stats.disk_hits
+        with self._lock:
+            self.requests += 1
+        gj: Optional[GraphicalJoin] = None
+        if plan is None:
+            pkey = self._plan_key(query)
+            with self._lock:
+                hit = self._plans.get(pkey)
+                if hit is not None:
+                    self._plans.move_to_end(pkey)
+            if hit is not None:
+                plan = hit[0]
+            else:
+                # plan inline and keep the GraphicalJoin: a cache miss below
+                # reuses its encoding/potentials instead of re-planning
+                gj = GraphicalJoin(self.catalog, query, planner=self.planner)
+                plan = gj.plan()
+                with self._lock:
+                    self._remember_plan(
+                        pkey, plan,
+                        frozenset(qt.table for qt in query.tables))
+        key = cache_key(query, self.catalog, plan=plan)
         t0 = time.perf_counter()
-        cached = self.cache.get(key)
+        cached, source = self.cache.get_with_source(key)
         lookup = time.perf_counter() - t0
         if cached is not None:
-            source = "disk" if self.cache.stats.disk_hits > disk_before \
-                else "memory"
             return ServiceReply(SummaryFrame.of(cached), source, key,
-                                {"cache_lookup": lookup})
-        gj = GraphicalJoin(self.catalog, query)
+                                {"cache_lookup": lookup}, plan)
+        if gj is None:
+            gj = GraphicalJoin(self.catalog, query, plan=plan)
         gfjs = gj.run()
-        self.cache.put(key, gfjs)
+        self.cache.put(key, gfjs, tables={qt.table for qt in query.tables})
         timings = dict(gj.timings)
         timings["cache_lookup"] = lookup
-        return ServiceReply(SummaryFrame.of(gfjs), "computed", key, timings)
+        return ServiceReply(SummaryFrame.of(gfjs), "computed", key,
+                            timings, plan)
+
+    def invalidate(self, table: str) -> int:
+        """Force-drop cached summaries and compiled plans built on ``table``."""
+        removed = self.cache.invalidate(table)
+        with self._lock:
+            self._plans = OrderedDict(
+                (k, v) for k, v in self._plans.items() if table not in v[1])
+        return removed
 
     # -- one-shot aggregate API -------------------------------------------
     def count(self, query: JoinQuery,
@@ -114,7 +205,9 @@ class JoinService:
     # -- observability -----------------------------------------------------
     def stats(self) -> Dict[str, int]:
         out = self.cache.stats.as_dict()
-        out["requests"] = self.requests
+        with self._lock:
+            out["requests"] = self.requests
+            out["compiled_plans"] = len(self._plans)
         out["resident_bytes"] = self.cache.resident_bytes
         out["resident_entries"] = len(self.cache)
         return out

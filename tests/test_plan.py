@@ -1,0 +1,317 @@
+"""Plan IR, cost-based order search, executor, and plan-keyed caching.
+
+Covers the planner contract:
+
+* every admissible elimination order — min-fill, planner-chosen, forced,
+  and (on small queries) *every* admissible permutation — produces the same
+  ``join_size`` and the same desummarized row multiset (plan equivalence);
+* the search only emits admissible orders (O' before O, output-var root);
+* plan identity flows into fingerprints and cache keys;
+* ``explain()`` renders order, per-step estimates, and backends;
+* ``build_model`` re-entry clears downstream phase state (staleness fix);
+* the serve-path feature provider pulls features through a pre-compiled
+  plan and hits the summary cache on repeat calls.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.api import GraphicalJoin
+from repro.core.oracle import oracle_join, sort_rows
+from repro.plan import (CostModel, Executor, PhysicalPlan, QueryStats,
+                        plan_query)
+from repro.relational.encoding import encode_query
+from repro.relational.query import JoinQuery
+from repro.relational.synth import figure1, lastfm_like
+from repro.relational.table import Catalog, Table
+from repro.summary.service import JoinService
+
+
+# ---------------------------------------------------------------------------
+# random query instances (no hypothesis dependency: seeded numpy)
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "chain3": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+               ("t2", {"x0": "C", "x1": "D"})],
+    "star3": [("t0", {"x0": "M", "x1": "A"}), ("t1", {"x0": "M", "x1": "B"}),
+              ("t2", {"x0": "M", "x1": "C"})],
+    "triangle": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+                 ("t2", {"x0": "C", "x1": "A"})],
+    "cycle4": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+               ("t2", {"x0": "C", "x1": "D"}), ("t3", {"x0": "D", "x1": "A"})],
+}
+
+
+def _random_instance(shape: str, seed: int, output=None):
+    rng = np.random.default_rng(seed)
+    spec = SHAPES[shape]
+    domain = int(rng.integers(2, 6))
+    cat = Catalog()
+    for tname, vm in spec:
+        if tname in cat:
+            continue
+        nrows = int(rng.integers(0, 20))
+        cat.add(Table(tname, {
+            c: rng.integers(0, domain, size=nrows).astype(np.int64)
+            for c in vm}))
+    return cat, JoinQuery.of(shape, spec, output=output)
+
+
+def _row_multiset(gj, gfjs, all_vars):
+    """Desummarized rows as a sorted array over a fixed global var order."""
+    res = gj.desummarize(gfjs, decode=False)
+    if gfjs.join_size == 0:
+        return np.zeros((0, len(all_vars)), np.int64)
+    m = np.stack([res[v] for v in all_vars], axis=1)
+    return m[np.lexsort(m.T[::-1])]
+
+
+def _admissible_orders(variables, out_vars):
+    """All permutations with non-output vars first (what the search emits)."""
+    non_out = [v for v in variables if v not in out_vars]
+    outs = [v for v in variables if v in out_vars]
+    for p1 in itertools.permutations(non_out):
+        for p2 in itertools.permutations(outs):
+            yield list(p1) + list(p2)
+
+
+# ---------------------------------------------------------------------------
+# plan equivalence (satellite: property test over admissible orders)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", ["chain3", "star3", "triangle", "cycle4"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_all_admissible_orders_equivalent(shape, seed):
+    cat, query = _random_instance(shape, seed)
+    base = GraphicalJoin(cat, query)
+    ref_gfjs = base.run()
+    all_vars = sorted(query.variables)
+    ref_rows = _row_multiset(base, ref_gfjs, all_vars)
+
+    for order in _admissible_orders(query.variables, query.output_variables):
+        gj = GraphicalJoin(cat, query, elimination_order=order)
+        gfjs = gj.run()
+        assert gfjs.join_size == ref_gfjs.join_size
+        assert np.array_equal(_row_multiset(gj, gfjs, all_vars), ref_rows)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_projected_orders_equivalent(seed):
+    """Early projection: every admissible order agrees on the projection."""
+    cat, query = _random_instance("chain3", seed, output=["A", "D"])
+    base = GraphicalJoin(cat, query)
+    ref = base.run()
+    ref_rows = _row_multiset(base, ref, ["A", "D"])
+    for order in _admissible_orders(query.variables, query.output_variables):
+        gj = GraphicalJoin(cat, query, elimination_order=order)
+        gfjs = gj.run()
+        assert gfjs.join_size == ref.join_size
+        assert np.array_equal(_row_multiset(gj, gfjs, ["A", "D"]), ref_rows)
+
+
+@pytest.mark.parametrize("shape", ["chain3", "triangle", "cycle4"])
+def test_planner_candidates_equivalent(shape):
+    """min-fill, greedy, and beam candidates all produce the same result."""
+    cat, query = _random_instance(shape, 7)
+    enc = encode_query(cat, query)
+    logical, phys = plan_query(enc)
+    assert phys.alternatives, "search must report its candidates"
+    all_vars = sorted(query.variables)
+    ref = None
+    for cand in phys.alternatives:
+        gj = GraphicalJoin(cat, query, elimination_order=list(cand.order))
+        gfjs = gj.run()
+        rows = _row_multiset(gj, gfjs, all_vars)
+        if ref is None:
+            ref = (gfjs.join_size, rows)
+        assert gfjs.join_size == ref[0]
+        assert np.array_equal(rows, ref[1])
+
+
+# ---------------------------------------------------------------------------
+# search admissibility + cost model sanity
+# ---------------------------------------------------------------------------
+
+def test_search_orders_are_admissible():
+    cat, qs = lastfm_like(n_users=40, n_artists=30, artists_per_user=3,
+                          friends_per_user=2)
+    q = JoinQuery(qs["lastfm_A1"].name, qs["lastfm_A1"].tables,
+                  output=("A1", "A2"))
+    enc = encode_query(cat, q)
+    logical, phys = plan_query(enc)
+    out = set(q.output_variables)
+    for cand in phys.alternatives:
+        order = list(cand.order)
+        assert sorted(order) == sorted(q.variables)
+        assert order[-1] in out                     # output-var root
+        non_out = [v for v in order if v not in out]
+        assert order[:len(non_out)] == non_out      # O' strictly first
+
+    assert phys.order[-1] in out
+    assert phys.est_cost >= 0.0
+
+
+def test_cost_model_sees_skew():
+    """Dot-product bounds rank a skewed self-join above a uniform one."""
+    n = 4000
+    rng = np.random.default_rng(0)
+    skew = np.minimum((rng.pareto(0.7, n) * 3).astype(np.int64), 99)
+    unif = rng.integers(0, 100, n).astype(np.int64)
+    cat = Catalog.of(
+        Table("s", {"k": skew, "v": np.arange(n, dtype=np.int64)}),
+        Table("u", {"k": unif, "v": np.arange(n, dtype=np.int64)}),
+    )
+    def self_join_cost(tab, var):
+        q = JoinQuery.of("sj", [(tab, {"k": var, "v": "L"}),
+                                (tab, {"k": var, "v": "R"})])
+        enc = encode_query(cat, q)
+        model = CostModel(QueryStats.of(enc))
+        steps, total = model.simulate([var, "L", "R"])
+        return steps[0].product_entries
+    assert self_join_cost("s", "K") > 2 * self_join_cost("u", "K")
+
+
+def test_forced_order_and_min_fill_modes():
+    cat, query = figure1()
+    forced = GraphicalJoin(cat, query, elimination_order=["D", "C", "B", "A"])
+    assert list(forced.plan().order) == ["D", "C", "B", "A"]
+    assert forced.plan().source == "forced"
+    mf = GraphicalJoin(cat, query, planner="min_fill")
+    assert mf.plan().source == "min_fill"
+    assert forced.run().join_size == mf.run().join_size == 32
+
+
+# ---------------------------------------------------------------------------
+# explain + plan identity
+# ---------------------------------------------------------------------------
+
+def test_explain_renders_order_steps_backends():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query)
+    gj.run()
+    text = gj.explain()
+    plan = gj.plan()
+    assert " -> ".join(plan.order) in text
+    assert "eliminate" in text and "est_product=" in text
+    assert "backends" in text and "numpy" in text
+    assert "summarize" in text        # measured timings section
+    assert plan.signature() in text
+
+
+def test_plan_signature_and_fingerprint():
+    cat, query = figure1()
+    p1 = GraphicalJoin(cat, query, elimination_order=["D", "C", "B", "A"]).plan()
+    p2 = GraphicalJoin(cat, query, elimination_order=["C", "B", "A", "D"]).plan()
+    same = GraphicalJoin(cat, query, elimination_order=["D", "C", "B", "A"]).plan()
+    assert p1.signature() == same.signature()
+    assert p1.signature() != p2.signature()
+    # fingerprint: plan-less stays stable, plan-ful differs per plan
+    assert query.fingerprint() == query.fingerprint(plan=None)
+    assert query.fingerprint(plan=p1) != query.fingerprint()
+    assert query.fingerprint(plan=p1) != query.fingerprint(plan=p2)
+    assert query.fingerprint(plan=p1) == query.fingerprint(plan=same)
+
+
+def test_service_keys_on_plan_identity():
+    cat, query = figure1()
+    svc = JoinService(cat)
+    r1 = svc.frame(query)
+    assert r1.source == "computed" and r1.plan is not None
+    # same query, same (cached) plan -> hit
+    assert svc.frame(query).cache_hit
+    # a different forced plan is a different summary
+    other = GraphicalJoin(cat, query,
+                          elimination_order=["B", "C", "D", "A"]).plan()
+    r2 = svc.frame(query, plan=other)
+    assert r2.source == "computed" and r2.key != r1.key
+    assert svc.frame(query, plan=other).cache_hit
+    assert svc.stats()["compiled_plans"] == 1
+
+
+# ---------------------------------------------------------------------------
+# executor state machine (satellite: phase-state staleness fix)
+# ---------------------------------------------------------------------------
+
+def test_build_model_reentry_resets_downstream_state():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query)
+    gj.run()
+    stale_gen = gj.generator
+    assert stale_gen is not None and "summarize" in gj.timings
+    gj.build_model()                      # re-plan entry point
+    assert gj.generator is None           # no stale generator survives
+    assert "summarize" not in gj.timings  # downstream timings cleared
+    assert "build_generator" not in gj.timings
+    gfjs = gj.run()                       # pipeline rebuilds cleanly
+    assert gfjs.join_size == 32
+    assert gj.generator is not stale_gen
+
+
+def test_post_construction_mutation_is_live():
+    """The historical pattern: set elimination_order on an existing gj."""
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query)
+    gj.run()                                   # planner picked some order
+    gj.elimination_order = ["D", "C", "B", "A"]
+    gj.build_model()
+    gfjs = gj.run()
+    assert list(gj.plan().order) == ["D", "C", "B", "A"]
+    assert gj.plan().source == "forced"
+    assert gfjs.join_size == 32
+
+
+def test_executor_runs_precompiled_plan():
+    cat, query = figure1()
+    plan = GraphicalJoin(cat, query).plan()
+    ex = Executor(cat, query, plan=plan)
+    gfjs = ex.run()
+    assert gfjs.join_size == 32
+    assert ex.plan is plan                # pinned, not re-searched
+    assert list(gfjs.column_order)[0] == plan.order[-1]
+    # materialize honors the plan (inmem on these sizes)
+    out = ex.materialize(gfjs, decode=False)
+    assert isinstance(out, dict)
+
+
+def test_executor_jax_desummarize_matches_numpy():
+    cat, query = figure1()
+    ex = Executor(cat, query)
+    gfjs = ex.run()
+    ref = ex.desummarize(gfjs, decode=False)
+    ex.plan.backends["desummarize"] = "jax"
+    got = ex.desummarize(gfjs, decode=False)
+    for v in gfjs.column_order:
+        assert np.array_equal(ref[v], got[v])
+
+
+# ---------------------------------------------------------------------------
+# serve wire-in: features through a pre-compiled plan
+# ---------------------------------------------------------------------------
+
+def test_relational_feature_provider():
+    from repro.serve.engine import RelationalFeatureProvider
+    cat, qs = lastfm_like(n_users=50, n_artists=40, artists_per_user=4,
+                          friends_per_user=3)
+    q = qs["lastfm_A1"]
+    svc = JoinService(cat)
+    prov = RelationalFeatureProvider(
+        svc, q, key_var="U1",
+        aggs={"n_rows": "count", "n_artists": ("count", None)})
+    keys = np.asarray([0, 1, 10**9])      # last key unknown -> zeros
+    feats = prov.features(keys)
+    assert feats.shape == (3, 2) and feats.dtype == np.float32
+    assert np.all(feats[2] == 0.0)
+    # ground truth from the service's own group_by
+    tab = svc.group_by(q, "U1", n="count")
+    for i, k in enumerate(keys[:2]):
+        m = tab["U1"] == k
+        expect = float(tab["n"][m][0]) if m.any() else 0.0
+        assert feats[i, 0] == expect
+    # repeat pull is a cache hit (no second join)
+    before = svc.stats()["misses"]
+    prov.refresh()
+    prov.features(keys)
+    assert svc.stats()["misses"] == before

@@ -1,0 +1,205 @@
+"""JoinService / SummaryCache under threads, TTL, and explicit invalidation
+(ROADMAP "JoinService concurrency" item)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.relational.synth import lastfm_like
+from repro.summary.cache import SummaryCache, cache_key
+from repro.summary.service import JoinService
+
+
+@pytest.fixture(scope="module")
+def lastfm():
+    return lastfm_like(n_users=50, n_artists=40, artists_per_user=4,
+                       friends_per_user=3)
+
+
+def test_concurrent_requests_agree(lastfm):
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    queries = [qs["lastfm_A1"], qs["lastfm_B"], qs["lastfm_tri"]]
+    expected = [svc.count(q) for q in queries]
+
+    results, errors = [], []
+
+    def worker(i):
+        try:
+            for _ in range(5):
+                for q, want in zip(queries, expected):
+                    got = svc.count(q)
+                    if got != want:
+                        results.append((i, got, want))
+        except Exception as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert not results
+    st = svc.stats()
+    # every request did exactly one cache lookup; none lost under the lock
+    assert st["hits"] + st["disk_hits"] + st["misses"] == st["requests"]
+
+
+def test_concurrent_cold_start_single_query(lastfm):
+    """Many threads racing the same cold query: all agree, no crash."""
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    out, errors = [], []
+
+    def worker():
+        try:
+            out.append(svc.count(qs["lastfm_A1"]))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(set(out)) == 1
+
+
+def test_ttl_expires_resident_entries(lastfm):
+    cat, qs = lastfm
+    svc = JoinService(cat, ttl_seconds=0.05)
+    q = qs["lastfm_A1"]
+    assert svc.frame(q).source == "computed"
+    assert svc.frame(q).cache_hit                 # within TTL
+    time.sleep(0.06)
+    reply = svc.frame(q)                          # expired -> recompute
+    assert reply.source == "computed"
+    assert svc.cache.stats.expirations >= 1
+
+
+def test_ttl_expires_spilled_entries(tmp_path, lastfm):
+    cat, qs = lastfm
+    q = qs["lastfm_A1"]
+    cache = SummaryCache(byte_budget=1, spill_dir=str(tmp_path),
+                         ttl_seconds=0.05)
+    svc = JoinService(cat, cache=cache)
+    svc.frame(q)
+    other = qs["lastfm_B"]
+    svc.frame(other)                              # evicts + spills A1
+    time.sleep(0.06)
+    reply = svc.frame(q)
+    assert reply.source == "computed"             # spill file expired
+    assert cache.stats.expirations >= 1
+
+
+def test_ttl_measures_creation_not_promotion(tmp_path, lastfm):
+    """Evict/promote cycles must not restart the TTL clock."""
+    cat, qs = lastfm
+    q = qs["lastfm_A1"]
+    cache = SummaryCache(byte_budget=1, spill_dir=str(tmp_path),
+                         ttl_seconds=0.3)
+    svc = JoinService(cat, cache=cache)
+    svc.frame(q)                                  # born at t0
+    svc.frame(qs["lastfm_B"])                     # evicts + spills q
+    time.sleep(0.1)
+    assert svc.frame(q).source == "disk"          # promoted, still born t0
+    time.sleep(0.25)                              # 0.35 > ttl since *birth*
+    assert svc.frame(q).source == "computed"
+    assert cache.stats.expirations >= 1
+
+
+def test_invalidate_table_drops_exactly_matching(lastfm, tmp_path):
+    cat, qs = lastfm
+    svc = JoinService(cat, spill_dir=str(tmp_path))
+    a1, tri = qs["lastfm_A1"], qs["lastfm_tri"]
+    svc.frame(a1)       # uses user_artists + user_friends
+    svc.frame(tri)      # uses user_friends only
+    assert svc.frame(a1).cache_hit and svc.frame(tri).cache_hit
+
+    removed = svc.invalidate("user_artists")
+    assert removed >= 1
+    assert svc.frame(a1).source == "computed"     # dropped
+    assert svc.frame(tri).cache_hit               # untouched
+    assert svc.cache.stats.invalidations >= 1
+
+    # invalidating a table nobody used is a no-op
+    assert svc.invalidate("no_such_table") == 0
+
+
+def test_invalidate_covers_spill_files(tmp_path, lastfm):
+    cat, qs = lastfm
+    cache = SummaryCache(byte_budget=1, spill_dir=str(tmp_path))
+    svc = JoinService(cat, cache=cache)
+    svc.frame(qs["lastfm_A1"])
+    svc.frame(qs["lastfm_B"])                     # spills A1 to disk
+    assert cache.stats.spills >= 1
+    svc.invalidate("user_artists")                # both used user_artists
+    # nothing comes back from disk: both recompute
+    assert svc.frame(qs["lastfm_A1"]).source == "computed"
+    assert svc.frame(qs["lastfm_B"]).source == "computed"
+
+
+def test_invalidate_counts_logical_entries_once(tmp_path, lastfm):
+    """An entry both resident and spilled is one entry, not two."""
+    cat, qs = lastfm
+    cache = SummaryCache(byte_budget=1, spill_dir=str(tmp_path))
+    svc = JoinService(cat, cache=cache)
+    svc.frame(qs["lastfm_A1"])
+    svc.frame(qs["lastfm_B"])       # evicts + spills A1
+    svc.frame(qs["lastfm_A1"])      # promotes A1: resident AND on disk
+    assert cache.stats.spills >= 1
+    removed = svc.invalidate("user_artists")
+    assert removed == 2             # A1 and B, each counted once
+
+
+def test_provenance_pruned_with_evictions(lastfm):
+    """Without a spill dir, evicted/cleared keys leave no _tables residue."""
+    cat, qs = lastfm
+    cache = SummaryCache(byte_budget=1)     # no spill_dir
+    svc = JoinService(cat, cache=cache)
+    for q in (qs["lastfm_A1"], qs["lastfm_B"], qs["lastfm_tri"]):
+        svc.frame(q)
+    # budget of 1 byte keeps at most one resident entry; evicted keys must
+    # not accumulate provenance (version churn would grow it forever)
+    assert len(cache._tables) <= len(cache._entries)
+
+
+def test_plan_cache_is_bounded(lastfm):
+    cat, qs = lastfm
+    svc = JoinService(cat, max_plans=2)
+    for q in (qs["lastfm_A1"], qs["lastfm_B"], qs["lastfm_tri"],
+              qs["lastfm_A2"]):
+        svc.compile(q)
+    assert svc.stats()["compiled_plans"] <= 2
+
+
+def test_cache_lock_guards_raw_operations(lastfm):
+    """Hammer get/put/invalidate from threads directly on the cache."""
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    gfjs_frame = svc.frame(qs["lastfm_tri"]).frame
+    gfjs = gfjs_frame.gfjs
+    cache = SummaryCache(byte_budget=4 << 20)
+    errors = []
+
+    def worker(i):
+        try:
+            for j in range(50):
+                k = f"k{(i * 7 + j) % 5}"
+                cache.put(k, gfjs, tables={"user_friends"})
+                cache.get(k)
+                if j % 10 == 0:
+                    cache.invalidate("user_friends")
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
