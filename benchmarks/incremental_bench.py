@@ -1,0 +1,160 @@
+"""Incremental refresh vs full rebuild — the maintenance-cost benchmark.
+
+Two modes:
+
+* ``python -m benchmarks.incremental_bench``           — lastfm-shaped
+  tables at paper-adjacent scale (>= 1e6-row joins; duplication supplies
+  the result redundancy the paper's workloads have): append <= 1% of a
+  base table and time ``GraphicalJoin.refresh`` against a from-scratch
+  rebuild under the same plan, for both append shapes:
+    - ``reinforce`` — rows that repeat existing key pairs (event/playback
+      style growth): psi structure is preserved, so the refresh is a pure
+      weight re-propagation over the spliced summary;
+    - ``novel``     — rows with previously-unseen pairs: the refresh
+      re-expands from the first structurally-changed level down.
+* ``python -m benchmarks.incremental_bench --smoke``   — CI gate: small
+  instances, every refresh checked for *exact* GFJS equality against the
+  rebuild (plus a service-level append -> "refreshed" round trip); FAILs
+  (exit 1) on any mismatch or if the dirty-step machinery never engages.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, timer
+from repro.core.api import GraphicalJoin
+from repro.relational.synth import duplicate_rows, lastfm_like
+
+
+def _append_block(rng, table, kind: str, n: int):
+    """A block of ``n`` rows: resampled existing rows, or novel pairs."""
+    if kind == "reinforce":
+        idx = rng.integers(0, table.num_rows, n)
+        return {c: table[c][idx] for c in table.column_names}
+    cols = {}
+    for c in table.column_names:
+        hi = int(table[c].max()) + 1
+        cols[c] = rng.integers(0, hi + max(hi // 8, 2), n).astype(np.int64)
+    return cols
+
+
+def _one_case(cat, query, table: str, kind: str, frac: float, seed: int):
+    """Returns (rebuild_s, refresh_s, report, join_size) for one append."""
+    gj = GraphicalJoin(cat, query, record_trace=True)
+    gfjs = gj.run()
+    state = gj.capture_state(gfjs)
+    rng = np.random.default_rng(seed)
+    n = max(1, int(cat[table].num_rows * frac))
+    delta = cat.append(table, _append_block(rng, cat[table], kind, n))
+
+    state, refresh_s = timer(gj.refresh, state, delta)
+    report = state.last_report
+
+    rebuilt, rebuild_s = timer(
+        lambda: GraphicalJoin(cat, query, plan=gj.plan()).run())
+    if rebuilt.join_size != gj.generator.join_size:
+        raise AssertionError(
+            f"refresh diverged: {gj.generator.join_size} vs "
+            f"{rebuilt.join_size}")
+    return rebuild_s, refresh_s, report, rebuilt.join_size
+
+
+def bench() -> None:
+    print("name,us_per_call,derived")
+    cat0, qs = lastfm_like(n_users=1200, n_artists=800, artists_per_user=15,
+                           friends_per_user=6, alpha=1.2, seed=0)
+    for qname in ("lastfm_A1", "lastfm_B"):
+        for table in ("user_friends", "user_artists"):
+            for kind in ("reinforce", "novel"):
+                cat = duplicate_rows(cat0, factor=25)
+                rebuild_s, refresh_s, report, join = _one_case(
+                    cat, qs[qname], table, kind, frac=0.005, seed=7)
+                speedup = rebuild_s / max(refresh_s, 1e-9)
+                derived = (
+                    f"join={join:.3g};speedup={speedup:.1f}x;"
+                    f"rebuild_ms={rebuild_s * 1e3:.1f};"
+                    f"dirty={report['dirty_steps']:.0f}/"
+                    f"{report['total_steps']:.0f};"
+                    f"spliced={report['spliced_levels']:.0f}/"
+                    f"{report['total_levels']:.0f}")
+                print(csv_line(
+                    f"incremental/{qname}/{table}/{kind}",
+                    refresh_s * 1e6, derived), flush=True)
+
+
+def smoke() -> int:
+    failures = []
+
+    def check_exact(cat, query, table, kind, seed):
+        gj = GraphicalJoin(cat, query, record_trace=True)
+        state = gj.capture_state(gj.run())
+        rng = np.random.default_rng(seed)
+        n = max(1, cat[table].num_rows // 20)
+        delta = cat.append(table, _append_block(rng, cat[table], kind, n))
+        state = gj.refresh(state, delta)
+        rebuilt = GraphicalJoin(cat, query, plan=state.plan).run()
+        name = f"{query.name}/{table}/{kind}"
+        if rebuilt.join_size != state.gfjs.join_size:
+            failures.append(f"{name}: join size diverged")
+            return
+        for la, lb in zip(state.gfjs.levels, rebuilt.levels):
+            if la.vars != lb.vars or not np.array_equal(la.freq, lb.freq) \
+                    or any(not np.array_equal(la.key_cols[v], lb.key_cols[v])
+                           for v in la.vars):
+                failures.append(f"{name}: level {la.vars} diverged")
+                return
+        print(f"  {name}: exact  (dirty "
+              f"{state.last_report['dirty_steps']:.0f}/"
+              f"{state.last_report['total_steps']:.0f}, spliced "
+              f"{state.last_report['spliced_levels']:.0f}/"
+              f"{state.last_report['total_levels']:.0f})")
+
+    cat0, qs = lastfm_like(n_users=120, n_artists=90, artists_per_user=5,
+                           friends_per_user=3, seed=0)
+    for qname in ("lastfm_A1", "lastfm_tri"):
+        for kind in ("reinforce", "novel"):
+            cat = duplicate_rows(cat0, factor=2)
+            check_exact(cat, qs[qname], "user_friends", kind, seed=13)
+
+    # service round trip: append -> lazy refresh -> cache upgrade
+    from repro.summary.service import JoinService
+    cat = duplicate_rows(cat0, factor=2)
+    svc = JoinService(cat)
+    q = qs["lastfm_A1"]
+    svc.frame(q)
+    rng = np.random.default_rng(3)
+    svc.append("user_friends", {"userID": rng.integers(0, 120, 5),
+                                "friendID": rng.integers(0, 120, 5)})
+    reply = svc.frame(q)
+    if reply.source != "refreshed":
+        failures.append(f"service append did not refresh: {reply.source}")
+    cold = JoinService(cat, incremental=False)
+    if reply.frame.count() != cold.count(q):
+        failures.append("service refresh diverged from cold compute")
+
+    if failures:
+        print("INCREMENTAL SMOKE FAILURES:")
+        for f in failures:
+            print(" -", f)
+        return 1
+    print("incremental smoke: OK")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI correctness gate instead of the timing sweep")
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(smoke())
+    bench()
+
+
+if __name__ == "__main__":
+    main()

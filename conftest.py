@@ -1,0 +1,19 @@
+"""Pytest configuration: test tiers (DESIGN.md §13).
+
+Two markers split the suite:
+
+* ``slow`` — hypothesis/property sweeps and jax-compile-heavy model
+  suites; minutes-scale, the depth tier.
+* unmarked — the fast tier; seconds-scale, the inner loop for pipeline
+  work: ``pytest -m "not slow"``.
+
+CI and the tier-1 verify command run everything (bare ``pytest``).
+Files opt in at module level with ``pytestmark = pytest.mark.slow``.
+"""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: property sweeps and jax-compile-heavy suites; "
+        "deselect with -m \"not slow\" for the fast inner loop")

@@ -45,7 +45,10 @@ class GraphicalJoin:
     ``elimination_order`` forces a specific order (bypassing the search);
     ``planner`` selects the search mode ("cost" — the default candidate
     search, or "min_fill" — the paper's lone heuristic); ``plan`` injects a
-    pre-compiled :class:`PhysicalPlan` (the `JoinService` serve path).
+    pre-compiled :class:`PhysicalPlan` (the `JoinService` serve path);
+    ``record_trace`` keeps the elimination trace + expansion indices so
+    `capture_state`/`refresh` can maintain the summary incrementally on
+    base-table appends (repro/summary/incremental.py).
     """
 
     def __init__(
@@ -57,6 +60,7 @@ class GraphicalJoin:
         early_projection: bool = True,
         planner: str = "cost",
         plan: Optional["PhysicalPlan"] = None,
+        record_trace: bool = False,
     ) -> None:
         from repro.plan.executor import Executor
         self.catalog = catalog
@@ -67,6 +71,7 @@ class GraphicalJoin:
             early_projection=early_projection,
             planner=planner,
             plan=plan,
+            record_trace=record_trace,
         )
 
     # -- executor state, exposed under the historical names ----------------
@@ -143,6 +148,24 @@ class GraphicalJoin:
     def run(self) -> GFJS:
         """build_model -> plan -> build_generator -> summarize."""
         return self.summarize()
+
+    # -- incremental maintenance ------------------------------------------
+    def capture_state(self, gfjs: GFJS, versions=None):
+        """Snapshot for later delta refreshes (requires record_trace=True)."""
+        return self._executor.capture_state(gfjs, versions=versions)
+
+    def refresh(self, state, deltas):
+        """Apply table appends to a captured state (the ``refresh`` phase).
+
+            gj = GraphicalJoin(cat, query, record_trace=True)
+            gfjs = gj.run(); state = gj.capture_state(gfjs)
+            delta = cat.append("user_friends", rows)
+            state = gj.refresh(state, delta)     # state.gfjs is the new summary
+
+        Only the appended block is encoded and only the dirty elimination
+        steps re-run; ``timings["refresh"]`` holds the wall time.
+        """
+        return self._executor.refresh(state, deltas)
 
     def explain(self) -> str:
         """Render the plan, annotated with any timings measured so far."""

@@ -64,6 +64,43 @@ class Psi:
 
 
 @dataclass
+class StepTrace:
+    """Provenance + products of one elimination step (incremental refresh).
+
+    ``rel_tables`` are indices into the per-occurrence table factors,
+    ``rel_msgs`` the variables of earlier steps whose messages fed this
+    product.  Both are *structural*: which factors contain a variable
+    depends only on the query graph and the order, never on the data, so
+    the same wiring can be replayed against updated factors.
+    """
+
+    var: str
+    rel_tables: Tuple[int, ...]
+    rel_msgs: Tuple[str, ...]
+    parents: Tuple[str, ...]
+    message: Factor
+    psi: Optional[Psi]           # None for projected-out (O') variables
+
+
+@dataclass
+class EliminationTrace:
+    """Everything a delta refresh needs to re-run only dirty steps."""
+
+    steps: List[StepTrace]
+    root_tables: Tuple[int, ...]       # table factors surviving to the root
+    root_msgs: Tuple[str, ...]         # messages surviving to the root
+    factors: List[Factor]              # per table occurrence, build order
+
+    def nbytes(self) -> int:
+        n = sum(f.keys.nbytes + f.bucket.nbytes + f.fac.nbytes
+                for f in self.factors)
+        for s in self.steps:
+            n += int(s.message.keys.nbytes + s.message.bucket.nbytes
+                     + s.message.fac.nbytes)
+        return int(n)
+
+
+@dataclass
 class Generator:
     """The GFJS generator: root marginal + conditional factors by level.
 
@@ -80,6 +117,7 @@ class Generator:
     column_order: List[str]      # root + level children, generation order
     join_size: int
     stats: Dict[str, float] = field(default_factory=dict)
+    trace: Optional[EliminationTrace] = None   # set by record_trace builds
 
     def nbytes(self) -> int:
         n = int(self.root_codes.nbytes + self.root_freq.nbytes)
@@ -113,18 +151,101 @@ def _make_psi(phi: Factor, child: str, parents: Tuple[str, ...]) -> Psi:
                tuple(f.sizes[:p]), int(f.sizes[p]))
 
 
+def eliminate_step(
+    rel: List[Factor], v: str, order: Sequence[str], out_vars: Sequence[str]
+) -> Tuple[Optional[Psi], Tuple[str, ...], Factor]:
+    """One Algorithm-2 step: product, conditionalize, sum out.
+
+    Returns ``(psi, parents, message)``; ``psi`` is None for projected-out
+    variables.  Shared between the full build and the incremental refresher
+    (which replays exactly this computation for dirty steps).
+    """
+    # Bind v FIRST in the frontier: every rel factor contains v, so each
+    # later variable joins through it and prefix frontiers stay within
+    # the pairwise-product bounds anchored at v.  Binding v last lets a
+    # star of factors around v go cartesian over the satellite
+    # variables before v prunes them (observed 100x+ slowdowns on
+    # cyclic queries).  Output column order is (v, parents...) either
+    # way downstream consumers re-sort.
+    phi_alpha = multiway_product(
+        rel, var_order=[v] + [u for u in order if u != v])
+    parents = tuple(u for u in phi_alpha.vars if u != v)
+    psi = _make_psi(phi_alpha, v, parents) if v in out_vars else None
+    msg = phi_alpha.marginalize_out(v)
+    return psi, parents, msg
+
+
+def root_marginal(factors: List[Factor], root: str) -> Factor:
+    """Product of the factors surviving to the root (all over ``root``)."""
+    for f in factors:
+        if tuple(f.vars) != (root,):  # pragma: no cover - invariant
+            raise AssertionError(f"leftover factor over {f.vars} at root")
+    phi_root = factors[0]
+    for f in factors[1:]:
+        phi_root = phi_root.multiply(f)
+    return phi_root.sort_by([root])
+
+
+def assemble_generator(
+    order: Sequence[str],
+    psis: Dict[str, Psi],
+    parents_of: Dict[str, Tuple[str, ...]],
+    phi_root: Factor,
+    stats: Dict[str, float],
+    trace: Optional[EliminationTrace] = None,
+) -> Generator:
+    """Depth-level the psis under the root marginal into a Generator.
+
+    Pure assembly (no data work): the refresher calls this with a mix of
+    reused and recomputed psis to rebuild the generator after a delta.
+    """
+    root = order[-1]
+    join_size = int(np.sum(phi_root.bucket * phi_root.fac))
+
+    # depth levels of the generator DAG
+    depth: Dict[str, int] = {root: 0}
+    for v in reversed(list(order[:-1])):
+        if v in psis:
+            ps = parents_of[v]
+            depth[v] = 1 + max((depth[p] for p in ps), default=0)
+    max_depth = max(depth.values(), default=0)
+    levels: List[List[Psi]] = [[] for _ in range(max_depth)]
+    order_index = {v: i for i, v in enumerate(order)}
+    for v in sorted(psis, key=lambda u: (depth[u], order_index[u])):
+        levels[depth[v] - 1].append(psis[v])
+
+    column_order = [root] + [p.child for lvl in levels for p in lvl]
+
+    return Generator(
+        root=root,
+        root_codes=phi_root.keys[:, 0].copy(),
+        root_freq=(phi_root.bucket * phi_root.fac).astype(INT),
+        levels=levels,
+        elimination_order=list(order),
+        column_order=column_order,
+        join_size=join_size,
+        stats=stats,
+        trace=trace,
+    )
+
+
 def build_generator(
     enc: EncodedQuery,
     *,
     elimination_order: Optional[Sequence[str]] = None,
     early_projection: bool = True,
     factors: Optional[List[Factor]] = None,
+    record_trace: bool = False,
 ) -> Generator:
     """Run Algorithm 2 over the (possibly cyclic) query graph.
 
     ``factors``: pre-built quantitative-learning potentials (one per table
     occurrence, in ``enc.encoded_tables`` order).  The planner builds them
     for its statistics; passing them here avoids a second GROUP BY pass.
+
+    ``record_trace`` keeps per-step provenance and messages on the returned
+    generator (``Generator.trace``) so a later base-table append can re-run
+    only the dirty steps (repro/summary/incremental.py).
     """
     query = enc.query
     sizes = enc.domain_sizes()
@@ -153,70 +274,58 @@ def build_generator(
     else:
         factors = list(factors)
 
-    psis: Dict[str, Psi] = {}
-    parents_of: Dict[str, Tuple[str, ...]] = {}
-    emitted: List[str] = []
-
-    for v in order[:-1]:
-        rel = [f for f in factors if v in f.vars]
-        rest = [f for f in factors if v not in f.vars]
-        if not rel:  # pragma: no cover - connected graph invariant
-            raise AssertionError(f"no factor contains variable {v}")
-        # Bind v FIRST in the frontier: every rel factor contains v, so each
-        # later variable joins through it and prefix frontiers stay within
-        # the pairwise-product bounds anchored at v.  Binding v last lets a
-        # star of factors around v go cartesian over the satellite
-        # variables before v prunes them (observed 100x+ slowdowns on
-        # cyclic queries).  Output column order is (v, parents...) either
-        # way downstream consumers re-sort.
-        phi_alpha = multiway_product(
-            rel, var_order=[v] + [u for u in order if u != v])
-        parents = tuple(u for u in phi_alpha.vars if u != v)
-        parents_of[v] = parents
-        if v in out_vars:
-            psis[v] = _make_psi(phi_alpha, v, parents)
-            emitted.append(v)
-        msg = phi_alpha.marginalize_out(v)
-        factors = rest + [msg]
-
-    # root: product of the remaining factors (all over the root only)
-    root = order[-1]
-    for f in factors:
-        if tuple(f.vars) != (root,):  # pragma: no cover - invariant
-            raise AssertionError(f"leftover factor over {f.vars} at root")
-    phi_root = factors[0]
-    for f in factors[1:]:
-        phi_root = phi_root.multiply(f)
-    phi_root = phi_root.sort_by([root])
-    if root not in out_vars:  # root must be an output var (O' precedes O)
+    if order[-1] not in out_vars:  # root must be an output var (O' precedes O)
         raise AssertionError("root is a projected-out variable")
 
-    join_size = int(np.sum(phi_root.bucket * phi_root.fac))
+    psis: Dict[str, Psi] = {}
+    parents_of: Dict[str, Tuple[str, ...]] = {}
+    trace_steps: List[StepTrace] = []
 
-    # depth levels of the generator DAG
-    depth: Dict[str, int] = {root: 0}
-    for v in reversed(order[:-1]):
-        if v in psis:
-            ps = parents_of[v]
-            depth[v] = 1 + max((depth[p] for p in ps), default=0)
-    max_depth = max(depth.values(), default=0)
-    levels: List[List[Psi]] = [[] for _ in range(max_depth)]
-    for v in sorted(psis, key=lambda u: (depth[u], order.index(u))):
-        levels[depth[v] - 1].append(psis[v])
+    # the working set carries provenance tags: ("table", occurrence index)
+    # for quantitative-learning factors, ("msg", var) for messages — which
+    # is exactly the wiring an incremental refresh replays
+    working: List[Tuple[str, object, Factor]] = [
+        ("table", i, f) for i, f in enumerate(factors)]
 
-    column_order = [root] + [p.child for lvl in levels for p in lvl]
+    for v in order[:-1]:
+        rel = [t for t in working if v in t[2].vars]
+        rest = [t for t in working if v not in t[2].vars]
+        if not rel:  # pragma: no cover - connected graph invariant
+            raise AssertionError(f"no factor contains variable {v}")
+        psi, parents, msg = eliminate_step(
+            [f for _, _, f in rel], v, order, out_vars)
+        parents_of[v] = parents
+        if psi is not None:
+            psis[v] = psi
+        if record_trace:
+            trace_steps.append(StepTrace(
+                var=v,
+                rel_tables=tuple(r for k, r, _ in rel if k == "table"),
+                rel_msgs=tuple(r for k, r, _ in rel if k == "msg"),
+                parents=parents,
+                message=msg,
+                psi=psi,
+            ))
+        working = rest + [("msg", v, msg)]
 
-    return Generator(
-        root=root,
-        root_codes=phi_root.keys[:, 0].copy(),
-        root_freq=(phi_root.bucket * phi_root.fac).astype(INT),
-        levels=levels,
-        elimination_order=list(order),
-        column_order=column_order,
-        join_size=join_size,
+    # root: product of the remaining factors (all over the root only)
+    phi_root = root_marginal([f for _, _, f in working], order[-1])
+
+    trace = None
+    if record_trace:
+        trace = EliminationTrace(
+            steps=trace_steps,
+            root_tables=tuple(r for k, r, _ in working if k == "table"),
+            root_msgs=tuple(r for k, r, _ in working if k == "msg"),
+            factors=list(factors),
+        )
+
+    return assemble_generator(
+        order, psis, parents_of, phi_root,
         stats={
             "num_fill_edges": float(len(tri.fill_edges)),
             "num_maxcliques": float(len(tri.maxcliques)),
             "largest_maxclique": float(max((len(c) for c in tri.maxcliques), default=0)),
         },
+        trace=trace,
     )

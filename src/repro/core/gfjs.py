@@ -111,8 +111,51 @@ def _expand(
     return src, within
 
 
-def generate_gfjs(gen: Generator, domains: Dict[str, Domain]) -> GFJS:
-    """Run Algorithms 3/4 (level-synchronous) over the generator."""
+def expand_level(
+    cols: Dict[str, np.ndarray], p_bucket: np.ndarray, level: Sequence[Psi]
+) -> Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray, Tuple[str, ...],
+           List[Tuple[np.ndarray, np.ndarray]]]:
+    """Expand one generator level over the current frontier.
+
+    Returns ``(cols, p_bucket, freq, new_vars, cache)`` where ``cache``
+    holds one ``(src, cidx)`` index pair per psi: ``src`` maps each output
+    frontier row to its source row in the previous frontier state, ``cidx``
+    to the psi entry it consumed.  When a base-table append changes psi
+    *values* but not psi *structure*, replaying these gathers re-propagates
+    the run weights without redoing any group lookup or expansion — the
+    splice fast path of repro/summary/incremental.py.
+    """
+    fac_acc = np.ones(len(p_bucket), INT)
+    new_vars: List[str] = []
+    cache: List[Tuple[np.ndarray, np.ndarray]] = []
+    for psi in level:
+        pk = (np.stack([cols[p] for p in psi.parents], axis=1)
+              if psi.parents else np.zeros((len(p_bucket), 0), INT))
+        g = _lookup_groups(pk, psi)
+        counts = np.zeros(len(g), INT)
+        hit = g >= 0
+        counts[hit] = psi.count[g[hit]]
+        src, within = _expand(counts)
+        cidx = psi.start[g[src]] + within
+        cols = {v: a[src] for v, a in cols.items()}
+        cols[psi.child] = psi.child_codes[cidx]
+        p_bucket = p_bucket[src] * psi.bucket[cidx]
+        fac_acc = fac_acc[src] * psi.fac[cidx]
+        new_vars.append(psi.child)
+        cache.append((src, cidx))
+    return cols, p_bucket, p_bucket * fac_acc, tuple(new_vars), cache
+
+
+def generate_gfjs(
+    gen: Generator, domains: Dict[str, Domain],
+    expansion_cache: Optional[List[List[Tuple[np.ndarray, np.ndarray]]]] = None,
+) -> GFJS:
+    """Run Algorithms 3/4 (level-synchronous) over the generator.
+
+    ``expansion_cache`` (when a list is passed) collects the per-level
+    ``(src, cidx)`` gather indices from :func:`expand_level` — the raw
+    material of incremental weight re-propagation.
+    """
     levels_out: List[LevelSummary] = [
         LevelSummary((gen.root,), {gen.root: gen.root_codes}, gen.root_freq)
     ]
@@ -121,25 +164,12 @@ def generate_gfjs(gen: Generator, domains: Dict[str, Domain]) -> GFJS:
     p_bucket = np.ones(len(gen.root_codes), INT)
 
     for level in gen.levels:
-        fac_acc = np.ones(len(p_bucket), INT)
-        new_vars: List[str] = []
-        for psi in level:
-            pk = (np.stack([cols[p] for p in psi.parents], axis=1)
-                  if psi.parents else np.zeros((len(p_bucket), 0), INT))
-            g = _lookup_groups(pk, psi)
-            counts = np.zeros(len(g), INT)
-            hit = g >= 0
-            counts[hit] = psi.count[g[hit]]
-            src, within = _expand(counts)
-            cidx = psi.start[g[src]] + within
-            cols = {v: a[src] for v, a in cols.items()}
-            cols[psi.child] = psi.child_codes[cidx]
-            p_bucket = p_bucket[src] * psi.bucket[cidx]
-            fac_acc = fac_acc[src] * psi.fac[cidx]
-            new_vars.append(psi.child)
-        freq = p_bucket * fac_acc
+        cols, p_bucket, freq, new_vars, cache = expand_level(
+            cols, p_bucket, level)
         levels_out.append(LevelSummary(
-            tuple(new_vars), {v: cols[v] for v in new_vars}, freq))
+            new_vars, {v: cols[v] for v in new_vars}, freq))
+        if expansion_cache is not None:
+            expansion_cache.append(cache)
 
     return GFJS(levels_out, list(gen.column_order), gen.join_size, domains)
 

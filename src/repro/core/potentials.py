@@ -113,6 +113,39 @@ class Factor:
         """A message factor: its value rides in the ``fac`` column."""
         return Factor(vars, keys, np.ones(len(value), INT), np.asarray(value, INT), sizes)
 
+    def merge_counts(self, other: "Factor") -> "Factor":
+        """Pointwise sum of two bucket-count factors over the same schema.
+
+        The delta-refresh primitive: a base-table append's potential is the
+        GROUP BY of the appended block alone, and the grown table's
+        potential is ``old.merge_counts(delta)`` — O((n+d) log(n+d)) on
+        factor entries, never a rescan of the base rows.  Both sides must
+        be pure table potentials (``fac == 1`` everywhere).
+        """
+        if self.vars != other.vars or self.sizes != other.sizes:
+            raise ValueError(
+                f"merge_counts schema mismatch: {self.vars}/{self.sizes} "
+                f"vs {other.vars}/{other.sizes}")
+        if np.any(self.fac != 1) or np.any(other.fac != 1):
+            raise ValueError("merge_counts only applies to table potentials")
+        if other.num_entries == 0:
+            return self
+        if self.num_entries == 0:
+            return other
+        keys = np.concatenate([self.keys, other.keys], axis=0)
+        bucket = np.concatenate([self.bucket, other.bucket])
+        ranks, _ = _rank_rows(keys, self.sizes)
+        order = np.argsort(ranks, kind="stable")
+        keys, sranks, bucket = keys[order], ranks[order], bucket[order]
+        new = np.ones(len(sranks), dtype=bool)
+        new[1:] = sranks[1:] != sranks[:-1]
+        starts = np.flatnonzero(new)
+        seg = np.cumsum(new) - 1
+        sums = np.zeros(len(starts), dtype=INT)
+        np.add.at(sums, seg, bucket)
+        return Factor(self.vars, keys[starts], sums,
+                      np.ones(len(starts), INT), self.sizes)
+
     # -- basics --------------------------------------------------------------
     @property
     def num_entries(self) -> int:

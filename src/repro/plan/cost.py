@@ -43,6 +43,7 @@ class StepEstimate:
     separator: Tuple[str, ...]      # remaining vars of the product
     message_entries: float          # estimated message size after summing out
     num_factors: int                # how many factors contained the var
+    tables: Tuple[str, ...] = ()    # base tables feeding the step (transitive)
 
     @property
     def cost(self) -> float:
@@ -96,7 +97,8 @@ def _join_stats(a: FactorStats, b: FactorStats) -> FactorStats:
             degrees[v] = a.degrees[v] * (entries / max(a.entries, 1.0))
         elif b.has_degrees(v):
             degrees[v] = b.degrees[v] * (entries / max(b.entries, 1.0))
-    return FactorStats(out_vars, entries, distinct, degrees)
+    return FactorStats(out_vars, entries, distinct, degrees,
+                       a.sources | b.sources)
 
 
 def _sum_out(joint: FactorStats, var: str) -> FactorStats:
@@ -110,7 +112,7 @@ def _sum_out(joint: FactorStats, var: str) -> FactorStats:
     distinct = {v: min(joint.distinct[v], max(entries, 1.0)) for v in keep}
     degrees = {v: joint.degrees[v] * scale
                for v in keep if v in joint.degrees}
-    return FactorStats(keep, entries, distinct, degrees)
+    return FactorStats(keep, entries, distinct, degrees, joint.sources)
 
 
 class CostModel:
@@ -134,7 +136,8 @@ class CostModel:
         for f in rel[1:]:
             joint = _join_stats(joint, f)
         msg = _sum_out(joint, var)
-        est = StepEstimate(var, joint.entries, msg.vars, msg.entries, len(rel))
+        est = StepEstimate(var, joint.entries, msg.vars, msg.entries, len(rel),
+                           tuple(sorted(joint.sources)))
         return est, rest + [msg]
 
     def step_cost(self, factors: List[FactorStats], var: str) -> float:

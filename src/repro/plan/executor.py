@@ -34,18 +34,26 @@ class Executor:
                  elimination_order: Optional[Sequence[str]] = None,
                  early_projection: bool = True,
                  planner: str = "cost",
-                 plan: Optional[PhysicalPlan] = None) -> None:
+                 plan: Optional[PhysicalPlan] = None,
+                 record_trace: bool = False) -> None:
         self.catalog = catalog
         self.query = query
         self.elimination_order = elimination_order
         self.early_projection = early_projection
         self.planner = planner
+        self.record_trace = record_trace
         self.timings: Dict[str, float] = {}
         self.enc: Optional[EncodedQuery] = None
         self.logical: Optional[LogicalPlan] = None
         self.plan: Optional[PhysicalPlan] = plan
         self._forced_plan = plan is not None
         self.generator: Optional[Generator] = None
+        # per-level (src, cidx) gather indices from the last summarize —
+        # captured under record_trace for incremental refresh splicing
+        self.expansion_cache = None
+        self.refresh_report: Dict[str, float] = {}
+        # content versions of the tables actually encoded by build_model
+        self.source_versions: Optional[Dict[str, str]] = None
 
     # -- phases ------------------------------------------------------------
     def build_model(self) -> "Executor":
@@ -53,10 +61,19 @@ class Executor:
 
         Re-entry resets every downstream phase product — a re-encoded query
         must never reuse a generator or plan built on the previous encoding.
+
+        The base tables are snapshotted once up front (Table objects are
+        immutable) and ``source_versions`` records exactly what was
+        encoded: a concurrent append replacing a catalog entry mid-build
+        can therefore never skew the provenance an incremental refresh
+        later chains its deltas from.
         """
         self._reset_downstream()
         t0 = time.perf_counter()
-        self.enc = encode_query(self.catalog, self.query)
+        snapshot = {qt.table: self.catalog[qt.table]
+                    for qt in self.query.tables}
+        self.enc = encode_query(Catalog(dict(snapshot)), self.query)
+        self.source_versions = {n: t.version() for n, t in snapshot.items()}
         self.timings = {"build_model": time.perf_counter() - t0}
         return self
 
@@ -64,6 +81,7 @@ class Executor:
         self.enc = None
         self.logical = None
         self.generator = None
+        self.expansion_cache = None
         if not self._forced_plan:
             self.plan = None
         self.timings = {}
@@ -105,6 +123,7 @@ class Executor:
             elimination_order=list(plan.order),
             early_projection=plan.early_projection,
             factors=list(self.logical.stats.factors),
+            record_trace=self.record_trace,
         )
         self.timings["build_generator"] = time.perf_counter() - t0
         return self
@@ -113,12 +132,51 @@ class Executor:
         if self.generator is None:
             self.build_generator()
         t0 = time.perf_counter()
-        gfjs = generate_gfjs(self.generator, self.enc.domains)
+        if self.record_trace:
+            self.expansion_cache = []
+            gfjs = generate_gfjs(self.generator, self.enc.domains,
+                                 self.expansion_cache)
+        else:
+            gfjs = generate_gfjs(self.generator, self.enc.domains)
         self.timings["summarize"] = time.perf_counter() - t0
         return gfjs
 
     def run(self) -> GFJS:
         return self.summarize()
+
+    # -- incremental refresh ----------------------------------------------
+    def capture_state(self, gfjs: GFJS, versions=None):
+        """Snapshot this run for later delta refreshes (record_trace only)."""
+        from repro.summary.incremental import capture_state
+        return capture_state(self, gfjs, versions=versions)
+
+    def refresh(self, state, deltas) -> "IncrementalState":
+        """The ``refresh`` phase: apply appends to a captured state.
+
+        Re-encodes only the appended blocks, re-runs only the dirty
+        elimination steps, and splices the result into the retained
+        summary structure.  Wall time lands in ``timings["refresh"]`` so
+        benchmarks can put rebuild and refresh side by side; the refreshed
+        generator is adopted so ``desummarize``/``explain`` keep working.
+        """
+        from repro.summary.incremental import refresh_state
+        if not isinstance(deltas, (list, tuple)):
+            deltas = [deltas]
+        t0 = time.perf_counter()
+        new_state, report = refresh_state(state, deltas)
+        self.timings["refresh"] = time.perf_counter() - t0
+        self.generator = new_state.generator
+        self.expansion_cache = new_state.expansion_cache
+        self.source_versions = dict(new_state.table_versions)
+        if self.enc is not None:
+            # domains advance with the refresh so summarize()/desummarize
+            # decode through the grown dictionaries; the encoded base
+            # columns are NOT re-read (the refresher never rescans them) —
+            # re-enter build_model to re-derive them if needed
+            self.enc = EncodedQuery(self.enc.query, new_state.domains,
+                                    self.enc.encoded_tables)
+        self.refresh_report = report
+        return new_state
 
     # -- plan-directed materialization ------------------------------------
     def desummarize(self, gfjs: GFJS, *, decode: bool = True

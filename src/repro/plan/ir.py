@@ -66,6 +66,28 @@ class PhysicalPlan:
     planner: str = "cost"
     search_seconds: float = 0.0
 
+    # -- delta support -----------------------------------------------------
+    def dirty_steps(self, table: str) -> Tuple[str, ...]:
+        """Variables whose elimination steps an append to ``table`` dirties.
+
+        Each :class:`StepEstimate` carries the base tables feeding it —
+        directly (the step consumes one of the table's potentials) or
+        transitively (it consumes a message derived from one).  The result
+        is therefore the downstream closure in the message-flow DAG: the
+        exact set of steps an incremental refresh must recompute; every
+        other step's conditional factor and message are reusable as-is.
+        """
+        return tuple(s.var for s in self.steps if table in s.tables)
+
+    def refresh_fraction(self, table: str) -> float:
+        """Estimated share of elimination work an append re-runs (0..1)."""
+        total = sum(s.product_entries for s in self.steps)
+        if total <= 0.0:
+            return 1.0
+        dirty = sum(s.product_entries for s in self.steps
+                    if table in s.tables)
+        return dirty / total
+
     # -- identity ----------------------------------------------------------
     def signature(self) -> str:
         """Stable hash of the execution-relevant plan fields.
@@ -107,10 +129,13 @@ class PhysicalPlan:
             lines.append("  steps:")
             for s in self.steps:
                 sep = ",".join(s.separator) or "()"
-                lines.append(
+                line = (
                     f"    eliminate {s.var:<12s} factors={s.num_factors}"
                     f"  est_product={s.product_entries:.3g}"
                     f"  sep=({sep})  est_message={s.message_entries:.3g}")
+                if s.tables:
+                    line += f"  tables=({','.join(s.tables)})"
+                lines.append(line)
         if self.alternatives:
             lines.append("  candidates:")
             for c in self.alternatives:

@@ -21,8 +21,8 @@ of the only option.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,12 +40,18 @@ class FactorStats:
     entries: float                       # distinct key rows (estimated)
     distinct: Dict[str, float]           # per-var distinct value count
     degrees: Dict[str, np.ndarray]       # per-var degree vector (optional)
+    # base tables folded into this (possibly simulated) factor.  Messages
+    # accumulate the sources of everything they consumed, so a step's
+    # sources are exactly the tables whose appends dirty it — the plan-level
+    # dependency map behind PhysicalPlan.dirty_steps().
+    sources: FrozenSet[str] = frozenset()
 
     def has_degrees(self, v: str) -> bool:
         return v in self.degrees
 
     @staticmethod
-    def of(factor: Factor, sizes: Dict[str, int]) -> "FactorStats":
+    def of(factor: Factor, sizes: Dict[str, int],
+           sources: FrozenSet[str] = frozenset()) -> "FactorStats":
         distinct: Dict[str, float] = {}
         degrees: Dict[str, np.ndarray] = {}
         for v in factor.vars:
@@ -59,7 +65,7 @@ class FactorStats:
             else:
                 distinct[v] = float(len(np.unique(col)))
         return FactorStats(tuple(factor.vars), float(factor.num_entries),
-                           distinct, degrees)
+                           distinct, degrees, sources)
 
 
 @dataclass
@@ -77,5 +83,6 @@ class QueryStats:
         if factors is None:
             factors = [Factor.from_columns(cols, sizes)
                        for cols in enc.encoded_tables]
-        fstats = [FactorStats.of(f, sizes) for f in factors]
+        fstats = [FactorStats.of(f, sizes, frozenset({qt.table}))
+                  for f, qt in zip(factors, enc.query.tables)]
         return QueryStats(sizes, list(factors), fstats)

@@ -8,12 +8,13 @@ downstream (the GJ core, the JAX engine, the Pallas kernels) operates on
 TPU-friendly dense integer arrays.
 """
 
-from repro.relational.table import Table, Catalog
+from repro.relational.table import Table, TableDelta, Catalog
 from repro.relational.query import QueryTable, JoinQuery
 from repro.relational.encoding import Domain, encode_query
 
 __all__ = [
     "Table",
+    "TableDelta",
     "Catalog",
     "QueryTable",
     "JoinQuery",

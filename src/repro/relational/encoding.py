@@ -67,10 +67,15 @@ def encode_query(catalog: Catalog, query: JoinQuery) -> EncodedQuery:
     from the sorts, performed once per (table, query-shape) — the paper's
     'potentials may have been calculated for previous queries' amortization
     point applies here too.
+
+    Each occurrence's Table object is snapshotted once up front: tables are
+    immutable, so both passes see one consistent version even if the
+    catalog entry is concurrently replaced by an append.
     """
+    tables = [catalog[qt.table] for qt in query.tables]
+
     raw_cols: Dict[str, List[np.ndarray]] = {}
-    for qt in query.tables:
-        tab = catalog[qt.table]
+    for qt, tab in zip(query.tables, tables):
         for col, var in qt.var_map:
             raw_cols.setdefault(var, []).append(tab[col])
 
@@ -83,8 +88,7 @@ def encode_query(catalog: Catalog, query: JoinQuery) -> EncodedQuery:
         domains[var] = Domain(var, uniq)
 
     encoded_tables: List[Dict[str, np.ndarray]] = []
-    for qt in query.tables:
-        tab = catalog[qt.table]
+    for qt, tab in zip(query.tables, tables):
         enc: Dict[str, np.ndarray] = {}
         for col, var in qt.var_map:
             enc[var] = domains[var].encode(tab[col])

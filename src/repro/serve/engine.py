@@ -45,6 +45,13 @@ class RelationalFeatureProvider:
     compile`), so every request keys the summary cache on the same plan
     identity; the first `features` call computes the summary, later calls
     are cache hits.  Keys missing from the join result get zero features.
+
+    The provider survives live table growth: every `features` call
+    revalidates the memoized per-key table against the catalog's content
+    versions (memoized hashes — a dict compare, no data touched).  After a
+    `JoinService.append`, the next call re-pulls the frame, which the
+    service satisfies through the incremental refresher under the same
+    pre-compiled plan — never a cold rebuild, never a re-plan.
     """
 
     def __init__(self, service, query, *, key_var: str,
@@ -54,15 +61,24 @@ class RelationalFeatureProvider:
         self.key_var = key_var
         self.aggs = dict(aggs)
         self.plan = plan if plan is not None else service.compile(query)
-        self._table: Optional[Dict[str, np.ndarray]] = None
+        # (versions, table) as ONE atomically-assigned pair: concurrent
+        # features() calls may both recompute, but an interleaving can
+        # never pair an old table with new versions (which would pass
+        # revalidation forever and pin stale features)
+        self._memo: Optional[Tuple[Dict[str, str],
+                                   Dict[str, np.ndarray]]] = None
 
     def _feature_table(self) -> Dict[str, np.ndarray]:
         reply = self.service.frame(self.query, plan=self.plan)
         return reply.frame.group_by([self.key_var], **self.aggs)
 
+    def _current_versions(self) -> Dict[str, str]:
+        cat = self.service.catalog
+        return {qt.table: cat[qt.table].version() for qt in self.query.tables}
+
     def refresh(self) -> None:
         """Drop the memoized per-key table (e.g. after `invalidate`)."""
-        self._table = None
+        self._memo = None
 
     @property
     def num_features(self) -> int:
@@ -70,9 +86,12 @@ class RelationalFeatureProvider:
 
     def features(self, keys: np.ndarray) -> np.ndarray:
         """[len(keys), num_features] float32; zeros for unknown keys."""
-        if self._table is None:
-            self._table = self._feature_table()
-        tab = self._table
+        versions = self._current_versions()
+        memo = self._memo
+        if memo is None or memo[0] != versions:
+            memo = (versions, self._feature_table())
+            self._memo = memo
+        tab = memo[1]
         uniq = np.asarray(tab[self.key_var])
         keys = np.asarray(keys)
         pos = np.searchsorted(uniq, keys)

@@ -11,12 +11,19 @@ O(|Q|) desummarization the paper's storage scenario budgets for.
 * :mod:`repro.summary.cache` — :class:`SummaryCache`, the compute-and-reuse
   LRU store keyed by (query fingerprint, table versions);
 * :mod:`repro.summary.service` — :class:`JoinService`, the front-end that
-  consults the cache and runs :class:`repro.core.api.GraphicalJoin` on miss.
+  consults the cache and runs :class:`repro.core.api.GraphicalJoin` on miss;
+* :mod:`repro.summary.incremental` — delta refresh (DESIGN.md §12): on a
+  base-table append, re-encode only the block, re-run only the dirty
+  elimination steps, splice the result into the retained summary.
 """
 
 from repro.summary.algebra import SummaryFrame
 from repro.summary.cache import CacheStats, SummaryCache
+from repro.summary.incremental import (DeltaError, IncrementalState,
+                                       StaleDeltaError, capture_state,
+                                       refresh_state)
 from repro.summary.service import JoinService, ServiceReply
 
 __all__ = ["SummaryFrame", "SummaryCache", "CacheStats", "JoinService",
-           "ServiceReply"]
+           "ServiceReply", "DeltaError", "StaleDeltaError",
+           "IncrementalState", "capture_state", "refresh_state"]

@@ -18,6 +18,9 @@ that a service-grade component:
 * `invalidate(table)` force-drops every entry recorded as built on a base
   table — the explicit override for when content-version keying is not
   enough (e.g. a table mutated in place behind the catalog's back);
+* `refresh(old_key, new_key, gfjs)` upgrades an entry in place — the
+  commit point of incremental maintenance: retirement of the stale
+  summary and admission of the refreshed one are atomic under the lock;
 * hit/miss/eviction/expiry counters feed the service's observability.
 """
 
@@ -37,13 +40,25 @@ from repro.relational.query import JoinQuery
 from repro.relational.table import Catalog
 
 
-def cache_key(query: JoinQuery, catalog: Catalog, plan=None) -> str:
-    """(query fingerprint [× plan signature], table versions) -> hex key."""
+def cache_key_for_versions(query: JoinQuery, versions, plan=None) -> str:
+    """(query fingerprint [× plan signature], table versions) -> hex key.
+
+    ``versions`` maps base-table name -> content version.  The incremental
+    refresh path keys the upgraded summary on the versions its delta chain
+    ends at, which may already trail the live catalog by a racing append.
+    """
     h = hashlib.sha256(query.fingerprint(plan=plan).encode())
     for name in sorted({qt.table for qt in query.tables}):
         h.update(name.encode())
-        h.update(catalog[name].version().encode())
+        h.update(versions[name].encode())
     return h.hexdigest()
+
+
+def cache_key(query: JoinQuery, catalog: Catalog, plan=None) -> str:
+    """`cache_key_for_versions` against the catalog's current versions."""
+    return cache_key_for_versions(
+        query, {qt.table: catalog[qt.table].version() for qt in query.tables},
+        plan=plan)
 
 
 @dataclass
@@ -56,6 +71,7 @@ class CacheStats:
     puts: int = 0
     expirations: int = 0     # TTL drops (resident or spill)
     invalidations: int = 0   # entries dropped by invalidate()
+    refreshes: int = 0       # upgrade-in-place via refresh()
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
@@ -192,6 +208,34 @@ class SummaryCache:
             if tables is not None:
                 self._tables[key] = frozenset(tables)
             spills = self._admit(key, gfjs, born=time.time())
+        self._write_spills(spills)
+
+    def refresh(self, old_key: str, new_key: str, gfjs: GFJS,
+                tables: Optional[Iterable[str]] = None) -> None:
+        """Upgrade an entry in place: retire ``old_key``, admit ``new_key``.
+
+        The incremental-maintenance commit point: both the retirement of
+        the stale summary (resident entry, spill file, provenance) and the
+        admission of the refreshed one happen under one lock acquisition,
+        so a concurrent reader observes either the old-consistent or the
+        new-consistent summary — never a half-spliced mix, and never a
+        window where a get on the old key could resurrect stale state from
+        a promotion in flight (`invalidate` races are handled identically:
+        provenance for ``old_key`` is gone before the lock is released).
+        """
+        with self._lock:
+            self.stats.refreshes += 1
+            if old_key != new_key:
+                self._entries.pop(old_key, None)
+                self._nbytes.pop(old_key, None)
+                self._born.pop(old_key, None)
+                path = self._spill_path(old_key)
+                if path is not None and os.path.exists(path):
+                    os.remove(path)
+                self._tables.pop(old_key, None)
+            if tables is not None:
+                self._tables[new_key] = frozenset(tables)
+            spills = self._admit(new_key, gfjs, born=time.time())
         self._write_spills(spills)
 
     def invalidate(self, table: str) -> int:

@@ -9,6 +9,8 @@ decision of when to actually run the Graphical Join:
     r    = svc.frame(query)            # SummaryFrame + provenance/timings
     plan = svc.compile(query)          # pre-compiled PhysicalPlan (serve path)
     r2   = svc.frame(query, plan=plan) # keyed on plan identity
+    svc.append("user_friends", rows)   # live growth; summaries refresh
+    r3   = svc.frame(query)            # ... lazily: source == "refreshed"
 
 Summaries are keyed on (canonical query fingerprint × table content
 versions × physical-plan signature): the same query executed under a
@@ -21,10 +23,20 @@ Cache hits skip ``build_model`` / ``build_generator`` / ``summarize``
 entirely — a request served from cache carries no build-phase timings,
 which is the service-level observable the tests assert on.
 
+Base-table appends are first-class: `append` upgrades the catalog and
+queues a :class:`~repro.relational.table.TableDelta`; the next `frame()`
+for an affected query chains the pending deltas through the incremental
+refresher (re-encode the blocks, re-run only dirty elimination steps,
+splice — DESIGN.md §12) and upgrades the cache entry in place via
+`SummaryCache.refresh`.  A broken delta chain, a mixed-dtype block, or a
+dropped state all fall back to the cold compute path — refresh is an
+optimization, never a correctness dependency.
+
 The service is safe to call from multiple threads: the summary cache locks
 internally and the plan cache is guarded here.  Two threads racing on the
 same cold query may both compute it (last put wins) — duplicate work, never
-a wrong answer.
+a wrong answer.  Refresh races the same way: both threads derive the same
+new-consistent summary, and `SummaryCache.refresh` commits atomically.
 """
 
 from __future__ import annotations
@@ -40,9 +52,11 @@ import numpy as np
 from repro.core.api import GraphicalJoin
 from repro.plan.ir import PhysicalPlan
 from repro.relational.query import JoinQuery
-from repro.relational.table import Catalog
+from repro.relational.table import Catalog, TableDelta
 from repro.summary.algebra import AggSpec, Predicate, SummaryFrame
-from repro.summary.cache import SummaryCache, cache_key
+from repro.summary.cache import SummaryCache, cache_key, cache_key_for_versions
+from repro.summary.incremental import (DeltaError, IncrementalState,
+                                       capture_state, refresh_state)
 
 
 @dataclass
@@ -50,14 +64,14 @@ class ServiceReply:
     """A frame plus how it was produced (the service's provenance record)."""
 
     frame: SummaryFrame
-    source: str                      # "memory" | "disk" | "computed"
+    source: str                # "memory" | "disk" | "refreshed" | "computed"
     key: str
     timings: Dict[str, float] = field(default_factory=dict)
     plan: Optional[PhysicalPlan] = None
 
     @property
     def cache_hit(self) -> bool:
-        return self.source != "computed"
+        return self.source in ("memory", "disk")
 
 
 class JoinService:
@@ -69,14 +83,23 @@ class JoinService:
                  spill_dir: Optional[str] = None,
                  ttl_seconds: Optional[float] = None,
                  planner: str = "cost",
-                 max_plans: int = 256) -> None:
+                 max_plans: int = 256,
+                 incremental: bool = True,
+                 max_states: int = 16,
+                 max_state_bytes: int = 512 << 20,
+                 max_pending_deltas: int = 64) -> None:
         self.catalog = catalog
         self.cache = cache if cache is not None else SummaryCache(
             byte_budget=byte_budget, spill_dir=spill_dir,
             ttl_seconds=ttl_seconds)
         self.planner = planner
         self.max_plans = int(max_plans)
+        self.incremental = bool(incremental)
+        self.max_states = int(max_states)
+        self.max_state_bytes = int(max_state_bytes)
+        self.max_pending_deltas = int(max_pending_deltas)
         self.requests = 0
+        self.refreshes = 0
         self._lock = threading.RLock()
         # (query fingerprint, table versions) -> (plan, base-table names).
         # Keys embed content versions, so every table refresh mints a new
@@ -84,6 +107,11 @@ class JoinService:
         # without bound (plans are tiny; re-planning a evicted one is ms).
         self._plans: "OrderedDict[Tuple[str, Tuple[str, ...]], " \
                      "Tuple[PhysicalPlan, frozenset]]" = OrderedDict()
+        # incremental-maintenance side state, all guarded by self._lock:
+        # plan-keyed fingerprint -> IncrementalState (LRU-bounded), and the
+        # per-table append log frame() chains through to catch a state up
+        self._states: "OrderedDict[str, IncrementalState]" = OrderedDict()
+        self._pending: Dict[str, list] = {}
 
     # -- planning -----------------------------------------------------------
     def _plan_key(self, query: JoinQuery) -> Tuple[str, Tuple[str, ...]]:
@@ -136,34 +164,202 @@ class JoinService:
             else:
                 # plan inline and keep the GraphicalJoin: a cache miss below
                 # reuses its encoding/potentials instead of re-planning
-                gj = GraphicalJoin(self.catalog, query, planner=self.planner)
+                gj = GraphicalJoin(self.catalog, query, planner=self.planner,
+                                   record_trace=self.incremental)
                 plan = gj.plan()
                 with self._lock:
                     self._remember_plan(
                         pkey, plan,
                         frozenset(qt.table for qt in query.tables))
-        key = cache_key(query, self.catalog, plan=plan)
+        versions = {qt.table: self.catalog[qt.table].version()
+                    for qt in query.tables}
+        key = cache_key_for_versions(query, versions, plan=plan)
         t0 = time.perf_counter()
         cached, source = self.cache.get_with_source(key)
         lookup = time.perf_counter() - t0
         if cached is not None:
             return ServiceReply(SummaryFrame.of(cached), source, key,
                                 {"cache_lookup": lookup}, plan)
+        # a miss after an append: catch the retained state up through the
+        # delta chain instead of recomputing from scratch
+        refreshed = self._try_refresh(query, plan, lookup)
+        if refreshed is not None:
+            return refreshed
         if gj is None:
-            gj = GraphicalJoin(self.catalog, query, plan=plan)
+            gj = GraphicalJoin(self.catalog, query, plan=plan,
+                               record_trace=self.incremental)
         gfjs = gj.run()
+        # key on what the executor actually encoded: an append racing this
+        # compute may have advanced the catalog past the entry snapshot,
+        # and mislabeling the summary would make a later delta refresh
+        # double-apply the append
+        built = getattr(gj._executor, "source_versions", None) or versions
+        if built != versions:
+            key = cache_key_for_versions(query, built, plan=plan)
         self.cache.put(key, gfjs, tables={qt.table for qt in query.tables})
+        if self.incremental:
+            self._remember_state(query, plan, gj, gfjs, built, key)
         timings = dict(gj.timings)
         timings["cache_lookup"] = lookup
         return ServiceReply(SummaryFrame.of(gfjs), "computed", key,
                             timings, plan)
 
+    # -- incremental maintenance ------------------------------------------
+    def append(self, table: str, rows) -> TableDelta:
+        """Append rows to a base table; summaries refresh lazily.
+
+        The catalog is upgraded immediately (new content version), the
+        delta is queued, and compiled plans are carried forward to the new
+        version — a refreshed summary must run under the plan it was built
+        with, and re-planning on every append would fork the cache key.
+        Nothing is recomputed here: the next `frame()` for an affected
+        query chains the pending deltas through the incremental refresher
+        (repro/summary/incremental.py) and upgrades the cache entry in
+        place; queries never asked again never pay for the append.
+
+        The O(table) column copy of the grown table is staged *outside*
+        the service lock; only the install is serialized.  If another
+        append to the same table wins the race, staging retries against
+        the new base — the delta chain stays linear either way.
+        """
+        while True:
+            base = self.catalog[table]
+            delta = base.append(rows)          # O(table) copy, unlocked
+            with self._lock:
+                if self.catalog.tables.get(table) is not base:
+                    continue                   # lost the race: re-stage
+                self.catalog.add(delta.new_table)
+                log = self._pending.setdefault(table, [])
+                # slim(): the log must not pin a full table copy per append
+                log.append(delta.slim())
+                del log[:max(0, len(log) - self.max_pending_deltas)]
+                for pkey, (plan, tabs) in list(self._plans.items()):
+                    if table not in tabs:
+                        continue
+                    idx = sorted(tabs).index(table)
+                    if pkey[1][idx] != delta.base_version:
+                        continue
+                    versions = list(pkey[1])
+                    versions[idx] = delta.new_version
+                    self._plans.pop(pkey)
+                    self._remember_plan((pkey[0], tuple(versions)), plan, tabs)
+            return delta
+
+    def _state_key(self, query: JoinQuery, plan: PhysicalPlan) -> str:
+        return query.fingerprint(plan=plan)
+
+    def _remember_state(self, query: JoinQuery, plan: PhysicalPlan,
+                        gj: GraphicalJoin, gfjs, versions, key: str) -> None:
+        try:
+            state = capture_state(gj, gfjs, versions=versions)
+        except ValueError:      # ran without a trace (e.g. incremental off)
+            return
+        state.cache_key = key
+        with self._lock:
+            skey = self._state_key(query, plan)
+            self._states[skey] = state
+            self._states.move_to_end(skey)
+            self._shrink_states()
+
+    def _shrink_states(self) -> None:
+        """LRU-evict retained states past the count AND byte bounds (lock
+        held).  A state pins the elimination trace, a second GFJS, and the
+        expansion cache — entry counting alone would let a few giant
+        summaries dwarf the summary cache's own byte budget."""
+        while len(self._states) > self.max_states or (
+                len(self._states) > 1
+                and sum(s.nbytes() for s in self._states.values())
+                > self.max_state_bytes):
+            self._states.popitem(last=False)
+
+    def _chain_deltas(self, state: IncrementalState):
+        """Pending deltas that carry ``state`` to the current catalog.
+
+        None means the chain is broken (a table changed outside `append`,
+        or the log was trimmed past the state's version) — rebuild.
+        Caller holds the lock.
+        """
+        deltas = []
+        for t in sorted({qt.table for qt in state.query.tables}):
+            have = state.table_versions[t]
+            want = self.catalog[t].version()
+            if have == want:
+                continue
+            for d in self._pending.get(t, []):
+                if have == want:
+                    break
+                if d.base_version == have:
+                    deltas.append(d)
+                    have = d.new_version
+            if have != want:
+                return None
+        return deltas
+
+    def _try_refresh(self, query: JoinQuery, plan: PhysicalPlan,
+                     lookup: float) -> Optional[ServiceReply]:
+        """Serve a cache miss by delta-refreshing a retained state."""
+        if not self.incremental:
+            return None
+        with self._lock:
+            state = self._states.get(self._state_key(query, plan))
+            if state is None:
+                return None
+            deltas = self._chain_deltas(state)
+        if not deltas:      # broken chain (None) or nothing to apply ([])
+            return None
+        t0 = time.perf_counter()
+        try:
+            new_state, report = refresh_state(state, deltas)
+        except DeltaError:
+            return None     # fall back to the cold compute path
+        dt = time.perf_counter() - t0
+        new_key = cache_key_for_versions(
+            query, new_state.table_versions, plan=plan)
+        new_state.cache_key = new_key
+        old_key = state.cache_key or new_key
+        with self._lock:
+            # commit only if the state we refreshed from is still current:
+            # a concurrent invalidate() dropped it precisely to declare its
+            # history untrustworthy, and re-admitting the spliced summary
+            # would resurrect that history under unchanged content versions
+            skey = self._state_key(query, plan)
+            if self._states.get(skey) is not state:
+                return None
+            # cache.refresh runs under the service lock by design: the
+            # atomic pairing with the state check above is what closes the
+            # invalidate() race.  The known cost is that an eviction spill
+            # triggered by this admit writes to disk inside the lock —
+            # rare (budget-exceeded refresh) and bounded by one summary.
+            self.cache.refresh(old_key, new_key, new_state.gfjs,
+                               tables={qt.table for qt in query.tables})
+            self.refreshes += 1
+            self._states[skey] = new_state
+            self._states.move_to_end(skey)
+            self._shrink_states()
+        timings = {"cache_lookup": lookup, "refresh": dt}
+        timings.update({f"refresh_{k}": v for k, v in report.items()
+                        if k != "seconds"})
+        return ServiceReply(SummaryFrame.of(new_state.gfjs), "refreshed",
+                            new_key, timings, plan)
+
     def invalidate(self, table: str) -> int:
-        """Force-drop cached summaries and compiled plans built on ``table``."""
-        removed = self.cache.invalidate(table)
+        """Force-drop cached summaries and compiled plans built on ``table``.
+
+        Also drops retained incremental states and the table's pending
+        delta log: invalidation declares the table's history untrustworthy,
+        so nothing derived from it may be spliced forward.  State removal
+        and cache invalidation happen under one service-lock hold, ordered
+        before the cache sweep — an in-flight refresh either sees its state
+        gone (and aborts) or commits first (and its entry is swept here).
+        """
         with self._lock:
             self._plans = OrderedDict(
                 (k, v) for k, v in self._plans.items() if table not in v[1])
+            self._pending.pop(table, None)
+            self._states = OrderedDict(
+                (k, s) for k, s in self._states.items()
+                if table not in s.table_versions)
+            removed = self.cache.invalidate(table)
         return removed
 
     # -- one-shot aggregate API -------------------------------------------
@@ -208,6 +404,10 @@ class JoinService:
         with self._lock:
             out["requests"] = self.requests
             out["compiled_plans"] = len(self._plans)
+            out["refreshed_requests"] = self.refreshes
+            out["retained_states"] = len(self._states)
+            out["pending_deltas"] = sum(
+                len(v) for v in self._pending.values())
         out["resident_bytes"] = self.cache.resident_bytes
         out["resident_entries"] = len(self.cache)
         return out

@@ -25,6 +25,9 @@ from repro.core.oracle import grouped_rle, oracle_join, sort_rows
 from repro.relational.query import JoinQuery
 from repro.relational.table import Catalog, Table
 
+# depth tier (DESIGN.md §13): deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 # ---------------------------------------------------------------------------
 # strategies
 # ---------------------------------------------------------------------------

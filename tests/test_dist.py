@@ -10,6 +10,9 @@ import textwrap
 
 import pytest
 
+# depth tier (DESIGN.md §13): deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

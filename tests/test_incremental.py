@@ -1,0 +1,337 @@
+"""Differential harness for incremental summary maintenance.
+
+The contract under test: for any query and any sequence of base-table
+appends, the incrementally refreshed GFJS is *equal* to a from-scratch
+rebuild under the same physical plan — level for level, run for run — and
+therefore equivalent on desummarized rows and on every summary-algebra
+aggregate.  Randomization uses seeded numpy RNG (hypothesis-optional,
+like the other property suites): random acyclic and cyclic query shapes,
+random data, random append sequences that deliberately mix existing and
+never-seen values (the latter force dictionary-domain growth and code
+remaps).
+
+Also covered: the plan-level dirty-step map, delta chaining/staleness,
+`Factor.merge_counts`, the service append/refresh loop, cache
+upgrade-in-place, and the serve-path feature provider surviving growth.
+"""
+
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core.api import GraphicalJoin
+from repro.core.gfjs import desummarize
+from repro.core.potentials import Factor
+from repro.relational.query import JoinQuery
+from repro.relational.synth import figure1, lastfm_like
+from repro.relational.table import Catalog, Table
+from repro.summary.algebra import SummaryFrame
+from repro.summary.incremental import (StaleDeltaError, capture_state,
+                                       refresh_state)
+from repro.summary.service import JoinService
+
+SHAPES = {
+    "chain3": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+               ("t2", {"x0": "C", "x1": "D"})],
+    "star3": [("t0", {"x0": "M", "x1": "A"}), ("t1", {"x0": "M", "x1": "B"}),
+              ("t2", {"x0": "M", "x1": "C"})],
+    "selfjoin": [("t0", {"x0": "A", "x1": "B"}), ("t0", {"x0": "B", "x1": "C"})],
+    "triangle": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+                 ("t2", {"x0": "C", "x1": "A"})],
+    "cycle4": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+               ("t2", {"x0": "C", "x1": "D"}), ("t3", {"x0": "D", "x1": "A"})],
+}
+
+
+def random_instance(shape: str, seed: int):
+    spec = SHAPES[shape]
+    rng = np.random.default_rng(seed)
+    domain = int(rng.integers(2, 6))
+    cat = Catalog()
+    for tname, vm in spec:
+        if tname in cat:
+            continue
+        nrows = int(rng.integers(1, 20))
+        cols = {c: rng.integers(0, domain, nrows).astype(np.int64)
+                for c in vm.keys()}
+        cat.add(Table(tname, cols))
+    return cat, JoinQuery.of(shape, spec), domain, rng
+
+
+def assert_gfjs_equal(a, b):
+    """Strict structural equality: same levels, runs, codes, frequencies."""
+    assert a.join_size == b.join_size
+    assert a.column_order == b.column_order
+    assert len(a.levels) == len(b.levels)
+    for la, lb in zip(a.levels, b.levels):
+        assert la.vars == lb.vars
+        assert np.array_equal(la.freq, lb.freq)
+        for v in la.vars:
+            assert np.array_equal(la.key_cols[v], lb.key_cols[v])
+
+
+def assert_aggregates_match(gfjs, raw):
+    """Every summary-algebra aggregate equals brute force over ``raw``."""
+    frame = SummaryFrame.of(gfjs)
+    some = gfjs.column_order[0]
+    n = len(raw[some])
+    assert frame.count() == n
+    for v in gfjs.column_order:
+        if n == 0:
+            assert frame.sum(v) == 0
+            assert frame.min(v) is None and frame.max(v) is None
+            assert frame.count_distinct(v) == 0
+        else:
+            assert frame.sum(v) == int(raw[v].sum())
+            assert frame.mean(v) == pytest.approx(raw[v].mean())
+            assert frame.min(v) == raw[v].min()
+            assert frame.max(v) == raw[v].max()
+            assert frame.count_distinct(v) == len(np.unique(raw[v]))
+    if n:
+        key, val = gfjs.column_order[0], gfjs.column_order[-1]
+        got = frame.group_by(key, n="count", total=("sum", val))
+        cnt = collections.Counter(raw[key])
+        sums = collections.defaultdict(int)
+        for k, x in zip(raw[key], raw[val]):
+            sums[k] += x
+        ks = sorted(cnt)
+        assert list(got[key]) == ks
+        assert [int(x) for x in got["n"]] == [cnt[k] for k in ks]
+        assert [int(x) for x in got["total"]] == [sums[k] for k in ks]
+
+
+def random_block(rng, table: Table, domain: int):
+    """0-6 random rows; values range past the domain to force growth."""
+    n = int(rng.integers(0, 7))
+    return {c: rng.integers(0, domain + 2, n).astype(np.int64)
+            for c in table.column_names}
+
+
+# ---------------------------------------------------------------------------
+# the differential harness (acceptance: >= 20 random append sequences on
+# acyclic and cyclic queries; here 5 shapes x 5 seeds = 25, 4 appends each)
+# ---------------------------------------------------------------------------
+
+CASES = [(s, seed) for s in SHAPES for seed in range(5)]
+
+
+@pytest.mark.parametrize("shape,seed", CASES)
+def test_refresh_equals_rebuild_differentially(shape, seed):
+    cat, query, domain, rng = random_instance(shape, seed)
+    gj = GraphicalJoin(cat, query, record_trace=True)
+    state = gj.capture_state(gj.run())
+
+    tables = list(cat.names())
+    for step in range(4):
+        tname = tables[int(rng.integers(0, len(tables)))]
+        delta = cat.append(tname, random_block(rng, cat[tname], domain))
+        state = gj.refresh(state, delta)
+
+        rebuilt = GraphicalJoin(cat, query, plan=state.plan).run()
+        assert_gfjs_equal(state.gfjs, rebuilt)
+
+        raw = desummarize(rebuilt)
+        got = desummarize(state.gfjs)
+        for v in rebuilt.column_order:
+            assert np.array_equal(got[v], raw[v])
+        assert_aggregates_match(state.gfjs, raw)
+
+
+@pytest.mark.parametrize("shape,seed", [("chain3", 11), ("triangle", 12)])
+def test_refresh_with_batched_deltas(shape, seed):
+    """Several queued deltas (mixed tables) applied in one refresh."""
+    cat, query, domain, rng = random_instance(shape, seed)
+    gj = GraphicalJoin(cat, query, record_trace=True)
+    state = gj.capture_state(gj.run())
+    deltas = []
+    for tname in cat.names():
+        for _ in range(2):
+            deltas.append(cat.append(
+                tname, random_block(rng, cat[tname], domain)))
+    state = gj.refresh(state, deltas)
+    rebuilt = GraphicalJoin(cat, query, plan=state.plan).run()
+    assert_gfjs_equal(state.gfjs, rebuilt)
+
+
+def test_refresh_from_empty_table():
+    """A summary built over an empty table grows into a live one."""
+    cat = Catalog.of(
+        Table("t0", {"x0": np.zeros(0, np.int64), "x1": np.zeros(0, np.int64)}),
+        Table("t1", {"x0": np.asarray([0, 1, 2]), "x1": np.asarray([5, 6, 7])}),
+    )
+    query = JoinQuery.of("grow", [("t0", {"x0": "A", "x1": "B"}),
+                                  ("t1", {"x0": "B", "x1": "C"})])
+    gj = GraphicalJoin(cat, query, record_trace=True)
+    gfjs = gj.run()
+    assert gfjs.join_size == 0
+    state = gj.capture_state(gfjs)
+    delta = cat.append("t0", {"x0": [9, 9], "x1": [0, 1]})
+    state = gj.refresh(state, delta)
+    rebuilt = GraphicalJoin(cat, query, plan=state.plan).run()
+    assert state.gfjs.join_size == 2
+    assert_gfjs_equal(state.gfjs, rebuilt)
+
+
+def test_zero_row_append_is_a_version_noop():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query, record_trace=True)
+    state = gj.capture_state(gj.run())
+    delta = cat["table1"].append({"A": [], "B": []})
+    assert delta.base_version == delta.new_version
+    state2, report = refresh_state(state, [delta])
+    assert report["dirty_steps"] == 0
+    assert_gfjs_equal(state2.gfjs, state.gfjs)
+
+
+def test_stale_delta_chain_raises():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query, record_trace=True)
+    state = gj.capture_state(gj.run())
+    d1 = cat.append("table1", {"A": ["a0"], "B": ["b0"]})
+    d2 = cat.append("table1", {"A": ["a1"], "B": ["b1"]})
+    with pytest.raises(StaleDeltaError):
+        refresh_state(state, [d2])          # skipped d1: chain broken
+    state = gj.refresh(state, [d1, d2])     # in order: fine
+    rebuilt = GraphicalJoin(cat, query, plan=state.plan).run()
+    assert_gfjs_equal(state.gfjs, rebuilt)
+
+
+def test_mixed_dtype_append_rejected():
+    cat, query = figure1()
+    with pytest.raises(TypeError):
+        cat["table1"].append({"A": [1], "B": [2]})   # strings table
+
+
+def test_merge_counts_is_group_by_of_the_union():
+    rng = np.random.default_rng(3)
+    sizes = {"A": 5, "B": 4}
+    a = {"A": rng.integers(0, 5, 30), "B": rng.integers(0, 4, 30)}
+    b = {"A": rng.integers(0, 5, 11), "B": rng.integers(0, 4, 11)}
+    merged = Factor.from_columns(a, sizes).merge_counts(
+        Factor.from_columns(b, sizes))
+    both = {k: np.concatenate([a[k], b[k]]) for k in a}
+    want = Factor.from_columns(both, sizes)
+    assert np.array_equal(merged.keys, want.keys)
+    assert np.array_equal(merged.bucket, want.bucket)
+    assert np.array_equal(merged.fac, want.fac)
+
+
+# ---------------------------------------------------------------------------
+# plan-level dirty-step map
+# ---------------------------------------------------------------------------
+
+def test_plan_dirty_steps_match_refresher():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query, record_trace=True)
+    state = gj.capture_state(gj.run())
+    plan = state.plan
+    # every step is tagged with the base tables feeding it, transitively
+    assert all(s.tables for s in plan.steps)
+    for tname in cat.names():
+        dirty = plan.dirty_steps(tname)
+        assert set(dirty) <= set(plan.order[:-1])
+        frac = plan.refresh_fraction(tname)
+        assert 0.0 <= frac <= 1.0
+        # the refresher re-runs exactly the plan's dirty set
+        delta = cat.append(tname, {c: cat[tname][c][:1]
+                                   for c in cat[tname].column_names})
+        state, report = refresh_state(state, [delta])
+        assert report["dirty_steps"] == len(dirty)
+
+
+def test_explain_renders_step_tables():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query)
+    gj.run()
+    assert "tables=(" in gj.explain()
+
+
+# ---------------------------------------------------------------------------
+# service + cache + serve wiring
+# ---------------------------------------------------------------------------
+
+def test_service_append_refreshes_lazily():
+    cat, qs = lastfm_like(n_users=40, n_artists=30, artists_per_user=4,
+                          friends_per_user=3)
+    svc = JoinService(cat)
+    q = qs["lastfm_A1"]
+    assert svc.frame(q).source == "computed"
+    rng = np.random.default_rng(7)
+    svc.append("user_friends", {"userID": rng.integers(0, 40, 5),
+                                "friendID": rng.integers(0, 40, 5)})
+    reply = svc.frame(q)
+    assert reply.source == "refreshed"
+    assert "refresh" in reply.timings
+    # the refreshed entry is a first-class cache resident
+    assert svc.frame(q).source == "memory"
+    # equivalence against an independent cold compute on the grown catalog
+    cold = JoinService(cat, incremental=False)
+    assert reply.frame.count() == cold.count(q)
+    st = svc.stats()
+    assert st["refreshed_requests"] == 1 and st["refreshes"] == 1
+
+
+def test_service_refresh_differential_with_growth():
+    """Service-level differential: appends with brand-new keys each round."""
+    cat, qs = lastfm_like(n_users=30, n_artists=20, artists_per_user=3,
+                          friends_per_user=2)
+    svc = JoinService(cat)
+    q = qs["lastfm_B"]
+    svc.frame(q)
+    rng = np.random.default_rng(9)
+    for i in range(3):
+        svc.append("user_artists", {"userID": rng.integers(0, 35, 4),
+                                    "artistID": rng.integers(0, 40, 4)})
+        svc.append("user_friends", {"userID": rng.integers(0, 35, 3),
+                                    "friendID": rng.integers(0, 35, 3)})
+        reply = svc.frame(q)
+        assert reply.source == "refreshed"
+        cold = JoinService(cat, incremental=False)
+        assert reply.frame.count() == cold.count(q)
+
+
+def test_service_falls_back_when_state_missing():
+    cat, qs = lastfm_like(n_users=30, n_artists=20, artists_per_user=3,
+                          friends_per_user=2)
+    svc = JoinService(cat, incremental=False)
+    q = qs["lastfm_A1"]
+    svc.frame(q)
+    svc.append("user_friends", {"userID": [0], "friendID": [1]})
+    assert svc.frame(q).source == "computed"       # no state retained
+
+
+def test_cache_refresh_upgrades_in_place(tmp_path):
+    from repro.summary.cache import SummaryCache
+    cat, qs = lastfm_like(n_users=30, n_artists=20, artists_per_user=3,
+                          friends_per_user=2)
+    gfjs = GraphicalJoin(cat, qs["lastfm_tri"]).run()
+    cache = SummaryCache(byte_budget=4 << 20, spill_dir=str(tmp_path))
+    cache.put("old", gfjs, tables={"user_friends"})
+    cache.refresh("old", "new", gfjs, tables={"user_friends"})
+    assert "old" not in cache and "new" in cache
+    assert cache.stats.refreshes == 1
+    # provenance moved with the key: invalidation finds only the new entry
+    assert cache.invalidate("user_friends") == 1
+
+
+def test_feature_provider_survives_live_growth():
+    from repro.serve.engine import RelationalFeatureProvider
+    cat, qs = lastfm_like(n_users=40, n_artists=30, artists_per_user=4,
+                          friends_per_user=3)
+    svc = JoinService(cat)
+    q = qs["lastfm_A1"]
+    prov = RelationalFeatureProvider(
+        svc, q, key_var="U1", aggs={"n": "count", "total": ("sum", "A2")})
+    keys = np.asarray([0, 1, 2])
+    before = prov.features(keys)
+    assert prov.features(keys) is not None           # memoized path
+    base_requests = svc.stats()["requests"]
+    # live growth: hand user 0 a very popular friend
+    hot = int(np.argmax(np.bincount(cat["user_artists"]["userID"])))
+    svc.append("user_friends", {"userID": [0], "friendID": [hot]})
+    after = prov.features(keys)
+    assert after[0, 0] > before[0, 0]                # user 0 gained rows
+    st = svc.stats()
+    assert st["refreshed_requests"] >= 1             # no cold rebuild
+    assert st["requests"] > base_requests

@@ -12,6 +12,9 @@ from repro.configs import ARCH_IDS, get_config, get_smoke
 from repro.models import flash
 from repro.models.model import LM
 
+# depth tier (DESIGN.md §13): deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 rng = np.random.default_rng(0)
 
 

@@ -9,6 +9,9 @@ from repro.configs import get_smoke
 from repro.models.model import LM
 from repro.serve.engine import ServeConfig, ServeEngine
 
+# depth tier (DESIGN.md §13): deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def _engine(arch, temperature=0.0, extra=None):
     cfg = get_smoke(arch).scaled(num_layers=2, **(extra or {}))

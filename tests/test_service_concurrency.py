@@ -1,5 +1,7 @@
-"""JoinService / SummaryCache under threads, TTL, and explicit invalidation
-(ROADMAP "JoinService concurrency" item)."""
+"""JoinService / SummaryCache under threads, TTL, explicit invalidation
+(ROADMAP "JoinService concurrency" item), and incremental-refresh races:
+an append hammer must never let a reader observe a half-spliced summary —
+every reply is either the old-consistent or the new-consistent state."""
 
 import threading
 import time
@@ -7,7 +9,9 @@ import time
 import numpy as np
 import pytest
 
+from repro.relational.query import JoinQuery
 from repro.relational.synth import lastfm_like
+from repro.relational.table import Catalog, Table
 from repro.summary.cache import SummaryCache, cache_key
 from repro.summary.service import JoinService
 
@@ -175,6 +179,150 @@ def test_plan_cache_is_bounded(lastfm):
               qs["lastfm_A2"]):
         svc.compile(q)
     assert svc.stats()["compiled_plans"] <= 2
+
+
+def _row_count_service(n_base: int = 50):
+    """A service over a single-table query: COUNT == exact table rows.
+
+    Every append of r rows moves the true count by exactly r, so any
+    value a reader observes must sit on the append lattice — a torn
+    splice (half-refreshed weights) lands between lattice points.
+    """
+    rng = np.random.default_rng(0)
+    t = Table("events", {"x0": rng.integers(0, 9, n_base).astype(np.int64),
+                         "x1": rng.integers(0, 9, n_base).astype(np.int64)})
+    q = JoinQuery.of("events_q", [("events", {"x0": "A", "x1": "B"})])
+    return JoinService(Catalog.of(t)), q
+
+
+def test_refresh_vs_get_race():
+    """Append hammer vs readers: old-consistent or new-consistent, only."""
+    base, block, n_appends = 50, 3, 12
+    svc, q = _row_count_service(base)
+    assert svc.count(q) == base
+    legal = {base + i * block for i in range(n_appends + 1)}
+    errors, observed = [], []
+    stop = threading.Event()
+    rng = np.random.default_rng(1)
+    blocks = [{"x0": rng.integers(0, 12, block).astype(np.int64),
+               "x1": rng.integers(0, 12, block).astype(np.int64)}
+              for _ in range(n_appends)]
+
+    def appender():
+        try:
+            for b in blocks:
+                svc.append("events", b)
+                svc.frame(q)            # trigger refresh under contention
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            stop.set()
+
+    def reader():
+        try:
+            last = 0
+            while not stop.is_set():
+                reply = svc.frame(q)
+                n = reply.frame.count()
+                # internal consistency: every level agrees on the total
+                totals = {int(w.sum()) for w in reply.frame.weights}
+                if totals != {n}:
+                    errors.append(AssertionError(f"torn summary: {totals}"))
+                observed.append(n)
+                if n < last:
+                    errors.append(AssertionError(f"count went back: {last}->{n}"))
+                last = n
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader) for _ in range(6)] \
+        + [threading.Thread(target=appender)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert set(observed) <= legal, sorted(set(observed) - legal)
+    assert svc.count(q) == base + n_appends * block
+    assert svc.stats()["refreshed_requests"] >= 1
+
+
+def test_refresh_vs_invalidate_race():
+    """invalidate() racing the append/refresh loop: no torn state, and the
+    final answer equals a cold recompute either way."""
+    svc, q = _row_count_service(40)
+    svc.frame(q)
+    errors = []
+    stop = threading.Event()
+    rng = np.random.default_rng(2)
+
+    def appender():
+        try:
+            for _ in range(10):
+                svc.append("events",
+                           {"x0": rng.integers(0, 12, 2).astype(np.int64),
+                            "x1": rng.integers(0, 12, 2).astype(np.int64)})
+                reply = svc.frame(q)
+                totals = {int(w.sum()) for w in reply.frame.weights}
+                if len(totals) != 1:
+                    errors.append(AssertionError(f"torn summary: {totals}"))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            stop.set()
+
+    def invalidator():
+        try:
+            while not stop.is_set():
+                svc.invalidate("events")
+                time.sleep(0.001)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                reply = svc.frame(q)
+                totals = {int(w.sum()) for w in reply.frame.weights}
+                if len(totals) != 1:
+                    errors.append(AssertionError(f"torn summary: {totals}"))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=appender),
+               threading.Thread(target=invalidator)] \
+        + [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert svc.count(q) == svc.catalog["events"].num_rows
+    cold = JoinService(svc.catalog, incremental=False)
+    assert cold.count(q) == svc.count(q)
+
+
+def test_append_while_cold_compute_in_flight():
+    """An append landing mid-compute must not corrupt the cache: later
+    frames converge to the grown catalog's answer."""
+    svc, q = _row_count_service(30)
+    errors, done = [], threading.Event()
+
+    def computer():
+        try:
+            svc.frame(q)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=computer)
+    t.start()
+    svc.append("events", {"x0": np.asarray([1, 2]), "x1": np.asarray([3, 4])})
+    t.join()
+    done.wait()
+    assert not errors
+    assert svc.count(q) == svc.catalog["events"].num_rows
 
 
 def test_cache_lock_guards_raw_operations(lastfm):

@@ -164,6 +164,88 @@ def test_filter_pushdown_matches_oracle(shape, seed):
     assert got_rows == want_rows
 
 
+@pytest.mark.parametrize("shape,seed", CASES)
+def test_filtered_group_by_matches_oracle(shape, seed):
+    """group_by + predicate pushdown COMBINED, against the oracle.
+
+    The separate paths were covered; this closes the gap: every aggregate
+    op (count/sum/min/max/mean), multi-key grouping, and a mixed predicate
+    set (equality + range callable + membership) applied together.
+    """
+    cat, query = random_instance(shape, seed)
+    gj = GraphicalJoin(cat, query)
+    frame = SummaryFrame.of(gj.run())
+    raw = oracle_raw(gj)
+    cols = frame.gfjs.column_order
+    if len(cols) < 3:
+        pytest.skip("needs three variables")
+    n = len(raw[cols[0]])
+
+    rng = np.random.default_rng(seed + 2000)
+    k1, k2 = cols[0], cols[1]
+    fvar, val = cols[-1], cols[len(cols) // 2]
+    pivot = int(rng.integers(0, 4))
+    members = sorted({int(rng.integers(0, 5)) for _ in range(3)})
+    preds = {fvar: lambda v: v >= pivot, k2: members}
+
+    got = frame.filter(preds).group_by(
+        [k1, k2], n="count", total=("sum", val), lo=("min", val),
+        hi=("max", val), avg=("mean", val))
+
+    mask = np.ones(n, dtype=bool)
+    mask &= raw[fvar] >= pivot
+    mask &= np.isin(raw[k2], members)
+    want = collections.defaultdict(lambda: [0, 0, None, None])
+    for a, b, x in zip(raw[k1][mask], raw[k2][mask], raw[val][mask]):
+        w = want[(a, b)]
+        w[0] += 1
+        w[1] += x
+        w[2] = x if w[2] is None else min(w[2], x)
+        w[3] = x if w[3] is None else max(w[3], x)
+    ks = sorted(want)
+    assert list(zip(got[k1], got[k2])) == ks
+    assert [int(x) for x in got["n"]] == [want[k][0] for k in ks]
+    assert [int(x) for x in got["total"]] == [want[k][1] for k in ks]
+    assert [int(x) for x in got["lo"]] == [want[k][2] for k in ks]
+    assert [int(x) for x in got["hi"]] == [want[k][3] for k in ks]
+    assert np.allclose(got["avg"],
+                       [want[k][1] / want[k][0] for k in ks])
+
+    # the same question asked through aggregate-then-filter composition:
+    # grouping over the unfiltered frame restricted by the filter must
+    # agree wherever groups survive
+    full = frame.group_by([k1, k2], n="count")
+    surviving = dict(zip(zip(full[k1], full[k2]),
+                         (int(x) for x in full["n"])))
+    for k in ks:
+        assert want[k][0] <= surviving[k]
+
+
+@pytest.mark.parametrize("shape,seed", CASES)
+def test_filtered_scalar_aggregates_match_oracle(shape, seed):
+    """Scalar aggregates under pushed-down predicates, against the oracle."""
+    cat, query = random_instance(shape, seed)
+    gj = GraphicalJoin(cat, query)
+    frame = SummaryFrame.of(gj.run())
+    raw = oracle_raw(gj)
+    cols = frame.gfjs.column_order
+    some, deep = cols[0], cols[-1]
+    rng = np.random.default_rng(seed + 3000)
+    pivot = int(rng.integers(0, 4))
+    filtered = frame.filter({some: lambda v: v != pivot})
+    mask = raw[some] != pivot
+    assert filtered.count() == int(mask.sum())
+    if mask.any():
+        assert filtered.sum(deep) == int(raw[deep][mask].sum())
+        assert filtered.min(deep) == raw[deep][mask].min()
+        assert filtered.max(deep) == raw[deep][mask].max()
+        assert filtered.count_distinct(deep) == \
+            len(np.unique(raw[deep][mask]))
+    else:
+        assert filtered.min(deep) is None
+        assert filtered.count_distinct(deep) == 0
+
+
 def test_weights_stay_level_consistent_after_filter():
     cat, qs = lastfm_like(n_users=50, n_artists=40, artists_per_user=4,
                           friends_per_user=3)

@@ -23,6 +23,9 @@ from repro.train.optim import AdamWConfig, init_state
 from repro.train.train_step import TrainState, make_train_step
 from repro.train.trainer import Trainer, TrainerConfig
 
+# depth tier (DESIGN.md §13): deselect with -m "not slow"
+pytestmark = pytest.mark.slow
+
 
 def _tiny_setup(tmp_path, steps=8, crash_after=None, microbatches=1):
     cfg = get_smoke("qwen3_8b").scaled(num_layers=2, vocab=256)
