@@ -1,11 +1,22 @@
 """Kernel-level microbenchmarks (jax engine primitives on CPU; the Pallas
 bodies themselves are TPU-targeted and validated in interpret mode — wall
-times here measure the XLA fallback path the CPU engine actually uses)."""
+times here measure the XLA fallback path the CPU engine actually uses,
+except the fused-vs-per-column comparison, which times both Pallas paths
+under the interpreter so the ratio isolates the amortized run search).
+
+Run as a module for the CI gate / JSON summary:
+
+  PYTHONPATH=src python -m benchmarks.kernels_bench --smoke
+  PYTHONPATH=src python -m benchmarks.kernels_bench --json BENCH_kernels.json
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
@@ -20,6 +31,50 @@ def _time(fn, *args, n=5):
     if hasattr(out, "block_until_ready"):
         out.block_until_ready()
     return (time.perf_counter() - t0) / n
+
+
+def bench_fused_expand(n_runs: int = 20_000, reps: int = 3) -> List[str]:
+    """Per-level desummarization: fused multi-payload vs per-column kernel.
+
+    The fused kernel recovers each output tile's run index once for all K
+    payload columns; the per-column path re-runs the 2*RB comparison-matrix
+    search (and a kernel launch, and the bounds-window reads) K times.  Both
+    run in interpret mode — the only way to execute Pallas bodies on this
+    CPU container — so the ratio reflects the amortization, not Mosaic
+    codegen.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    out: List[str] = []
+    rng = np.random.default_rng(0)
+    freqs = rng.integers(1, 9, n_runs)
+    bounds = jnp.asarray(np.cumsum(freqs), jnp.int32)
+    total = int(np.sum(freqs))
+
+    for k in (4, 8):
+        payloads = jnp.asarray(
+            rng.integers(0, 1 << 20, (k, n_runs)), jnp.int32)
+
+        def per_column():
+            cols = [ops.rle_expand(payloads[q], bounds, total,
+                                   interpret=True) for q in range(k)]
+            return cols[-1]
+
+        def fused():
+            return ops.rle_expand_many(payloads, bounds, total,
+                                       interpret=True)
+
+        t_col = _time(per_column, n=reps)
+        t_fus = _time(fused, n=reps)
+        out.append(csv_line(
+            f"kernels/expand_level_per_column/K{k}", t_col * 1e6,
+            f"rows={total}"))
+        out.append(csv_line(
+            f"kernels/expand_level_fused/K{k}", t_fus * 1e6,
+            f"rows={total};speedup={t_col / t_fus:.2f}x"))
+    return out
 
 
 def bench_kernels() -> List[str]:
@@ -57,4 +112,93 @@ def bench_kernels() -> List[str]:
     flops = 2 * 2048 * 2048 * 128
     out.append(csv_line("kernels/dense_message/2048", t * 1e6,
                         f"GFLOPs={flops / t / 1e9:.1f}"))
+
+    out.extend(bench_fused_expand())
     return out
+
+
+def smoke() -> int:
+    """Exact-equality gate: fused kernel vs the np.repeat oracle (CI)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels.expand import expand_gather
+    from repro.kernels.expand_fused import expand_gather_many
+
+    rng = np.random.default_rng(7)
+    failures = 0
+
+    def check(name, got, want):
+        nonlocal failures
+        if np.array_equal(np.asarray(got), np.asarray(want)):
+            print(f"  ok  {name}")
+        else:
+            failures += 1
+            print(f"FAIL  {name}")
+
+    # mixed zero-length runs, several K
+    freqs = rng.integers(0, 5, 700)
+    bounds = np.cumsum(freqs).astype(np.int32)
+    total = int(bounds[-1])
+    for k in (1, 3, 6):
+        payloads = rng.integers(0, 1 << 20, (k, 700)).astype(np.int32)
+        got = ops.rle_expand_many(payloads, bounds, total, interpret=True)
+        want = np.stack([np.repeat(payloads[q], freqs) for q in range(k)])
+        check(f"fused K={k} vs np.repeat", got, want)
+
+    # single-run level
+    got = ops.rle_expand_many(np.asarray([[42], [7]], np.int32),
+                              np.asarray([5], np.int32), 5, interpret=True)
+    check("single run", got, [[42] * 5, [7] * 5])
+
+    # K=1 degeneration matches expand_gather including the padded tail
+    t_pad = ops.next_bucket(total)
+    payload = rng.integers(0, 1 << 20, 700).astype(np.int32)
+    g1 = expand_gather(jnp.asarray(payload), jnp.asarray(bounds),
+                       t_pad=t_pad, interpret=True)
+    gm = expand_gather_many(jnp.asarray(payload[None]), jnp.asarray(bounds),
+                            t_pad=t_pad, interpret=True)
+    check("K=1 tail contract", gm[0], g1)
+
+    print("smoke:", "FAIL" if failures else "OK")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="exact-equality gate (fused kernel vs oracle)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the csv rows as a JSON summary")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
+    lines = bench_kernels()
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line, flush=True)
+    if args.json:
+        write_json(lines, args.json)
+    return 0
+
+
+def write_json(lines: List[str], path: str) -> None:
+    """Persist csv rows as {name: {us_per_call, derived...}} (perf trail)."""
+    summary: Dict[str, Dict[str, object]] = {}
+    for line in lines:
+        name, us, derived = line.split(",", 2)
+        entry: Dict[str, object] = {"us_per_call": float(us)}
+        for kv in filter(None, derived.split(";")):
+            k, _, v = kv.partition("=")
+            try:
+                entry[k] = float(v.rstrip("x"))
+            except ValueError:
+                entry[k] = v
+        summary[name] = entry
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,10 @@ Prints ``name,us_per_call,derived`` CSV.  Set BENCH_SCALE to stretch the
 workloads (default 1.0 runs the full suite in a few minutes on one core).
 
   PYTHONPATH=src python -m benchmarks.run [--only tableN]
+
+The kernels section also writes ``BENCH_kernels.json`` (override with
+``--kernels-json``) so the kernel-level perf trajectory is machine-readable
+across PRs.
 """
 
 from __future__ import annotations
@@ -18,10 +22,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single section (table1..table6, "
                          "sensitivity, planner, summary, kernels)")
+    ap.add_argument("--kernels-json", default="BENCH_kernels.json",
+                    metavar="PATH",
+                    help="where to write the kernels-section JSON summary "
+                         "('' disables)")
     args = ap.parse_args()
 
     from benchmarks import tables
-    from benchmarks.kernels_bench import bench_kernels
+    from benchmarks.kernels_bench import bench_kernels, write_json
     from benchmarks.summary_bench import bench_summary
 
     sections = {
@@ -44,8 +52,11 @@ def main() -> None:
             for line in fn(tmp):
                 print(line, flush=True)
         if args.only in (None, "kernels"):
-            for line in bench_kernels():
+            lines = bench_kernels()
+            for line in lines:
                 print(line, flush=True)
+            if args.kernels_json:
+                write_json(lines, args.kernels_json)
 
 
 if __name__ == "__main__":

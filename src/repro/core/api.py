@@ -48,7 +48,9 @@ class GraphicalJoin:
     pre-compiled :class:`PhysicalPlan` (the `JoinService` serve path);
     ``record_trace`` keeps the elimination trace + expansion indices so
     `capture_state`/`refresh` can maintain the summary incrementally on
-    base-table appends (repro/summary/incremental.py).
+    base-table appends (repro/summary/incremental.py); ``generation_backend``
+    pins GFJS generation to "numpy" (dynamic-shape oracle) or "jax" (the
+    device-resident frontier of `engine_jax.generate_gfjs_jax`).
     """
 
     def __init__(
@@ -61,6 +63,7 @@ class GraphicalJoin:
         planner: str = "cost",
         plan: Optional["PhysicalPlan"] = None,
         record_trace: bool = False,
+        generation_backend: Optional[str] = None,
     ) -> None:
         from repro.plan.executor import Executor
         self.catalog = catalog
@@ -72,6 +75,7 @@ class GraphicalJoin:
             planner=planner,
             plan=plan,
             record_trace=record_trace,
+            generation_backend=generation_backend,
         )
 
     # -- executor state, exposed under the historical names ----------------

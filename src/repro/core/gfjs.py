@@ -56,6 +56,11 @@ class GFJS:
     join_size: int
     domains: Dict[str, Domain]
     _bounds: Dict[int, np.ndarray] = field(default_factory=dict, repr=False)
+    # kernel launch metadata memoized alongside the prefix sums: level ->
+    # (t_pad, (padded bounds, per-tile start blocks)) — one entry per level
+    # (a new t_pad replaces it), populated lazily by
+    # repro.kernels.ops.gfjs_expand_meta (this module stays jax-free)
+    _launch: Dict[int, tuple] = field(default_factory=dict, repr=False)
 
     @property
     def num_columns(self) -> int:
@@ -72,6 +77,27 @@ class GFJS:
         if level not in self._bounds:
             self._bounds[level] = np.cumsum(self.levels[level].freq)
         return self._bounds[level]
+
+    def aux_nbytes(self) -> int:
+        """Bytes held by the lazily-built expansion caches.
+
+        ``_bounds`` prefix sums plus ``_launch`` kernel metadata — bounded
+        (one entry per level each) but invisible to :meth:`nbytes`, which
+        stays the *serialized* summary size (the paper's Table-4 metric).
+        """
+        # list() snapshots are single C calls (atomic under the GIL): other
+        # threads holding this GFJS insert into these dicts lockless (via
+        # bounds()/gfjs_expand_meta), and a Python-level iteration here
+        # would race them into "dict changed size during iteration"
+        n = sum(int(b.nbytes) for b in list(self._bounds.values()))
+        for _, meta in list(self._launch.values()):
+            n += sum(int(getattr(a, "nbytes", 0)) for a in meta)
+        return int(n)
+
+    def resident_nbytes(self) -> int:
+        """In-memory footprint: summary arrays + expansion caches (what a
+        byte-budgeted cache should charge for a resident entry)."""
+        return self.nbytes() + self.aux_nbytes()
 
 
 def _lookup_groups(

@@ -63,30 +63,44 @@ def _expand_kernel(start_block, bounds0, bounds1, payload0, payload1, out_ref):
                            dtype=out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("t_pad", "interpret"))
-def expand_gather(
-    payload: jax.Array,   # [Np] int32 — per-run payload (values or indices)
-    bounds: jax.Array,    # [Np] int32 — inclusive prefix sums of run lengths
-    *,
-    t_pad: int,           # static padded output length (multiple of OT)
-    interpret: bool = False,
-) -> jax.Array:
-    """RLE-expand ``payload`` by run lengths encoded in ``bounds``."""
-    assert t_pad % OT == 0, "t_pad must be a multiple of the output tile"
-    n = payload.shape[0]
+@functools.partial(jax.jit, static_argnames=("t_pad",))
+def launch_meta(bounds: jax.Array, *, t_pad: int):
+    """Per-level launch metadata: padded bounds + per-tile window starts.
+
+    The `start_block` scalar-prefetch argument is a host-side
+    ``jnp.searchsorted`` over all output tiles — cheap, but it depends only
+    on (bounds, t_pad), never on the payload.  Splitting it out lets callers
+    that expand the same GFJS level repeatedly memoize it (``GFJS._launch``,
+    populated by `repro.kernels.ops.gfjs_expand_meta`) and lets the fused
+    multi-payload kernel share one computation across K columns.
+    """
+    n = bounds.shape[0]
     num_blocks = max(-(-n // RB), 1)
     pad_to = num_blocks * RB + RB  # +RB so block b0+1 always exists
     total = bounds[-1] if n else jnp.int32(0)
     # pad bounds with `total` so idx saturates into the dead region
     bounds_p = jnp.full((pad_to,), total, dtype=jnp.int32).at[:n].set(bounds)
-    payload_p = jnp.pad(payload, (0, pad_to - n))
 
     grid = t_pad // OT
     tile_lo = jax.lax.iota(jnp.int32, grid) * OT
     start_run = jnp.searchsorted(bounds_p[:n] if n else bounds_p[:1],
                                  tile_lo, side="right").astype(jnp.int32)
     start_block = jnp.clip(start_run // RB, 0, num_blocks - 1).astype(jnp.int32)
+    return bounds_p, start_block
 
+
+@functools.partial(jax.jit, static_argnames=("t_pad", "interpret"))
+def expand_gather_with_meta(
+    payload_p: jax.Array,    # [pad_to] int32 — pre-padded payload
+    bounds_p: jax.Array,     # [pad_to] int32 — padded prefix sums
+    start_block: jax.Array,  # [t_pad // OT] int32
+    *,
+    t_pad: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Expansion against precomputed `launch_meta` (memoized-level path)."""
+    assert t_pad % OT == 0, "t_pad must be a multiple of the output tile"
+    grid = t_pad // OT
     out = pl.pallas_call(
         _expand_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -100,7 +114,22 @@ def expand_gather(
             ],
             out_specs=pl.BlockSpec((OT,), lambda i, sb: (i,)),
         ),
-        out_shape=jax.ShapeDtypeStruct((t_pad,), payload.dtype),
+        out_shape=jax.ShapeDtypeStruct((t_pad,), payload_p.dtype),
         interpret=interpret,
     )(start_block, bounds_p, bounds_p, payload_p, payload_p)
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("t_pad", "interpret"))
+def expand_gather(
+    payload: jax.Array,   # [Np] int32 — per-run payload (values or indices)
+    bounds: jax.Array,    # [Np] int32 — inclusive prefix sums of run lengths
+    *,
+    t_pad: int,           # static padded output length (multiple of OT)
+    interpret: bool = False,
+) -> jax.Array:
+    """RLE-expand ``payload`` by run lengths encoded in ``bounds``."""
+    bounds_p, start_block = launch_meta(bounds, t_pad=t_pad)
+    payload_p = jnp.pad(payload, (0, bounds_p.shape[0] - payload.shape[0]))
+    return expand_gather_with_meta(payload_p, bounds_p, start_block,
+                                   t_pad=t_pad, interpret=interpret)

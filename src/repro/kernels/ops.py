@@ -24,6 +24,7 @@ import numpy as np
 from repro.kernels import boundaries as _boundaries
 from repro.kernels import dense_contract as _dense
 from repro.kernels import expand as _expand
+from repro.kernels import expand_fused as _expand_fused
 from repro.kernels import segsum as _segsum
 
 F32_EXACT = 1 << 24
@@ -41,14 +42,79 @@ def next_bucket(n: int, floor: int = 512) -> int:
     return b
 
 
-def rle_expand(payload, bounds, total: int, *, interpret: bool | None = None):
-    """Expand RLE runs to a flat array of ``total`` elements."""
+def rle_expand(payload, bounds, total: int, *, interpret: bool | None = None,
+               meta=None):
+    """Expand RLE runs to a flat array of ``total`` elements.
+
+    ``meta`` is an optional ``(bounds_p, start_block)`` pair from
+    `expand_meta`/`gfjs_expand_meta` — the memoized-launch path for levels
+    expanded repeatedly.
+    """
     interpret = default_interpret() if interpret is None else interpret
     t_pad = next_bucket(max(total, 1))
-    out = _expand.expand_gather(
-        jnp.asarray(payload, jnp.int32), jnp.asarray(bounds, jnp.int32),
-        t_pad=t_pad, interpret=interpret)
+    payload = jnp.asarray(payload, jnp.int32)
+    if meta is None:
+        out = _expand.expand_gather(
+            payload, jnp.asarray(bounds, jnp.int32),
+            t_pad=t_pad, interpret=interpret)
+    else:
+        bounds_p, start_block = meta
+        payload_p = jnp.pad(payload,
+                            (0, bounds_p.shape[0] - payload.shape[0]))
+        out = _expand.expand_gather_with_meta(
+            payload_p, bounds_p, start_block, t_pad=t_pad,
+            interpret=interpret)
     return out[:total]
+
+
+def rle_expand_many(payloads, bounds, total: int, *,
+                    interpret: bool | None = None, meta=None):
+    """Expand K payload rows sharing one RLE — a single fused kernel launch.
+
+    ``payloads`` is [K, Np]; the result is [K, total].  The fused kernel
+    recovers each output tile's run index once and amortizes it over all K
+    payload rows (codes of every variable in a GFJS level, plus the `src` /
+    CSR-offset index columns of frontier expansion) — K times fewer kernel
+    launches, bounds-window reads, and run searches than the per-column path.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    t_pad = next_bucket(max(total, 1))
+    payloads = jnp.asarray(payloads, jnp.int32)
+    if meta is None:
+        out = _expand_fused.expand_gather_many(
+            payloads, jnp.asarray(bounds, jnp.int32),
+            t_pad=t_pad, interpret=interpret)
+    else:
+        bounds_p, start_block = meta
+        payloads_p = jnp.pad(
+            payloads, ((0, 0), (0, bounds_p.shape[0] - payloads.shape[1])))
+        out = _expand_fused.expand_gather_many_with_meta(
+            payloads_p, bounds_p, start_block, t_pad=t_pad,
+            interpret=interpret)
+    return out[:, :total]
+
+
+def expand_meta(bounds, t_pad: int):
+    """`launch_meta` for arbitrary bounds: (padded bounds, tile starts)."""
+    return _expand.launch_meta(jnp.asarray(bounds, jnp.int32), t_pad=t_pad)
+
+
+def gfjs_expand_meta(gfjs, level: int, t_pad: int):
+    """Memoized launch metadata for expanding one GFJS level.
+
+    Cached on ``GFJS._launch`` alongside the ``_bounds`` prefix sums —
+    repeated expansion of the same level (the serve path's repeated
+    desummarize, benchmarks, range shards sharing a bucket) skips the
+    per-invocation host `searchsorted` over all output tiles.  One entry
+    per level: a different ``t_pad`` replaces the cached pair, so the memo
+    stays bounded and `GFJS.aux_nbytes` can account for it.
+    """
+    hit = gfjs._launch.get(level)
+    if hit is None or hit[0] != t_pad:
+        bounds = jnp.asarray(gfjs.bounds(level), jnp.int32)
+        hit = (t_pad, _expand.launch_meta(bounds, t_pad=t_pad))
+        gfjs._launch[level] = hit
+    return hit[1]
 
 
 def expand_indices(bounds, total: int, *, interpret: bool | None = None):

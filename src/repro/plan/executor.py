@@ -35,13 +35,17 @@ class Executor:
                  early_projection: bool = True,
                  planner: str = "cost",
                  plan: Optional[PhysicalPlan] = None,
-                 record_trace: bool = False) -> None:
+                 record_trace: bool = False,
+                 generation_backend: Optional[str] = None) -> None:
         self.catalog = catalog
         self.query = query
         self.elimination_order = elimination_order
         self.early_projection = early_projection
         self.planner = planner
         self.record_trace = record_trace
+        # pins plan.backends["summarize"]: "numpy" (dynamic-shape oracle) or
+        # "jax" (device-resident generate_gfjs_jax); None = environment pick
+        self.generation_backend = generation_backend
         self.timings: Dict[str, float] = {}
         self.enc: Optional[EncodedQuery] = None
         self.logical: Optional[LogicalPlan] = None
@@ -111,7 +115,8 @@ class Executor:
                 self.enc,
                 elimination_order=self.elimination_order,
                 early_projection=self.early_projection,
-                planner=self.planner)
+                planner=self.planner,
+                generation_backend=self.generation_backend)
         self.timings["plan"] = time.perf_counter() - t0
         return self.plan
 
@@ -132,10 +137,17 @@ class Executor:
         if self.generator is None:
             self.build_generator()
         t0 = time.perf_counter()
+        backend = (self.plan.backends.get("summarize", "numpy")
+                   if self.plan is not None else "numpy")
         if self.record_trace:
+            # trace capture needs the host (src, cidx) gather indices that
+            # splice-based incremental refresh replays — numpy only
             self.expansion_cache = []
             gfjs = generate_gfjs(self.generator, self.enc.domains,
                                  self.expansion_cache)
+        elif backend == "jax":
+            from repro.core.engine_jax import generate_gfjs_jax
+            gfjs = generate_gfjs_jax(self.generator, self.enc.domains)
         else:
             gfjs = generate_gfjs(self.generator, self.enc.domains)
         self.timings["summarize"] = time.perf_counter() - t0
@@ -222,26 +234,15 @@ _I32_MAX = (1 << 31) - 1
 
 def _desummarize_jax(gfjs: GFJS, *, decode: bool = True
                      ) -> Dict[str, np.ndarray]:
-    """RLE expansion through the `expand_gather` kernel wrapper.
+    """RLE expansion through the fused per-level kernel path.
 
-    The kernel path is int32: any level whose prefix-sum bounds or codes
-    would overflow (join sizes or domains >= 2**31) falls back to the
-    numpy expansion instead of silently wrapping.
+    Delegates to `engine_jax.desummarize_jax` — one `expand_gather_many`
+    launch per level with memoized launch metadata; levels with codes past
+    the int32 range fall back to numpy inside it.  A join size past the
+    int32 kernel range expands fully on numpy instead of raising: the
+    plan's backend choice is a hint, never a hard capability claim.
     """
-    from repro.kernels import ops
-    out: Dict[str, np.ndarray] = {}
-    total = gfjs.join_size
-    for li, lvl in enumerate(gfjs.levels):
-        bounds = gfjs.bounds(li) if lvl.num_runs else None
-        fits_i32 = (0 < total <= _I32_MAX and bounds is not None
-                    and lvl.num_runs <= _I32_MAX)
-        for v in lvl.vars:
-            if fits_i32 and (lvl.key_cols[v].size == 0
-                             or lvl.key_cols[v].max() <= _I32_MAX):
-                col = np.asarray(
-                    ops.rle_expand(lvl.key_cols[v], bounds, total)
-                ).astype(np.int64)
-            else:
-                col = np.repeat(lvl.key_cols[v], lvl.freq)
-            out[v] = gfjs.domains[v].decode(col) if decode else col
-    return {v: out[v] for v in gfjs.column_order}
+    if gfjs.join_size > _I32_MAX:
+        return desummarize(gfjs, decode=decode)
+    from repro.core.engine_jax import desummarize_jax
+    return desummarize_jax(gfjs, decode=decode)

@@ -99,10 +99,13 @@ def _select_backends() -> Dict[str, str]:
     running the numpy engine by definition.
 
     Keys pinned here are the ones the executor actually consults:
-    "desummarize" picks between the numpy expansion and the
-    `kernels/expand.py` wrapper; "summarize" names the generation engine
-    (numpy is the only one implemented — recorded so explain() states the
-    fact and a future TPU generation path has its switch ready).
+    "desummarize" picks between the numpy expansion and the fused
+    `kernels/expand_fused.py` wrapper; "summarize" picks the generation
+    engine — numpy (the dynamic-shape oracle) or the device-resident
+    `engine_jax.generate_gfjs_jax` frontier.  On CPU both stay numpy: the
+    kernels would only run interpreted there, and numpy's dynamic shapes
+    beat bucket-padded interpret execution (DESIGN.md §14 quantifies when
+    the planner should prefer numpy even on device).
     """
     import sys
     jx = sys.modules.get("jax")
@@ -113,7 +116,7 @@ def _select_backends() -> Dict[str, str]:
         except Exception:  # pragma: no cover - partially initialized jax
             on_tpu = False
     dev = "jax" if on_tpu else "numpy"
-    return {"summarize": "numpy", "desummarize": dev}
+    return {"summarize": dev, "desummarize": dev}
 
 
 def plan_query(enc: EncodedQuery, *,
@@ -121,14 +124,22 @@ def plan_query(enc: EncodedQuery, *,
                early_projection: bool = True,
                planner: str = "cost",
                beam_width: int = 4,
-               stats: Optional[QueryStats] = None
+               stats: Optional[QueryStats] = None,
+               generation_backend: Optional[str] = None
                ) -> Tuple[LogicalPlan, PhysicalPlan]:
     """Logical + physical plan for an encoded query.
 
     ``elimination_order`` forces the order (source="forced");
     ``planner="min_fill"`` restores the pre-planner behavior;
     ``planner="cost"`` runs the candidate search.
+    ``generation_backend`` pins the GFJS-generation engine ("numpy" — the
+    dynamic-shape oracle — or "jax", the device-resident frontier) instead
+    of the environment default; per-query pinning because small or
+    irregular generators favor numpy even when an accelerator is present.
     """
+    if generation_backend not in (None, "numpy", "jax"):
+        raise ValueError(
+            f"unknown generation backend {generation_backend!r}")
     t0 = time.perf_counter()
     logical = build_logical_plan(enc, early_projection=early_projection,
                                  stats=stats)
@@ -167,11 +178,14 @@ def plan_query(enc: EncodedQuery, *,
     # re-checks the exact join_size before materializing, so "inmem" here
     # is a hint, never a commitment to an in-memory blow-up
     est_rows = max((s.message_entries for s in steps), default=0.0)
+    backends = _select_backends()
+    if generation_backend is not None:
+        backends["summarize"] = generation_backend
     physical = PhysicalPlan(
         query_name=query.name,
         order=chosen.order,
         early_projection=early_projection,
-        backends=_select_backends(),
+        backends=backends,
         materialize="stream" if est_rows > STREAM_THRESHOLD else "inmem",
         source=chosen.source,
         est_cost=total,

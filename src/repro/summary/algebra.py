@@ -107,6 +107,17 @@ class SummaryFrame:
             return codes
         return codes[self._ancestors(level, own)]
 
+    def _abs_value_bound(self, var: str) -> Optional[float]:
+        """O(1) upper bound on |raw value| of ``var``.
+
+        Dictionary values are stored sorted, so the extremes are the
+        endpoints — no scan.  None for empty or non-numeric domains.
+        """
+        vals = self.gfjs.domains[var].values
+        if len(vals) == 0 or vals.dtype.kind not in _NUMERIC_KINDS:
+            return None
+        return float(max(abs(float(vals[0])), abs(float(vals[-1]))))
+
     # -- filtering ---------------------------------------------------------
     def filter(self, preds: Optional[Mapping[str, Predicate]] = None,
                **kw: Predicate) -> "SummaryFrame":
@@ -138,12 +149,15 @@ class SummaryFrame:
         ones = np.ones(len(deep_w), INT)
         new: List[np.ndarray] = [None] * (deep + 1)  # type: ignore[list-item]
         new[deep] = deep_w
+        # deep_w only zeroes existing weights, so this frame's (cached)
+        # count bounds every propagated segment sum — the O(1) kernel guard
+        bound = float(self.count())
         for j in range(deep):
             anc = self._ancestors(deep, j)
             # anc is sorted ascending and dense over 0..runs_j-1
             new[j] = segment_weighted_sum(
                 anc.astype(np.int32), deep_w, ones,
-                self.gfjs.levels[j].num_runs)
+                self.gfjs.levels[j].num_runs, bound=bound)
         return SummaryFrame(self.gfjs, new)
 
     # -- scalar aggregates -------------------------------------------------
@@ -152,15 +166,23 @@ class SummaryFrame:
 
         Filter propagation keeps every level summing to the same filtered
         total, so the root level (fewest runs) is the cheapest to read.
+        Cached per frame: it doubles as the O(1) exactness bound for every
+        weighted reduction (each level sums to the same filtered count).
         """
-        return int(self.weights[0].sum()) if self.gfjs.levels else 0
+        c = getattr(self, "_count", None)
+        if c is None:
+            c = int(self.weights[0].sum()) if self.gfjs.levels else 0
+            self._count = c
+        return c
 
     def sum(self, var: str):
         """SUM(var) over the (filtered) join multiset."""
         from repro.core.engine_jax import weighted_total
         lv = self.level_of(var)
         vals = _run_values(self.gfjs, var, self.gfjs.levels[lv].key_cols[var])
-        out = weighted_total(vals, self.weights[lv])
+        vb = self._abs_value_bound(var)
+        bound = None if vb is None else vb * self.count()
+        out = weighted_total(vals, self.weights[lv], bound=bound)
         return float(out) if vals.dtype.kind == "f" else int(out)
 
     def mean(self, var: str) -> Optional[float]:
@@ -207,7 +229,8 @@ class SummaryFrame:
         one per aggregate, rows sorted by key values.  Supported ops:
         count, sum, mean, min, max.
         """
-        from repro.core.engine_jax import segment_weighted_sum
+        from repro.core import engine_jax
+        segment_weighted_sum = engine_jax.segment_weighted_sum
         if isinstance(keys, str):
             keys = [keys]
         if not keys:
@@ -250,14 +273,20 @@ class SummaryFrame:
             return empty
 
         sizes = [self.gfjs.domains[k].size for k in keys]
-        ranks, _ = _rank_rows(key_codes, sizes)
-        order = np.argsort(ranks, kind="stable")
-        sranks = ranks[order]
-        new = np.ones(nlive, dtype=bool)
-        new[1:] = sranks[1:] != sranks[:-1]
-        seg = (np.cumsum(new) - 1).astype(np.int32)
-        starts = np.flatnonzero(new)
-        ngroups = len(starts)
+        ranks, packed = _rank_rows(key_codes, sizes)
+        if packed and nlive >= engine_jax.GROUP_DEVICE_MIN_RUNS \
+                and engine_jax.group_device_enabled():
+            # large run counts: packed-key sort on the accelerator
+            # (DESIGN.md §14); host keeps only the O(n) boundary scan
+            order, seg, starts, ngroups = engine_jax.group_runs_device(ranks)
+        else:
+            order = np.argsort(ranks, kind="stable")
+            sranks = ranks[order]
+            new = np.ones(nlive, dtype=bool)
+            new[1:] = sranks[1:] != sranks[:-1]
+            seg = (np.cumsum(new) - 1).astype(np.int32)
+            starts = np.flatnonzero(new)
+            ngroups = len(starts)
         w_s = w[order]
         sorted_codes = key_codes[order]
 
@@ -267,11 +296,13 @@ class SummaryFrame:
 
         counts: Optional[np.ndarray] = None
 
+        total_w = float(self.count())   # O(1)-guard bound: sum w_s <= count
+
         def group_counts() -> np.ndarray:
             nonlocal counts
             if counts is None:
                 counts = segment_weighted_sum(
-                    seg, np.ones(nlive, INT), w_s, ngroups)
+                    seg, np.ones(nlive, INT), w_s, ngroups, bound=total_w)
             return counts
 
         for name, (op, var) in specs.items():
@@ -282,7 +313,10 @@ class SummaryFrame:
             vals = _run_values(self.gfjs, var,
                                self._codes_at(var, work)[live])[order]
             if op in ("sum", "mean"):
-                sums = segment_weighted_sum(seg, vals, w_s, ngroups)
+                vb = self._abs_value_bound(var)
+                sums = segment_weighted_sum(
+                    seg, vals, w_s, ngroups,
+                    bound=None if vb is None else vb * total_w)
                 if op == "sum":
                     out[name] = sums
                 else:

@@ -163,6 +163,10 @@ class SummaryCache:
                     self.stats.expirations += 1
                 else:
                     self._entries.move_to_end(key)
+                    # re-measure: expansion caches (_bounds / _launch) grow
+                    # lazily after admission, and the byte budget must see
+                    # them — O(levels) per hit, settled at the next shrink
+                    self._nbytes[key] = hit.resident_nbytes()
                     self.stats.hits += 1
                     return hit, "memory"
             path = self._spill_path(key)
@@ -271,7 +275,7 @@ class SummaryCache:
         """Insert/refresh + shrink (lock held); returns deferred spill work."""
         self._entries[key] = gfjs      # replace on re-put, insert otherwise
         self._entries.move_to_end(key)
-        self._nbytes[key] = gfjs.nbytes()
+        self._nbytes[key] = gfjs.resident_nbytes()
         self._born[key] = born
         return self._shrink(keep=key)
 
