@@ -1,0 +1,183 @@
+"""Partitioned-execution benchmarks (DESIGN.md §15).
+
+Measures hash-partitioned Graphical Join against the monolithic pipeline
+on skewed lastfm-shaped instances:
+
+* **step scaling** — wall time of the bottleneck elimination step,
+  monolithic vs the slowest shard (the critical path of a k-device
+  deployment: shards are independent programs, so the slowest shard IS
+  the step's distributed latency);
+* **wall scaling** — end-to-end summarize wall time, monolithic vs the
+  thread-pooled shard run on this host (an underestimate of device
+  scaling: numpy shards contend for the GIL);
+* **balance** — per-shard row counts of the partitioned occurrences
+  (how the multiplicative hash spreads a Zipf-skewed key).
+
+Run as a module:
+
+  PYTHONPATH=src python -m benchmarks.dist_bench --smoke     # CI gate
+  PYTHONPATH=src python -m benchmarks.dist_bench --json BENCH_dist.json
+
+``--smoke`` is an exact-equality gate: the partitioned summary's row
+count, desummarized row multiset, and aggregates must equal the
+monolithic numpy oracle's bit for bit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from typing import List, Tuple
+
+# must precede any jax import in the process: XLA pins the device count at
+# first init, and the smoke gate wants the forced-virtual-device layout
+# when invoked standalone (CI exports the same flag for the whole step)
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import numpy as np
+
+from benchmarks.common import csv_line
+
+
+def _instances(scale: float):
+    """Skewed lastfm-shaped workloads (alpha cranks the key Zipf)."""
+    from repro.relational.synth import lastfm_like
+    out = []
+    cat, qs = lastfm_like(
+        n_users=int(1200 * scale), n_artists=int(900 * scale),
+        artists_per_user=18, friends_per_user=8, alpha=1.35, seed=7)
+    out.append(("lastfm_hot_A2", cat, qs["lastfm_A2"]))
+    out.append(("lastfm_hot_cyc", cat, qs["lastfm_cyc"]))
+    return out
+
+
+def _run(cat, query, partitions: int):
+    """(gj, gfjs, summarize_wall_seconds) for one pipeline run."""
+    from repro.core.api import GraphicalJoin
+    gj = GraphicalJoin(cat, query) if partitions <= 1 else \
+        GraphicalJoin(cat, query, partitions=partitions)
+    gj.plan()                       # planning excluded from the wall time
+    t0 = time.perf_counter()
+    gfjs = gj.run()
+    wall = time.perf_counter() - t0
+    return gj, gfjs, wall
+
+
+def _serial_shard_step_seconds(enc, plan) -> List[dict]:
+    """Per-shard step wall times measured in ISOLATION (shards one at a
+    time) — each shard of a real deployment runs alone on its device, so
+    the un-contended per-shard max is the honest step-level critical path
+    (the executor's threaded run would charge GIL contention to it)."""
+    from repro.core.elimination import build_generator
+    from repro.dist.partition import PartitionScheme, partition_encoded
+    scheme = PartitionScheme(plan.partition_var, plan.partitions)
+    out = []
+    for enc_s in partition_encoded(enc, scheme):
+        gen = build_generator(enc_s, elimination_order=list(plan.order),
+                              early_projection=plan.early_projection)
+        out.append(dict(gen.step_seconds))
+    return out
+
+
+def bench_dist(partitions: int = 4, scale: float = 1.0) -> List[str]:
+    lines: List[str] = []
+    for name, cat, query in _instances(scale):
+        mono_gj, mono_g, mono_wall = _run(cat, query, 1)
+        part_gj, part_g, part_wall = _run(cat, query, partitions)
+        assert part_g.join_size == mono_g.join_size
+
+        plan = part_gj.plan()
+        pvar = plan.partition_var
+        mono_step = mono_gj._executor.step_seconds.get(pvar, 0.0)
+        per_shard = _serial_shard_step_seconds(part_gj.enc, plan)
+        shard_step = max(s.get(pvar, 0.0) for s in per_shard)
+        step_scaling = mono_step / shard_step if shard_step > 0 else 0.0
+        wall_scaling = mono_wall / part_wall if part_wall > 0 else 0.0
+        sizes = part_g.shard_sizes()
+        balance = (max(sizes) / (sum(sizes) / len(sizes))
+                   if sum(sizes) else 1.0)
+        lines.append(csv_line(
+            f"dist/{name}_p{partitions}", part_wall * 1e6,
+            f"step_scaling={step_scaling:.2f}x;"
+            f"wall_scaling={wall_scaling:.2f}x;"
+            f"partition_var={pvar};join_size={mono_g.join_size};"
+            f"shard_skew={balance:.2f};partitions={partitions}"))
+    return lines
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: partitioned == monolithic oracle, exactly
+# ---------------------------------------------------------------------------
+
+def _row_multiset(gj, gfjs, all_vars) -> np.ndarray:
+    res = gj.desummarize(gfjs, decode=False)
+    if gfjs.join_size == 0:
+        return np.zeros((0, len(all_vars)), np.int64)
+    m = np.stack([res[v] for v in all_vars], axis=1)
+    return m[np.lexsort(m.T[::-1])]
+
+
+def smoke() -> int:
+    from repro.relational.synth import lastfm_like
+    from repro.summary.algebra import SummaryFrame
+    cat, qs = lastfm_like(n_users=250, n_artists=180, artists_per_user=6,
+                          friends_per_user=4, alpha=1.3, seed=3)
+    failures = 0
+    for name in ("lastfm_A1", "lastfm_A2", "lastfm_cyc"):
+        query = qs[name]
+        mono_gj, mono_g, _ = _run(cat, query, 1)
+        part_gj, part_g, _ = _run(cat, query, 4)
+        vs = sorted(query.variables)
+        f0, f1 = SummaryFrame.of(mono_g), SummaryFrame.of(part_g)
+        var, key = vs[0], vs[-1]
+        t0 = f0.group_by(key, n="count", s=("sum", var), lo=("min", var))
+        t1 = f1.group_by(key, n="count", s=("sum", var), lo=("min", var))
+        ok = (part_g.join_size == mono_g.join_size
+              and np.array_equal(_row_multiset(mono_gj, mono_g, vs),
+                                 _row_multiset(part_gj, part_g, vs))
+              and f1.count() == f0.count()
+              and f1.sum(var) == f0.sum(var)
+              and f1.min(var) == f0.min(var)
+              and f1.max(var) == f0.max(var)
+              and all(np.array_equal(np.asarray(t0[k]), np.asarray(t1[k]))
+                      for k in t0))
+        print(f"dist-smoke {name}: join_size={mono_g.join_size} "
+              f"shards={part_g.shard_sizes()} "
+              f"{'OK' if ok else 'MISMATCH'}")
+        if not ok:
+            failures += 1
+    try:
+        import jax
+        ndev = jax.device_count()
+    except Exception:
+        ndev = 0
+    print(f"dist-smoke devices={ndev}")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="exact-equality gate (partitioned vs numpy oracle)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the csv rows as a JSON summary")
+    ap.add_argument("--partitions", type=int, default=4)
+    ap.add_argument("--scale", type=float,
+                    default=float(os.environ.get("BENCH_SCALE", "1.0")))
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke()
+    lines = bench_dist(args.partitions, args.scale)
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line, flush=True)
+    if args.json:
+        from benchmarks.kernels_bench import write_json
+        write_json(lines, args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,9 +5,14 @@ workloads (default 1.0 runs the full suite in a few minutes on one core).
 
   PYTHONPATH=src python -m benchmarks.run [--only tableN]
 
-The kernels section also writes ``BENCH_kernels.json`` (override with
-``--kernels-json``) so the kernel-level perf trajectory is machine-readable
-across PRs.
+The kernels section writes ``BENCH_kernels.json`` and the dist section
+``BENCH_dist.json`` (override/disable with ``--kernels-json`` /
+``--dist-json``) so the perf trajectory is machine-readable across PRs.
+
+Sections degrade, never crash: a missing optional dependency (zstandard,
+hypothesis), an absent accelerator, or a jax import problem prints a
+``skip,<section>,<reason>`` line and the run continues — the entry point
+must be runnable on any dev box.
 """
 
 from __future__ import annotations
@@ -15,22 +20,46 @@ from __future__ import annotations
 import argparse
 import sys
 import tempfile
+import traceback
+
+
+def _skip_line(name: str, exc: BaseException) -> str:
+    reason = f"{type(exc).__name__}: {exc}".replace(",", ";").splitlines()[0]
+    return f"skip,{name},{reason}"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single section (table1..table6, "
-                         "sensitivity, planner, summary, kernels)")
+                         "sensitivity, planner, summary, kernels, dist)")
     ap.add_argument("--kernels-json", default="BENCH_kernels.json",
                     metavar="PATH",
                     help="where to write the kernels-section JSON summary "
                          "('' disables)")
+    ap.add_argument("--dist-json", default="BENCH_dist.json",
+                    metavar="PATH",
+                    help="where to write the dist-section JSON summary "
+                         "('' disables)")
     args = ap.parse_args()
 
     from benchmarks import tables
-    from benchmarks.kernels_bench import bench_kernels, write_json
     from benchmarks.summary_bench import bench_summary
+
+    def kernels_section(tmp):
+        from benchmarks.kernels_bench import bench_kernels, write_json
+        lines = bench_kernels()
+        if args.kernels_json:
+            write_json(lines, args.kernels_json)
+        return lines
+
+    def dist_section(tmp):
+        from benchmarks.dist_bench import bench_dist
+        from benchmarks.kernels_bench import write_json
+        lines = bench_dist()
+        if args.dist_json:
+            write_json(lines, args.dist_json)
+        return lines
 
     sections = {
         "table1": tables.bench_table1,
@@ -42,6 +71,8 @@ def main() -> None:
         "sensitivity": tables.bench_sensitivity,
         "planner": tables.bench_planner,
         "summary": lambda tmp: bench_summary(),
+        "kernels": kernels_section,
+        "dist": dist_section,
     }
 
     print("name,us_per_call,derived")
@@ -49,14 +80,13 @@ def main() -> None:
         for name, fn in sections.items():
             if args.only and args.only != name:
                 continue
-            for line in fn(tmp):
-                print(line, flush=True)
-        if args.only in (None, "kernels"):
-            lines = bench_kernels()
-            for line in lines:
-                print(line, flush=True)
-            if args.kernels_json:
-                write_json(lines, args.kernels_json)
+            try:
+                for line in fn(tmp):
+                    print(line, flush=True)
+            except (ImportError, RuntimeError, OSError) as exc:
+                # optional deps (zstandard/hypothesis) or accelerator
+                # plumbing may be absent on a dev box: report, move on
+                print(_skip_line(name, exc), flush=True)
 
 
 if __name__ == "__main__":

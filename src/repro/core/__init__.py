@@ -8,14 +8,15 @@ Public surface:
 """
 
 from repro.core.api import GraphicalJoin
-from repro.core.gfjs import (GFJS, desummarize, desummarize_range,
-                             generate_gfjs, row_at, stream_desummarize)
+from repro.core.gfjs import (GFJS, ShardedGFJS, desummarize,
+                             desummarize_range, generate_gfjs, row_at,
+                             stream_desummarize)
 from repro.core.elimination import Generator, build_generator
 from repro.core.potentials import Factor
 from repro.core.storage import load_gfjs, save_gfjs, gfjs_to_csv
 
 __all__ = [
-    "GraphicalJoin", "GFJS", "Generator", "Factor",
+    "GraphicalJoin", "GFJS", "ShardedGFJS", "Generator", "Factor",
     "build_generator", "generate_gfjs", "desummarize", "desummarize_range",
     "stream_desummarize", "row_at", "save_gfjs", "load_gfjs", "gfjs_to_csv",
 ]

@@ -50,7 +50,12 @@ class GraphicalJoin:
     `capture_state`/`refresh` can maintain the summary incrementally on
     base-table appends (repro/summary/incremental.py); ``generation_backend``
     pins GFJS generation to "numpy" (dynamic-shape oracle) or "jax" (the
-    device-resident frontier of `engine_jax.generate_gfjs_jax`).
+    device-resident frontier of `engine_jax.generate_gfjs_jax`);
+    ``partitions`` > 1 runs hash-partitioned (repro/dist/partition.py):
+    ``run()`` returns a :class:`~repro.core.gfjs.ShardedGFJS` whose shards
+    were built independently (``partition_var`` overrides the planner's
+    partition-key choice; incremental refresh is unsupported and falls
+    back to rebuild).
     """
 
     def __init__(
@@ -64,6 +69,8 @@ class GraphicalJoin:
         plan: Optional["PhysicalPlan"] = None,
         record_trace: bool = False,
         generation_backend: Optional[str] = None,
+        partitions: Optional[int] = None,
+        partition_var: Optional[str] = None,
     ) -> None:
         from repro.plan.executor import Executor
         self.catalog = catalog
@@ -76,6 +83,8 @@ class GraphicalJoin:
             plan=plan,
             record_trace=record_trace,
             generation_backend=generation_backend,
+            partitions=partitions,
+            partition_var=partition_var,
         )
 
     # -- executor state, exposed under the historical names ----------------
@@ -119,6 +128,7 @@ class GraphicalJoin:
             ex.plan = None
             ex.logical = None
             ex.generator = None
+            ex._sharded = None
 
     # -- phases ------------------------------------------------------------
     def build_model(self) -> "GraphicalJoin":
@@ -144,7 +154,15 @@ class GraphicalJoin:
 
     # -- convenience -------------------------------------------------------
     def join_size(self) -> int:
-        """|Q| without touching the data again (sum of the root marginal)."""
+        """|Q| without touching the data again (sum of the root marginal).
+
+        Under a partitioned plan there is no monolithic generator to read
+        (and building one would re-run the exact elimination partitioning
+        exists to split), so the answer comes from the sharded pipeline —
+        the sum of per-shard root marginals.
+        """
+        if self._executor.build_plan().partitions > 1:
+            return self._executor.summarize().join_size
         if self.generator is None:
             self.build_generator()
         return self.generator.join_size

@@ -24,6 +24,7 @@ deleted; the factor for its parent is still calculated").
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -118,6 +119,11 @@ class Generator:
     join_size: int
     stats: Dict[str, float] = field(default_factory=dict)
     trace: Optional[EliminationTrace] = None   # set by record_trace builds
+    # plan feedback: measured per-step elimination products and wall times
+    # (var -> |multiway_product|, var -> seconds); the executor surfaces
+    # these next to the planner's estimates in PhysicalPlan.explain()
+    step_products: Dict[str, int] = field(default_factory=dict)
+    step_seconds: Dict[str, float] = field(default_factory=dict)
 
     def nbytes(self) -> int:
         n = int(self.root_codes.nbytes + self.root_freq.nbytes)
@@ -152,13 +158,18 @@ def _make_psi(phi: Factor, child: str, parents: Tuple[str, ...]) -> Psi:
 
 
 def eliminate_step(
-    rel: List[Factor], v: str, order: Sequence[str], out_vars: Sequence[str]
+    rel: List[Factor], v: str, order: Sequence[str], out_vars: Sequence[str],
+    observe: Optional[Dict[str, float]] = None,
 ) -> Tuple[Optional[Psi], Tuple[str, ...], Factor]:
     """One Algorithm-2 step: product, conditionalize, sum out.
 
     Returns ``(psi, parents, message)``; ``psi`` is None for projected-out
     variables.  Shared between the full build and the incremental refresher
     (which replays exactly this computation for dirty steps).
+
+    ``observe`` (a dict, when given) receives ``product_entries`` — the
+    measured size of the step's multiway product, the quantity the cost
+    model estimates when scoring orders.
     """
     # Bind v FIRST in the frontier: every rel factor contains v, so each
     # later variable joins through it and prefix frontiers stay within
@@ -169,6 +180,8 @@ def eliminate_step(
     # way downstream consumers re-sort.
     phi_alpha = multiway_product(
         rel, var_order=[v] + [u for u in order if u != v])
+    if observe is not None:
+        observe["product_entries"] = float(phi_alpha.num_entries)
     parents = tuple(u for u in phi_alpha.vars if u != v)
     psi = _make_psi(phi_alpha, v, parents) if v in out_vars else None
     msg = phi_alpha.marginalize_out(v)
@@ -193,6 +206,8 @@ def assemble_generator(
     phi_root: Factor,
     stats: Dict[str, float],
     trace: Optional[EliminationTrace] = None,
+    step_products: Optional[Dict[str, int]] = None,
+    step_seconds: Optional[Dict[str, float]] = None,
 ) -> Generator:
     """Depth-level the psis under the root marginal into a Generator.
 
@@ -226,6 +241,8 @@ def assemble_generator(
         join_size=join_size,
         stats=stats,
         trace=trace,
+        step_products=dict(step_products or {}),
+        step_seconds=dict(step_seconds or {}),
     )
 
 
@@ -280,6 +297,8 @@ def build_generator(
     psis: Dict[str, Psi] = {}
     parents_of: Dict[str, Tuple[str, ...]] = {}
     trace_steps: List[StepTrace] = []
+    step_products: Dict[str, int] = {}
+    step_seconds: Dict[str, float] = {}
 
     # the working set carries provenance tags: ("table", occurrence index)
     # for quantitative-learning factors, ("msg", var) for messages — which
@@ -292,8 +311,12 @@ def build_generator(
         rest = [t for t in working if v not in t[2].vars]
         if not rel:  # pragma: no cover - connected graph invariant
             raise AssertionError(f"no factor contains variable {v}")
+        t_step = time.perf_counter()
+        obs: Dict[str, float] = {}
         psi, parents, msg = eliminate_step(
-            [f for _, _, f in rel], v, order, out_vars)
+            [f for _, _, f in rel], v, order, out_vars, observe=obs)
+        step_seconds[v] = time.perf_counter() - t_step
+        step_products[v] = int(obs.get("product_entries", 0))
         parents_of[v] = parents
         if psi is not None:
             psis[v] = psi
@@ -328,4 +351,6 @@ def build_generator(
             "largest_maxclique": float(max((len(c) for c in tri.maxcliques), default=0)),
         },
         trace=trace,
+        step_products=step_products,
+        step_seconds=step_seconds,
     )

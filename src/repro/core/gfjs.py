@@ -100,6 +100,56 @@ class GFJS:
         return self.nbytes() + self.aux_nbytes()
 
 
+@dataclass
+class ShardedGFJS:
+    """A hash-partitioned GFJS: one independent summary per shard.
+
+    The join result is partitioned by ``hash(code(partition_var)) %
+    num_partitions`` (repro/dist/partition.py): every base potential
+    containing the partition variable is restricted to the shard's hash
+    slice and every other potential is replicated, so each shard's GFJS
+    summarizes exactly the join rows whose partition-variable value hashes
+    to it.  The shards are disjoint and their union is the full result —
+    row counts and distributive aggregates are sums over shards, and
+    nothing here ever materializes a concatenated summary.
+
+    All shards run under the same physical plan, so ``column_order`` and
+    the per-level variable structure are identical across shards (factor
+    schemas — not data — determine both); the merge logic in
+    repro/summary/algebra.py relies on that.
+    """
+
+    shards: List[GFJS]
+    column_order: List[str]
+    join_size: int
+    domains: Dict[str, Domain]
+    partition_var: str
+    salt: int = 0
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.shards)
+
+    @property
+    def num_columns(self) -> int:
+        return len(self.column_order)
+
+    def shard_sizes(self) -> List[int]:
+        return [s.join_size for s in self.shards]
+
+    def nbytes(self) -> int:
+        return int(sum(s.nbytes() for s in self.shards))
+
+    def num_runs(self) -> int:
+        return int(sum(s.num_runs() for s in self.shards))
+
+    def aux_nbytes(self) -> int:
+        return int(sum(s.aux_nbytes() for s in self.shards))
+
+    def resident_nbytes(self) -> int:
+        return self.nbytes() + self.aux_nbytes()
+
+
 def _lookup_groups(
     frontier_keys: np.ndarray, psi: Psi
 ) -> np.ndarray:
@@ -209,8 +259,18 @@ def rle_expand(values: np.ndarray, freq: np.ndarray) -> np.ndarray:
     return np.repeat(values, freq)
 
 
-def desummarize(gfjs: GFJS, *, decode: bool = True) -> Dict[str, np.ndarray]:
-    """Materialize the full flat join result from the summary."""
+def desummarize(gfjs: "GFJS | ShardedGFJS", *, decode: bool = True
+                ) -> Dict[str, np.ndarray]:
+    """Materialize the full flat join result from the summary.
+
+    A :class:`ShardedGFJS` expands shard by shard and concatenates in
+    shard order — the row *multiset* equals the monolithic expansion, but
+    rows arrive grouped by partition hash rather than globally sorted.
+    """
+    if isinstance(gfjs, ShardedGFJS):
+        parts = [desummarize(s, decode=decode) for s in gfjs.shards]
+        return {v: np.concatenate([p[v] for p in parts])
+                for v in gfjs.column_order}
     out: Dict[str, np.ndarray] = {}
     for lvl in gfjs.levels:
         for v in lvl.vars:
@@ -220,7 +280,7 @@ def desummarize(gfjs: GFJS, *, decode: bool = True) -> Dict[str, np.ndarray]:
 
 
 def desummarize_range(
-    gfjs: GFJS, lo: int, hi: int, *, decode: bool = True
+    gfjs: "GFJS | ShardedGFJS", lo: int, hi: int, *, decode: bool = True
 ) -> Dict[str, np.ndarray]:
     """Materialize join-result rows [lo, hi) only — O((hi-lo) + log runs).
 
@@ -228,7 +288,26 @@ def desummarize_range(
     sums, so any row range is addressable without touching the rest of the
     result.  This is what makes GFJS range-shardable across a TPU mesh: each
     data host expands only its own slice.
+
+    For a :class:`ShardedGFJS` the row space is the shard-concatenated
+    order (shard 0's rows, then shard 1's, ...) — the same order
+    :func:`desummarize` and :func:`stream_desummarize` emit — and a range
+    resolves through the cumulative shard sizes to per-shard sub-ranges.
     """
+    if isinstance(gfjs, ShardedGFJS):
+        lo = max(0, int(lo))
+        hi = min(int(hi), gfjs.join_size)
+        parts: List[Dict[str, np.ndarray]] = []
+        base = 0
+        for shard in gfjs.shards:
+            s_lo = max(lo - base, 0)
+            s_hi = min(hi - base, shard.join_size)
+            if s_lo < s_hi or not parts:   # keep >=1 part for dtypes
+                parts.append(desummarize_range(
+                    shard, s_lo, max(s_hi, s_lo), decode=decode))
+            base += shard.join_size
+        return {v: np.concatenate([p[v] for p in parts])
+                for v in gfjs.column_order}
     lo = max(0, int(lo))
     hi = min(int(hi), gfjs.join_size)
     out: Dict[str, np.ndarray] = {}
@@ -249,18 +328,38 @@ def desummarize_range(
 
 
 def stream_desummarize(
-    gfjs: GFJS, chunk_rows: int = 1 << 20, *, decode: bool = True
+    gfjs: "GFJS | ShardedGFJS", chunk_rows: int = 1 << 20, *,
+    decode: bool = True
 ) -> Iterator[Dict[str, np.ndarray]]:
-    """Yield the join result in row chunks without full materialization."""
+    """Yield the join result in row chunks without full materialization.
+
+    Sharded summaries stream shard by shard (chunk boundaries reset at
+    shard edges; each chunk is still at most ``chunk_rows`` rows).
+    """
+    if isinstance(gfjs, ShardedGFJS):
+        for shard in gfjs.shards:
+            yield from stream_desummarize(shard, chunk_rows, decode=decode)
+        return
     for lo in range(0, gfjs.join_size, chunk_rows):
         yield desummarize_range(gfjs, lo, min(lo + chunk_rows, gfjs.join_size),
                                 decode=decode)
 
 
-def row_at(gfjs: GFJS, t: int, *, decode: bool = True) -> Dict[str, object]:
-    """O(levels * log runs) random access to join-result row ``t``."""
+def row_at(gfjs: "GFJS | ShardedGFJS", t: int, *,
+           decode: bool = True) -> Dict[str, object]:
+    """O(levels * log runs) random access to join-result row ``t``.
+
+    Sharded row space is the shard-concatenated order of
+    :func:`desummarize`; the shard lookup adds O(num_partitions).
+    """
     if not (0 <= t < gfjs.join_size):
         raise IndexError(t)
+    if isinstance(gfjs, ShardedGFJS):
+        for shard in gfjs.shards:
+            if t < shard.join_size:
+                return row_at(shard, t, decode=decode)
+            t -= shard.join_size
+        raise IndexError(t)  # pragma: no cover - join_size == sum invariant
     out: Dict[str, object] = {}
     for li, lvl in enumerate(gfjs.levels):
         bounds = gfjs.bounds(li)

@@ -66,6 +66,27 @@ def _rank_rows(keys: np.ndarray, sizes: Sequence[int]) -> Tuple[np.ndarray, bool
         return ranks, False
 
 
+def group_ranks(
+    ranks: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Stable sort-and-segment of a 1-D rank array.
+
+    Returns ``(order, seg, starts, num_groups)``: ``order`` sorts the
+    ranks stably, ``seg[i]`` is the dense group id of sorted position
+    ``i`` (int32 — group counts are bounded by the row count), ``starts``
+    the sorted positions where a new group begins.  The host-side twin of
+    ``engine_jax.group_runs_device`` and the one GROUP BY segmentation
+    idiom shared by the summary algebra (monolithic and shard-merge).
+    """
+    order = np.argsort(ranks, kind="stable")
+    sranks = ranks[order]
+    new = np.ones(len(sranks), dtype=bool)
+    new[1:] = sranks[1:] != sranks[:-1]
+    seg = (np.cumsum(new) - 1).astype(np.int32)
+    starts = np.flatnonzero(new)
+    return order, seg, starts, len(starts)
+
+
 @dataclass
 class Factor:
     """COO frequency tensor over ``vars`` with bucket/fac value split."""

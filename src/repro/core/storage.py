@@ -34,7 +34,7 @@ try:  # optional: the container may not ship zstandard
 except ImportError:  # pragma: no cover - depends on environment
     zstandard = None
 
-from repro.core.gfjs import GFJS, LevelSummary
+from repro.core.gfjs import GFJS, LevelSummary, ShardedGFJS
 from repro.relational.encoding import Domain
 
 MAGIC = b"GFJS"
@@ -78,9 +78,15 @@ def decompress_bytes(payload: bytes, codec: str,
     raise ValueError(f"unknown codec {codec!r}")
 
 
-def save_gfjs(gfjs: GFJS, path: str, *, level: int = 3,
+def save_gfjs(gfjs, path: str, *, level: int = 3,
               codec: Optional[str] = None) -> int:
-    """Write the summary; returns bytes on disk (Table 4's metric)."""
+    """Write the summary; returns bytes on disk (Table 4's metric).
+
+    Accepts a :class:`GFJS` or a :class:`ShardedGFJS`; a sharded summary
+    writes one set of level blobs per shard (``shard{i}/...``) plus the
+    shared domains and partition metadata, in the same single-file
+    container (the cache's spill path round-trips both transparently).
+    """
     codec = default_codec() if codec is None else codec
     blobs: List[Dict] = []
     body = io.BytesIO()
@@ -94,22 +100,32 @@ def save_gfjs(gfjs: GFJS, path: str, *, level: int = 3,
                       "dtype": str(arr.dtype), "shape": list(arr.shape),
                       "codec": used})
 
-    for i, lvl in enumerate(gfjs.levels):
-        add(f"level{i}/freq", lvl.freq)
-        for v in lvl.vars:
-            add(f"level{i}/key/{v}", lvl.key_cols[v])
-    for v, dom in gfjs.domains.items():
-        add(f"domain/{v}", dom.values)
+    def add_levels(g: GFJS, prefix: str) -> List[Dict]:
+        for i, lvl in enumerate(g.levels):
+            add(f"{prefix}level{i}/freq", lvl.freq)
+            for v in lvl.vars:
+                add(f"{prefix}level{i}/key/{v}", lvl.key_cols[v])
+        return [{"vars": list(l.vars)} for l in g.levels]
 
     manifest = {
         "version": VERSION,
         "codec": codec,
         "join_size": gfjs.join_size,
         "column_order": gfjs.column_order,
-        "levels": [{"vars": list(l.vars)} for l in gfjs.levels],
         "domains": list(gfjs.domains.keys()),
-        "blobs": blobs,
     }
+    if isinstance(gfjs, ShardedGFJS):
+        manifest["sharded"] = {"partition_var": gfjs.partition_var,
+                               "salt": int(gfjs.salt)}
+        manifest["shards"] = [
+            {"join_size": s.join_size,
+             "levels": add_levels(s, f"shard{i}/")}
+            for i, s in enumerate(gfjs.shards)]
+    else:
+        manifest["levels"] = add_levels(gfjs, "")
+    for v, dom in gfjs.domains.items():
+        add(f"domain/{v}", dom.values)
+    manifest["blobs"] = blobs
     mjson = json.dumps(manifest).encode()
 
     with open(path, "wb") as f:
@@ -121,7 +137,8 @@ def save_gfjs(gfjs: GFJS, path: str, *, level: int = 3,
     return os.path.getsize(path)
 
 
-def load_gfjs(path: str) -> GFJS:
+def load_gfjs(path: str):
+    """Load a summary written by :func:`save_gfjs` (GFJS or ShardedGFJS)."""
     with open(path, "rb") as f:
         if f.read(4) != MAGIC:
             raise ValueError(f"{path} is not a GFJS file")
@@ -148,13 +165,28 @@ def load_gfjs(path: str) -> GFJS:
         raise KeyError(name)
 
     domains = {v: Domain(v, get(f"domain/{v}")) for v in manifest["domains"]}
-    levels: List[LevelSummary] = []
-    for i, meta in enumerate(manifest["levels"]):
-        vars_ = tuple(meta["vars"])
-        freq = get(f"level{i}/freq")
-        keys = {v: get(f"level{i}/key/{v}") for v in vars_}
-        levels.append(LevelSummary(vars_, keys, freq))
-    return GFJS(levels, list(manifest["column_order"]), int(manifest["join_size"]), domains)
+
+    def read_levels(levels_meta: List[Dict], prefix: str) -> List[LevelSummary]:
+        levels: List[LevelSummary] = []
+        for i, meta in enumerate(levels_meta):
+            vars_ = tuple(meta["vars"])
+            freq = get(f"{prefix}level{i}/freq")
+            keys = {v: get(f"{prefix}level{i}/key/{v}") for v in vars_}
+            levels.append(LevelSummary(vars_, keys, freq))
+        return levels
+
+    if "sharded" in manifest:
+        shards = [
+            GFJS(read_levels(sm["levels"], f"shard{i}/"),
+                 list(manifest["column_order"]), int(sm["join_size"]), domains)
+            for i, sm in enumerate(manifest["shards"])]
+        return ShardedGFJS(shards, list(manifest["column_order"]),
+                           int(manifest["join_size"]), domains,
+                           manifest["sharded"]["partition_var"],
+                           int(manifest["sharded"]["salt"]))
+    return GFJS(read_levels(manifest["levels"], ""),
+                list(manifest["column_order"]),
+                int(manifest["join_size"]), domains)
 
 
 def gfjs_to_csv(gfjs: GFJS, directory: str) -> int:

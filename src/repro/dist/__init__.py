@@ -1,16 +1,38 @@
 """Distribution layer: logical-axis sharding rules, activation-sharding
-context, and GJ-specific data-parallel primitives.
+context, and the hash-partitioned Graphical Join execution layer.
 
 Models declare *logical* axes ("embed", "heads", "ff", ...) per parameter
 leaf (repro/models/layers.py); :mod:`repro.dist.sharding` maps those to mesh
 ``PartitionSpec``s so model code never mentions mesh axes.
-:mod:`repro.dist.gj_parallel` carries the GJ-side primitives: sharded
-potential counts and range-sharded desummarization (DESIGN.md §7).
+:mod:`repro.dist.partition` carries the GJ-side layer (DESIGN.md §15):
+hash-partitioning of encoded potentials on a planned partition variable,
+device-parallel partition/potential histograms over a mesh axis, and
+parallel desummarization of both monolithic and sharded summaries (it
+absorbed the former ``dist/gj_parallel.py``).
+
+Submodule re-exports resolve lazily (PEP 562): ``sharding`` and
+``act_sharding`` import jax at module level, and eagerly pulling them here
+would force the jax import onto every consumer of the (numpy-only)
+partition layer — the planner imports ``repro.dist.partition`` and must
+stay jax-free (see ``plan/search.py::_select_backends``).
 """
 
-from repro.dist.sharding import (DEFAULT_RULES, SP_FSDP_RULES, ShardingRules,
-                                 param_specs)
-from repro.dist.act_sharding import constrain, use
+_SHARDING = {"ShardingRules", "DEFAULT_RULES", "SP_FSDP_RULES", "param_specs"}
+_ACT = {"constrain", "use"}
+_PARTITION = {"PartitionScheme", "choose_partition_var", "hash_partition",
+              "parallel_desummarize", "partition_counts", "partition_encoded",
+              "partition_histogram", "sharded_potential_counts"}
 
-__all__ = ["ShardingRules", "DEFAULT_RULES", "SP_FSDP_RULES", "param_specs",
-           "constrain", "use"]
+__all__ = sorted(_SHARDING | _ACT | _PARTITION)
+
+
+def __getattr__(name):
+    import importlib
+    if name in _SHARDING:
+        return getattr(importlib.import_module("repro.dist.sharding"), name)
+    if name in _ACT:
+        return getattr(importlib.import_module("repro.dist.act_sharding"),
+                       name)
+    if name in _PARTITION:
+        return getattr(importlib.import_module("repro.dist.partition"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,227 @@
+"""Hash-partitioned Graphical Join execution (DESIGN.md §15).
+
+The partition key falls out of the PGM view: pick one query variable
+``v`` (by default the eliminated variable of the costliest planned step —
+the bottleneck the shards should split), hash its dictionary codes, and
+
+* restrict every base potential *containing* ``v`` to the rows whose
+  ``v``-code hashes to the shard;
+* replicate every potential that does not mention ``v``.
+
+Every row of the full join result carries exactly one ``v`` value, so the
+per-shard join results are disjoint and their union is the full result —
+each shard runs the *same* message-passing steps independently, no
+cross-shard communication until the (cheap, summary-level) merge.  This is
+the classic distributed hash join generalized to the whole elimination
+DAG: steps whose inputs are reachable from a ``v``-carrying potential do
+``1/k``-th of the work per shard; steps independent of ``v`` are
+replicated (DESIGN.md §15 discusses when that trade is worth it).
+
+The module is importable without jax (the planner consults
+:func:`choose_partition_var`); the device-parallel entry points —
+:func:`partition_histogram`, :func:`sharded_potential_counts` (absorbed
+from the retired ``dist/gj_parallel.py``) — import ``shard_map`` lazily
+and run one program per mesh-axis device.
+"""
+
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Union
+
+import numpy as np
+
+from repro.core.gfjs import GFJS, ShardedGFJS, desummarize, desummarize_range
+from repro.core.potentials import INT
+from repro.relational.encoding import EncodedQuery
+
+# Knuth multiplicative constant (2^32 / phi); the hash must be identical
+# in numpy and jnp uint32 arithmetic so host- and device-side partition
+# decisions can never disagree.
+HASH_MULT = 0x9E3779B1
+
+
+def hash_partition(codes, num_partitions: int, *, salt: int = 0) -> np.ndarray:
+    """Partition id in [0, num_partitions) per dictionary code (numpy).
+
+    uint32 multiplicative hash + xor-fold: codes are dense domain indices,
+    so plain modulo would map contiguous code ranges to round-robin shards
+    and correlate with value order; the multiply decorrelates.
+    """
+    if num_partitions <= 0:
+        raise ValueError("num_partitions must be positive")
+    h = np.asarray(codes).astype(np.uint32)
+    h = (h + np.uint32(salt & 0xFFFFFFFF)) * np.uint32(HASH_MULT)
+    h ^= h >> np.uint32(16)
+    return (h % np.uint32(num_partitions)).astype(INT)
+
+
+def hash_partition_device(codes, num_partitions: int, *, salt: int = 0):
+    """jnp twin of :func:`hash_partition` (bit-identical by construction)."""
+    import jax.numpy as jnp
+    if num_partitions <= 0:
+        raise ValueError("num_partitions must be positive")
+    h = jnp.asarray(codes).astype(jnp.uint32)
+    h = (h + jnp.uint32(salt & 0xFFFFFFFF)) * jnp.uint32(HASH_MULT)
+    h = h ^ (h >> jnp.uint32(16))
+    return (h % jnp.uint32(num_partitions)).astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class PartitionScheme:
+    """How a query's execution is split: hash ``var`` into ``num_partitions``."""
+
+    var: str
+    num_partitions: int
+    salt: int = 0
+
+    def shard_of(self, codes: np.ndarray) -> np.ndarray:
+        return hash_partition(codes, self.num_partitions, salt=self.salt)
+
+
+def choose_partition_var(steps: Sequence, order: Sequence[str]) -> str:
+    """Default partition key: the variable of the costliest estimated step.
+
+    Partitioning on a step's eliminated variable shards that step and
+    everything downstream of it in the message-flow DAG, so the planner
+    aims the split at the estimated bottleneck.  Ties break toward the
+    earlier step (more downstream work sharded); a step-less plan (single
+    variable) falls back to the root.
+    """
+    best = None
+    for s in steps:
+        if best is None or s.product_entries > best.product_entries:
+            best = s
+    if best is not None:
+        return best.var
+    if not order:
+        raise ValueError("cannot choose a partition variable: empty order")
+    return order[-1]
+
+
+def partition_encoded(enc: EncodedQuery,
+                      scheme: PartitionScheme) -> List[EncodedQuery]:
+    """Split an encoded query into per-shard encoded queries.
+
+    Occurrences containing the partition variable are masked to the
+    shard's hash slice (a copy of the surviving rows); occurrences without
+    it share the original arrays — replication is by reference, never a
+    data copy.  Domains are shared globally so codes (and therefore level
+    structure and decode) agree across shards.
+    """
+    if scheme.var not in enc.domains:
+        raise ValueError(
+            f"partition variable {scheme.var!r} is not a query variable "
+            f"(have: {sorted(enc.domains)})")
+    occ_pids = [scheme.shard_of(cols[scheme.var]) if scheme.var in cols
+                else None for cols in enc.encoded_tables]
+    out: List[EncodedQuery] = []
+    for s in range(scheme.num_partitions):
+        tabs = []
+        for cols, pids in zip(enc.encoded_tables, occ_pids):
+            if pids is None:
+                tabs.append(cols)                    # replicated by reference
+            else:
+                m = pids == s
+                tabs.append({v: a[m] for v, a in cols.items()})
+        out.append(EncodedQuery(enc.query, enc.domains, tabs))
+    return out
+
+
+def partition_counts(enc: EncodedQuery, scheme: PartitionScheme) -> np.ndarray:
+    """Rows per shard across the partitioned occurrences (balance probe).
+
+    The numpy view of :func:`partition_histogram`; benchmarks and the
+    executor's observability use it to report hash balance under skew.
+    """
+    counts = np.zeros(scheme.num_partitions, INT)
+    for cols in enc.encoded_tables:
+        if scheme.var in cols:
+            counts += np.bincount(scheme.shard_of(cols[scheme.var]),
+                                  minlength=scheme.num_partitions)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# Device-parallel primitives (shard_map over a mesh axis).
+# ---------------------------------------------------------------------------
+
+def partition_histogram(mesh, axis: str, codes, num_partitions: int,
+                        *, salt: int = 0):
+    """Per-partition row counts of a code column, device-parallel.
+
+    Hash on device, then histogram the partition ids with the shared
+    sharded GROUP-BY-count kernel.  Matches
+    ``np.bincount(hash_partition(codes, k))`` exactly.
+    """
+    return sharded_potential_counts(
+        mesh, axis, hash_partition_device(codes, num_partitions, salt=salt),
+        num_partitions)
+
+
+def sharded_potential_counts(mesh, axis: str, codes, num_codes: int):
+    """GROUP BY count of dense codes, sharded over ``axis`` + psum.
+
+    (Absorbed from the retired ``dist/gj_parallel.py``.)  The quantitative-
+    learning histogram of one encoded column, computed device-parallel;
+    padding rows get code ``num_codes`` — a dead slot sliced off at the
+    end — so uneven shard sizes never perturb the histogram.
+    """
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    ndev = mesh.shape[axis]
+    n = codes.shape[0]
+    n_pad = -(-max(n, 1) // ndev) * ndev
+    padded = jnp.full((n_pad,), num_codes, jnp.int32).at[:n].set(
+        jnp.asarray(codes, jnp.int32))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=P(axis), out_specs=P())
+    def _count(local):
+        hist = jnp.zeros((num_codes + 1,), jnp.int64).at[local].add(1)
+        return jax.lax.psum(hist, axis)
+
+    return _count(padded)[:num_codes]
+
+
+# ---------------------------------------------------------------------------
+# Parallel desummarization (host threads; numpy releases are best-effort).
+# ---------------------------------------------------------------------------
+
+def parallel_desummarize(
+    summary: Union[GFJS, ShardedGFJS], num_shards: int, *,
+    decode: bool = False
+) -> Dict[str, np.ndarray]:
+    """Desummarize via concurrent workers; results concatenate in order.
+
+    * :class:`GFJS` — range-sharded: run boundaries are prefix sums, so
+      each worker expands its own contiguous row slice
+      (``desummarize_range``), the absorbed ``host_parallel_desummarize``
+      path of the retired ``dist/gj_parallel.py``;
+    * :class:`ShardedGFJS` — one worker per hash shard (the shards are
+      already independent summaries), output in shard order, equal to
+      :func:`repro.core.gfjs.desummarize` on the same object.
+    """
+    if isinstance(summary, ShardedGFJS):
+        workers = max(1, min(num_shards, len(summary.shards)))
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            parts = list(ex.map(
+                lambda s: desummarize(s, decode=decode), summary.shards))
+        return {v: np.concatenate([p[v] for p in parts])
+                for v in summary.column_order}
+    total = summary.join_size
+    num_shards = max(1, min(num_shards, max(total, 1)))
+    step = -(-max(total, 1) // num_shards)
+    ranges = [(lo, min(lo + step, total)) for lo in range(0, total, step)]
+    if not ranges:
+        return desummarize_range(summary, 0, 0, decode=decode)
+    with ThreadPoolExecutor(max_workers=num_shards) as ex:
+        parts = list(ex.map(
+            lambda r: desummarize_range(summary, r[0], r[1], decode=decode),
+            ranges))
+    return {v: np.concatenate([p[v] for p in parts])
+            for v in summary.column_order}

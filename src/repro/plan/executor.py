@@ -12,13 +12,15 @@ actually been measured so far.
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Iterator, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.elimination import Generator, build_generator
-from repro.core.gfjs import (GFJS, desummarize, desummarize_range,
-                             generate_gfjs, stream_desummarize)
+from repro.core.gfjs import (GFJS, ShardedGFJS, desummarize,
+                             desummarize_range, generate_gfjs,
+                             stream_desummarize)
 from repro.plan.ir import LogicalPlan, PhysicalPlan
 from repro.plan.search import plan_query
 from repro.plan.stats import QueryStats
@@ -36,7 +38,9 @@ class Executor:
                  planner: str = "cost",
                  plan: Optional[PhysicalPlan] = None,
                  record_trace: bool = False,
-                 generation_backend: Optional[str] = None) -> None:
+                 generation_backend: Optional[str] = None,
+                 partitions: Optional[int] = None,
+                 partition_var: Optional[str] = None) -> None:
         self.catalog = catalog
         self.query = query
         self.elimination_order = elimination_order
@@ -46,18 +50,42 @@ class Executor:
         # pins plan.backends["summarize"]: "numpy" (dynamic-shape oracle) or
         # "jax" (device-resident generate_gfjs_jax); None = environment pick
         self.generation_backend = generation_backend
+        # hash-partitioned execution (repro/dist/partition.py): > 1 makes
+        # summarize() produce a ShardedGFJS; the trace/incremental path is
+        # unsupported there (refresh falls back to rebuild), so combining
+        # them is refused up front — a silent no-trace run would surface
+        # only as a misleading capture_state error much later
+        self.partitions = partitions
+        self.partition_var = partition_var
+        if record_trace and (
+                (partitions is not None and partitions > 1)
+                or (plan is not None and plan.partitions > 1)):
+            raise ValueError(
+                "record_trace is unsupported under a partitioned plan: "
+                "splice-based incremental refresh does not understand "
+                "shard structure (partitioned summaries rebuild on append)")
         self.timings: Dict[str, float] = {}
         self.enc: Optional[EncodedQuery] = None
         self.logical: Optional[LogicalPlan] = None
         self.plan: Optional[PhysicalPlan] = plan
         self._forced_plan = plan is not None
         self.generator: Optional[Generator] = None
+        # partitioned runs have no monolithic generator to memoize, so the
+        # merged summary itself is cached (cleared with the other phase
+        # products on build_model re-entry) — join_size()/aggregate()/
+        # explain() after run() must not pay the k-shard build again
+        self._sharded: Optional[ShardedGFJS] = None
         # per-level (src, cidx) gather indices from the last summarize —
         # captured under record_trace for incremental refresh splicing
         self.expansion_cache = None
         self.refresh_report: Dict[str, float] = {}
         # content versions of the tables actually encoded by build_model
         self.source_versions: Optional[Dict[str, str]] = None
+        # plan feedback: measured per-step product sizes and wall times
+        # from the last generator build (summed over shards when
+        # partitioned); explain() renders them next to the estimates
+        self.step_actuals: Dict[str, float] = {}
+        self.step_seconds: Dict[str, float] = {}
 
     # -- phases ------------------------------------------------------------
     def build_model(self) -> "Executor":
@@ -85,7 +113,10 @@ class Executor:
         self.enc = None
         self.logical = None
         self.generator = None
+        self._sharded = None
         self.expansion_cache = None
+        self.step_actuals = {}
+        self.step_seconds = {}
         if not self._forced_plan:
             self.plan = None
         self.timings = {}
@@ -101,12 +132,16 @@ class Executor:
             # pre-compiled plan: every choice is already pinned, so skip
             # the statistics pass (degree-vector bincounts) and the search
             # entirely — build only the potentials the generator needs and
-            # hand them to the shared logical-plan constructor
+            # hand them to the shared logical-plan constructor.  Under a
+            # partitioned plan even those are skipped: each shard derives
+            # its own potentials from the shard slice, so monolithic
+            # factors would be built and never read.
             from repro.core.potentials import Factor
             from repro.plan.search import build_logical_plan
             sizes = self.enc.domain_sizes()
-            factors = [Factor.from_columns(cols, sizes)
-                       for cols in self.enc.encoded_tables]
+            factors = [] if self.plan.partitions > 1 else \
+                [Factor.from_columns(cols, sizes)
+                 for cols in self.enc.encoded_tables]
             self.logical = build_logical_plan(
                 self.enc, early_projection=self.plan.early_projection,
                 stats=QueryStats(sizes, factors, []))
@@ -116,7 +151,9 @@ class Executor:
                 elimination_order=self.elimination_order,
                 early_projection=self.early_projection,
                 planner=self.planner,
-                generation_backend=self.generation_backend)
+                generation_backend=self.generation_backend,
+                partitions=self.partitions,
+                partition_var=self.partition_var)
         self.timings["plan"] = time.perf_counter() - t0
         return self.plan
 
@@ -127,13 +164,21 @@ class Executor:
             self.enc,
             elimination_order=list(plan.order),
             early_projection=plan.early_projection,
-            factors=list(self.logical.stats.factors),
+            # a partitioned pre-compiled plan carries no monolithic stats
+            # factors; None lets build_generator derive its own
+            factors=list(self.logical.stats.factors) or None,
             record_trace=self.record_trace,
         )
+        self.step_actuals = {v: float(n) for v, n
+                             in self.generator.step_products.items()}
+        self.step_seconds = dict(self.generator.step_seconds)
         self.timings["build_generator"] = time.perf_counter() - t0
         return self
 
-    def summarize(self) -> GFJS:
+    def summarize(self) -> Union[GFJS, ShardedGFJS]:
+        plan = self.build_plan()
+        if plan.partitions > 1:
+            return self._summarize_partitioned(plan)
         if self.generator is None:
             self.build_generator()
         t0 = time.perf_counter()
@@ -153,7 +198,68 @@ class Executor:
         self.timings["summarize"] = time.perf_counter() - t0
         return gfjs
 
-    def run(self) -> GFJS:
+    def _summarize_partitioned(self, plan: PhysicalPlan) -> ShardedGFJS:
+        """Hash-partitioned build: independent shard pipelines, merged view.
+
+        Each shard gets its own generator + GFJS over the shard's slice of
+        the partitioned potentials (replicated potentials are shared by
+        reference); shards run concurrently — with the jax generation
+        backend each shard's device work overlaps, on numpy the win is the
+        sharded (smaller) per-step products.  ``record_trace`` is ignored:
+        the splice-based incremental refresher does not understand shard
+        structure, so partitioned summaries fall back to rebuild on
+        appends (the service handles that transparently).
+
+        Per-step actuals are *summed* over shards (the shards partition
+        the monolithic product exactly), per-step seconds take the max
+        (the critical path of a device-parallel deployment).
+        """
+        if self._sharded is not None:
+            return self._sharded
+        from repro.dist.partition import PartitionScheme, partition_encoded
+        t0 = time.perf_counter()
+        scheme = PartitionScheme(plan.partition_var, plan.partitions)
+        shard_encs = partition_encoded(self.enc, scheme)
+        self.timings["partition"] = time.perf_counter() - t0
+
+        backend = plan.backends.get("summarize", "numpy")
+        order = list(plan.order)
+
+        def run_shard(enc_s):
+            gen = build_generator(enc_s, elimination_order=order,
+                                  early_projection=plan.early_projection)
+            if backend == "jax":
+                from repro.core.engine_jax import generate_gfjs_jax
+                gfjs = generate_gfjs_jax(gen, enc_s.domains)
+            else:
+                gfjs = generate_gfjs(gen, enc_s.domains)
+            return gen, gfjs
+
+        t1 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=plan.partitions) as pool:
+            results = list(pool.map(run_shard, shard_encs))
+        gens = [g for g, _ in results]
+        shards = [s for _, s in results]
+        self.step_actuals = {}
+        self.step_seconds = {}
+        for g in gens:
+            for v, n in g.step_products.items():
+                self.step_actuals[v] = self.step_actuals.get(v, 0.0) + float(n)
+            for v, dt in g.step_seconds.items():
+                self.step_seconds[v] = max(self.step_seconds.get(v, 0.0), dt)
+        sharded = ShardedGFJS(
+            shards=shards,
+            column_order=list(shards[0].column_order),
+            join_size=int(sum(s.join_size for s in shards)),
+            domains=self.enc.domains,
+            partition_var=scheme.var,
+            salt=scheme.salt,
+        )
+        self.timings["summarize"] = time.perf_counter() - t1
+        self._sharded = sharded
+        return sharded
+
+    def run(self) -> Union[GFJS, ShardedGFJS]:
         return self.summarize()
 
     # -- incremental refresh ----------------------------------------------
@@ -191,20 +297,29 @@ class Executor:
         return new_state
 
     # -- plan-directed materialization ------------------------------------
-    def desummarize(self, gfjs: GFJS, *, decode: bool = True
-                    ) -> Dict[str, np.ndarray]:
-        """Full expansion on the plan's backend."""
+    def desummarize(self, gfjs: Union[GFJS, ShardedGFJS], *,
+                    decode: bool = True) -> Dict[str, np.ndarray]:
+        """Full expansion on the plan's backend.
+
+        Sharded summaries expand shard by shard (each through the pinned
+        backend) and concatenate in shard order.
+        """
         t0 = time.perf_counter()
         backend = (self.plan.backends.get("desummarize", "numpy")
                    if self.plan is not None else "numpy")
-        if backend == "jax":
+        if backend == "jax" and isinstance(gfjs, ShardedGFJS):
+            parts = [_desummarize_jax(s, decode=decode) for s in gfjs.shards]
+            out = {v: np.concatenate([p[v] for p in parts])
+                   for v in gfjs.column_order}
+        elif backend == "jax":
             out = _desummarize_jax(gfjs, decode=decode)
         else:
-            out = desummarize(gfjs, decode=decode)
+            out = desummarize(gfjs, decode=decode)  # dispatches on shape
         self.timings["desummarize"] = time.perf_counter() - t0
         return out
 
-    def materialize(self, gfjs: GFJS, *, decode: bool = True,
+    def materialize(self, gfjs: Union[GFJS, ShardedGFJS], *,
+                    decode: bool = True,
                     chunk_rows: int = 1 << 20
                     ) -> Union[Dict[str, np.ndarray],
                                Iterator[Dict[str, np.ndarray]]]:
@@ -226,7 +341,7 @@ class Executor:
     # -- observability -----------------------------------------------------
     def explain(self) -> str:
         plan = self.build_plan()
-        return plan.explain(timings=self.timings)
+        return plan.explain(timings=self.timings, actuals=self.step_actuals)
 
 
 _I32_MAX = (1 << 31) - 1

@@ -65,6 +65,10 @@ class PhysicalPlan:
     alternatives: Tuple[OrderCandidate, ...] = ()
     planner: str = "cost"
     search_seconds: float = 0.0
+    # hash-partitioned execution (repro/dist/partition.py): split into
+    # ``partitions`` shards on hash(partition_var); 1 = monolithic
+    partitions: int = 1
+    partition_var: Optional[str] = None
 
     # -- delta support -----------------------------------------------------
     def dirty_steps(self, table: str) -> Tuple[str, ...]:
@@ -102,15 +106,24 @@ class PhysicalPlan:
             "backends": dict(sorted(self.backends.items())),
             "materialize": self.materialize,
         }
+        if self.partitions > 1:
+            # only folded in when actually partitioned, so monolithic plans
+            # keep their historical signatures (and spilled cache entries)
+            canon["partitions"] = int(self.partitions)
+            canon["partition_var"] = self.partition_var
         return hashlib.sha256(
             json.dumps(canon, separators=(",", ":")).encode()).hexdigest()[:16]
 
     # -- rendering ---------------------------------------------------------
-    def explain(self, timings: Optional[Dict[str, float]] = None) -> str:
+    def explain(self, timings: Optional[Dict[str, float]] = None,
+                actuals: Optional[Dict[str, float]] = None) -> str:
         """Human-readable plan: order, per-step estimates, backends.
 
         Pass the executor's ``timings`` to annotate phases with measured
-        wall time next to the estimates.
+        wall time next to the estimates, and its ``step_actuals``
+        (var -> measured product entries) to render estimate-vs-actual
+        drift per step — the honest-numbers half of the plan-feedback
+        loop (no re-planning yet).
         """
         lines = [
             f"PhysicalPlan {self.query_name!r}  "
@@ -125,6 +138,9 @@ class PhysicalPlan:
             f"  est cost          : {self.est_cost:.3g} product entries"
             f"   (search {self.search_seconds * 1e3:.2f}ms)",
         ]
+        if self.partitions > 1:
+            lines.insert(5, f"  partitions        : {self.partitions} "
+                            f"by hash({self.partition_var})")
         if self.steps:
             lines.append("  steps:")
             for s in self.steps:
@@ -135,6 +151,11 @@ class PhysicalPlan:
                     f"  sep=({sep})  est_message={s.message_entries:.3g}")
                 if s.tables:
                     line += f"  tables=({','.join(s.tables)})"
+                if actuals and s.var in actuals:
+                    act = float(actuals[s.var])
+                    drift = (act / s.product_entries
+                             if s.product_entries > 0.0 else float("inf"))
+                    line += f"  actual={act:.3g} ({drift:.2f}x est)"
                 lines.append(line)
         if self.alternatives:
             lines.append("  candidates:")

@@ -125,7 +125,9 @@ def plan_query(enc: EncodedQuery, *,
                planner: str = "cost",
                beam_width: int = 4,
                stats: Optional[QueryStats] = None,
-               generation_backend: Optional[str] = None
+               generation_backend: Optional[str] = None,
+               partitions: Optional[int] = None,
+               partition_var: Optional[str] = None
                ) -> Tuple[LogicalPlan, PhysicalPlan]:
     """Logical + physical plan for an encoded query.
 
@@ -136,10 +138,22 @@ def plan_query(enc: EncodedQuery, *,
     dynamic-shape oracle — or "jax", the device-resident frontier) instead
     of the environment default; per-query pinning because small or
     irregular generators favor numpy even when an accelerator is present.
+    ``partitions`` > 1 pins hash-partitioned execution
+    (repro/dist/partition.py): the executor splits the encoded potentials
+    into that many shards on ``partition_var`` (default: the eliminated
+    variable of the costliest estimated step) and runs the shards
+    independently, producing a ``ShardedGFJS``.
     """
     if generation_backend not in (None, "numpy", "jax"):
         raise ValueError(
             f"unknown generation backend {generation_backend!r}")
+    partitions = 1 if partitions is None else int(partitions)
+    if partitions < 1:
+        raise ValueError(f"partitions must be >= 1, got {partitions}")
+    if partitions == 1 and partition_var is not None:
+        raise ValueError(
+            f"partition_var={partition_var!r} requires partitions > 1 "
+            "(a monolithic plan would silently ignore it)")
     t0 = time.perf_counter()
     logical = build_logical_plan(enc, early_projection=early_projection,
                                  stats=stats)
@@ -181,6 +195,15 @@ def plan_query(enc: EncodedQuery, *,
     backends = _select_backends()
     if generation_backend is not None:
         backends["summarize"] = generation_backend
+    if partitions > 1:
+        if partition_var is None:
+            # jax-free import: dist.partition keeps its device imports lazy
+            from repro.dist.partition import choose_partition_var
+            partition_var = choose_partition_var(steps, chosen.order)
+        elif partition_var not in graph.variables:
+            raise ValueError(
+                f"partition variable {partition_var!r} is not a query "
+                f"variable (have: {sorted(graph.variables)})")
     physical = PhysicalPlan(
         query_name=query.name,
         order=chosen.order,
@@ -193,5 +216,7 @@ def plan_query(enc: EncodedQuery, *,
         alternatives=tuple(sorted(candidates, key=lambda c: c.cost)),
         planner="forced" if elimination_order is not None else planner,
         search_seconds=time.perf_counter() - t0,
+        partitions=partitions,
+        partition_var=partition_var,
     )
     return logical, physical

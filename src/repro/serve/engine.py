@@ -52,6 +52,13 @@ class RelationalFeatureProvider:
     `JoinService.append`, the next call re-pulls the frame, which the
     service satisfies through the incremental refresher under the same
     pre-compiled plan — never a cold rebuild, never a re-plan.
+
+    The provider is oblivious to summary *shape*: a service configured
+    with ``partitions > 1`` hands back shard-merging frames
+    (`ShardedSummaryFrame`) whose `group_by` matches the monolithic
+    output exactly, so nothing here knows whether the plan was
+    partitioned (appends then rebuild instead of splice-refresh — a
+    provenance difference, not a value difference).
     """
 
     def __init__(self, service, query, *, key_var: str,

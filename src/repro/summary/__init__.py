@@ -17,13 +17,14 @@ O(|Q|) desummarization the paper's storage scenario budgets for.
   elimination steps, splice the result into the retained summary.
 """
 
-from repro.summary.algebra import SummaryFrame
+from repro.summary.algebra import ShardedSummaryFrame, SummaryFrame
 from repro.summary.cache import CacheStats, SummaryCache
 from repro.summary.incremental import (DeltaError, IncrementalState,
                                        StaleDeltaError, capture_state,
                                        refresh_state)
 from repro.summary.service import JoinService, ServiceReply
 
-__all__ = ["SummaryFrame", "SummaryCache", "CacheStats", "JoinService",
+__all__ = ["SummaryFrame", "ShardedSummaryFrame", "SummaryCache",
+           "CacheStats", "JoinService",
            "ServiceReply", "DeltaError", "StaleDeltaError",
            "IncrementalState", "capture_state", "refresh_state"]

@@ -29,7 +29,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Uni
 import numpy as np
 
 from repro.core.gfjs import GFJS
-from repro.core.potentials import INT, _rank_rows
+from repro.core.potentials import INT, _rank_rows, group_ranks
 
 Predicate = Union[Callable[[np.ndarray], np.ndarray], int, float, str,
                   Sequence, set, frozenset]
@@ -68,7 +68,15 @@ class SummaryFrame:
 
     # -- constructors ------------------------------------------------------
     @staticmethod
-    def of(gfjs: GFJS) -> "SummaryFrame":
+    def of(gfjs) -> "SummaryFrame":
+        """Frame over a summary; a ShardedGFJS gets the shard-merging twin.
+
+        Dispatching here keeps every caller (service, cache hits, serve
+        provider, ``GraphicalJoin.aggregate``) oblivious to sharding.
+        """
+        from repro.core.gfjs import ShardedGFJS
+        if isinstance(gfjs, ShardedGFJS):
+            return ShardedSummaryFrame.of(gfjs)
         return SummaryFrame(gfjs, [lvl.freq.astype(INT) for lvl in gfjs.levels])
 
     # -- structure helpers -------------------------------------------------
@@ -280,13 +288,7 @@ class SummaryFrame:
             # (DESIGN.md §14); host keeps only the O(n) boundary scan
             order, seg, starts, ngroups = engine_jax.group_runs_device(ranks)
         else:
-            order = np.argsort(ranks, kind="stable")
-            sranks = ranks[order]
-            new = np.ones(nlive, dtype=bool)
-            new[1:] = sranks[1:] != sranks[:-1]
-            seg = (np.cumsum(new) - 1).astype(np.int32)
-            starts = np.flatnonzero(new)
-            ngroups = len(starts)
+            order, seg, starts, ngroups = group_ranks(ranks)
         w_s = w[order]
         sorted_codes = key_codes[order]
 
@@ -351,3 +353,172 @@ class SummaryFrame:
                 w[live].astype(INT)))
         return GFJS(levels, list(self.gfjs.column_order), self.count(),
                     self.gfjs.domains)
+
+
+# internal per-shard column names for the group_by merge; NUL bytes cannot
+# collide with user aggregate names (they pass through **kwargs unharmed)
+_MERGE_SUM = "\x00sum:"
+_MERGE_CNT = "\x00cnt"
+
+
+@dataclass
+class ShardedSummaryFrame:
+    """Shard-aware twin of :class:`SummaryFrame` over a ``ShardedGFJS``.
+
+    Holds one :class:`SummaryFrame` per hash shard and merges at the
+    *aggregate* level — never by concatenating summaries:
+
+    * ``count`` / ``sum`` / ``mean`` distribute (sums of shard partials;
+      mean is merged-sum over merged-count);
+    * ``min`` / ``max`` / ``distinct`` reduce over shard results;
+    * ``filter`` pushes the predicate into every shard frame;
+    * ``group_by`` computes per-shard grouped partials (means decomposed
+      into sum + count) and merges groups by key — shard results are
+      key-sorted, and the merge re-sorts on dictionary codes, so the
+      output ordering matches the monolithic frame exactly.
+
+    Integer aggregates merge to *exactly* the monolithic numbers; float
+    SUM/MEAN may differ in the last ulp (shard partial sums reassociate
+    the additions).
+    """
+
+    sharded: "object"               # repro.core.gfjs.ShardedGFJS
+    frames: List[SummaryFrame]
+
+    @staticmethod
+    def of(sharded) -> "ShardedSummaryFrame":
+        return ShardedSummaryFrame(
+            sharded, [SummaryFrame.of(s) for s in sharded.shards])
+
+    # the summary backing this frame, under the same attribute name
+    # SummaryFrame uses (provenance-reading callers stay oblivious)
+    @property
+    def gfjs(self):
+        return self.sharded
+
+    def level_of(self, var: str) -> int:
+        return self.frames[0].level_of(var)   # identical structure per shard
+
+    # -- filtering ---------------------------------------------------------
+    def filter(self, preds: Optional[Mapping[str, Predicate]] = None,
+               **kw: Predicate) -> "ShardedSummaryFrame":
+        return ShardedSummaryFrame(
+            self.sharded, [f.filter(preds, **kw) for f in self.frames])
+
+    # -- scalar aggregates -------------------------------------------------
+    def count(self) -> int:
+        c = getattr(self, "_count", None)
+        if c is None:
+            c = int(sum(f.count() for f in self.frames))
+            self._count = c
+        return c
+
+    def sum(self, var: str):
+        return sum(f.sum(var) for f in self.frames)
+
+    def mean(self, var: str) -> Optional[float]:
+        c = self.count()
+        return None if c == 0 else self.sum(var) / c
+
+    def min(self, var: str):
+        vals = [v for v in (f.min(var) for f in self.frames) if v is not None]
+        return min(vals) if vals else None
+
+    def max(self, var: str):
+        vals = [v for v in (f.max(var) for f in self.frames) if v is not None]
+        return max(vals) if vals else None
+
+    def distinct(self, var: str) -> np.ndarray:
+        return np.unique(np.concatenate(
+            [f.distinct(var) for f in self.frames]))
+
+    def count_distinct(self, var: str) -> int:
+        return int(len(self.distinct(var)))
+
+    # -- grouped aggregates ------------------------------------------------
+    def group_by(self, keys: Union[str, Sequence[str]],
+                 **aggs: AggSpec) -> Dict[str, np.ndarray]:
+        """GROUP BY with shard merge; same contract as the monolithic frame."""
+        if isinstance(keys, str):
+            keys = [keys]
+        if not keys:
+            raise ValueError("group_by needs at least one key variable")
+        if not aggs:
+            aggs = {"count": "count"}
+        specs: Dict[str, Tuple[str, Optional[str]]] = {}
+        for name, spec in aggs.items():
+            if spec == "count":
+                specs[name] = ("count", None)
+            else:
+                op, var = spec  # type: ignore[misc]
+                if op not in ("sum", "mean", "min", "max", "count"):
+                    raise ValueError(f"unknown aggregate op {op!r}")
+                specs[name] = (op, var)
+
+        # shard-level request: a mean cannot be merged, its sum and count
+        # can — decompose, merge, divide
+        shard_aggs: Dict[str, AggSpec] = {}
+        need_cnt = any(op == "mean" for op, _ in specs.values())
+        for name, (op, var) in specs.items():
+            if op == "mean":
+                shard_aggs[_MERGE_SUM + name] = ("sum", var)
+            else:
+                shard_aggs[name] = (op, var)
+        if need_cnt:
+            shard_aggs[_MERGE_CNT] = "count"
+        tabs = [f.group_by(list(keys), **shard_aggs) for f in self.frames]
+
+        def col(name: str) -> np.ndarray:
+            return np.concatenate([t[name] for t in tabs])
+
+        key_vals = {k: col(k) for k in keys}
+        n = len(key_vals[keys[0]])
+        out: Dict[str, np.ndarray] = {}
+        if n == 0:
+            out.update(key_vals)
+            for name, (op, _) in specs.items():
+                out[name] = (np.zeros(0, np.float64) if op == "mean"
+                             else col(name))
+            return out
+
+        # group on re-encoded dictionary codes: code order == raw-value
+        # order, so the merged ordering equals the monolithic frame's
+        doms = self.sharded.domains
+        codes = np.stack([doms[k].encode(key_vals[k]) for k in keys], axis=1)
+        sizes = [doms[k].size for k in keys]
+        ranks, _ = _rank_rows(codes, sizes)
+        order, seg, starts, ngroups = group_ranks(ranks)
+        for k in keys:
+            out[k] = key_vals[k][order][starts]
+
+        cnt: Optional[np.ndarray] = None
+        if need_cnt:
+            c = col(_MERGE_CNT)[order]
+            cnt = np.zeros(ngroups, c.dtype)
+            np.add.at(cnt, seg, c)
+        for name, (op, _) in specs.items():
+            if op == "mean":
+                s = col(_MERGE_SUM + name)[order]
+                acc = np.zeros(ngroups, s.dtype)
+                np.add.at(acc, seg, s)
+                out[name] = acc / cnt
+            elif op in ("count", "sum"):
+                c = col(name)[order]
+                acc = np.zeros(ngroups, c.dtype)
+                np.add.at(acc, seg, c)
+                out[name] = acc
+            else:  # min / max: reduce from a representative per group
+                c = col(name)[order]
+                acc = c[starts].copy()
+                (np.minimum if op == "min" else np.maximum).at(acc, seg, c)
+                out[name] = acc
+        return out
+
+    # -- interop -----------------------------------------------------------
+    def to_gfjs(self):
+        """Materialize the filtered frame as a standalone ShardedGFJS."""
+        from repro.core.gfjs import ShardedGFJS
+        shards = [f.to_gfjs() for f in self.frames]
+        return ShardedGFJS(shards, list(self.sharded.column_order),
+                           self.count(), self.sharded.domains,
+                           self.sharded.partition_var, self.sharded.salt)

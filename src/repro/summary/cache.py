@@ -7,7 +7,11 @@ that a service-grade component:
 * keys are (canonical query fingerprint, content versions of every table
   occurrence, physical-plan signature) — replacing a base table invalidates
   exactly the summaries built on it, and summaries built under different
-  elimination orders never collide;
+  elimination orders never collide; partitioned plans fold their shard
+  scheme into the signature, so a ShardedGFJS and a monolithic summary of
+  the same query are distinct entries that hit, spill, and reload alike
+  (the storage container round-trips both, byte budgets read
+  ``resident_nbytes()`` on either shape);
 * a byte budget bounds resident summaries, LRU order decides eviction;
 * evictions optionally *spill* to disk through the GFJS container format
   (repro/core/storage.py), so a later request pays a load, not a re-join;

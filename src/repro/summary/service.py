@@ -87,12 +87,18 @@ class JoinService:
                  incremental: bool = True,
                  max_states: int = 16,
                  max_state_bytes: int = 512 << 20,
-                 max_pending_deltas: int = 64) -> None:
+                 max_pending_deltas: int = 64,
+                 partitions: int = 1) -> None:
         self.catalog = catalog
         self.cache = cache if cache is not None else SummaryCache(
             byte_budget=byte_budget, spill_dir=spill_dir,
             ttl_seconds=ttl_seconds)
         self.planner = planner
+        # > 1: plans pin hash-partitioned execution; summaries are
+        # ShardedGFJS, cache keys fold the shard scheme in through the plan
+        # signature, and appends fall back to rebuild (no splice-refresh of
+        # sharded summaries) — the aggregate API is shape-oblivious
+        self.partitions = int(partitions)
         self.max_plans = int(max_plans)
         self.incremental = bool(incremental)
         self.max_states = int(max_states)
@@ -139,7 +145,8 @@ class JoinService:
             if hit is not None:
                 self._plans.move_to_end(pkey)
                 return hit[0]
-        gj = GraphicalJoin(self.catalog, query, planner=self.planner)
+        gj = GraphicalJoin(self.catalog, query, planner=self.planner,
+                           partitions=self.partitions)
         plan = gj.plan()
         with self._lock:
             self._remember_plan(
@@ -164,8 +171,11 @@ class JoinService:
             else:
                 # plan inline and keep the GraphicalJoin: a cache miss below
                 # reuses its encoding/potentials instead of re-planning
+                # no trace under partitioned plans: refresh is rebuild there
                 gj = GraphicalJoin(self.catalog, query, planner=self.planner,
-                                   record_trace=self.incremental)
+                                   record_trace=self.incremental
+                                   and self.partitions == 1,
+                                   partitions=self.partitions)
                 plan = gj.plan()
                 with self._lock:
                     self._remember_plan(
@@ -187,7 +197,8 @@ class JoinService:
             return refreshed
         if gj is None:
             gj = GraphicalJoin(self.catalog, query, plan=plan,
-                               record_trace=self.incremental)
+                               record_trace=self.incremental
+                               and plan.partitions == 1)
         gfjs = gj.run()
         # key on what the executor actually encoded: an append racing this
         # compute may have advanced the catalog past the entry snapshot,

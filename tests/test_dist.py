@@ -1,6 +1,11 @@
-"""Distributed tests on a fake 8-device CPU mesh (subprocess-isolated:
+"""Distributed tests on fake multi-device CPU meshes (subprocess-isolated:
 XLA fixes the device count at first jax init, so these run via a child
-python with XLA_FLAGS set — the main pytest process keeps 1 device)."""
+python with XLA_FLAGS set — the main pytest process keeps 1 device).
+
+The partition-layer tests force 4 (or 8) virtual devices and hold the
+hash-partitioned pipeline (repro/dist/partition.py + ShardedGFJS) to the
+monolithic numpy oracle; the training tests exercise the model-side DP/
+GSPMD paths."""
 
 import json
 import os
@@ -16,9 +21,9 @@ pytestmark = pytest.mark.slow
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_child(code: str) -> dict:
+def run_child(code: str, devices: int = 8) -> dict:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=900)
@@ -31,7 +36,7 @@ def test_sharded_potential_counts_match_single_device():
         import json
         import jax, jax.numpy as jnp, numpy as np
         from repro.launch.mesh import make_mesh
-        from repro.dist.gj_parallel import sharded_potential_counts
+        from repro.dist.partition import sharded_potential_counts
         mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         codes = jnp.asarray(rng.integers(0, 50, 8000), jnp.int32)
@@ -42,36 +47,85 @@ def test_sharded_potential_counts_match_single_device():
     assert res["ok"]
 
 
-def test_parallel_desummarize_matches_serial():
+def test_partition_histogram_matches_host_hash():
+    """Device-parallel partition histogram == numpy hash_partition counts
+    (the host/device hash twins must be bit-identical)."""
     res = run_child(textwrap.dedent("""
         import json
         import jax, jax.numpy as jnp, numpy as np
         from repro.launch.mesh import make_mesh
-        from repro.dist.gj_parallel import parallel_desummarize_codes
+        from repro.dist.partition import hash_partition, partition_histogram
         mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(1)
-        freqs = rng.integers(1, 9, 500)
-        bounds = jnp.asarray(np.cumsum(freqs), jnp.int32)
-        vals = jnp.asarray(rng.integers(0, 1000, 500), jnp.int32)
-        total = int(bounds[-1])
-        got = parallel_desummarize_codes(mesh, "data", vals, bounds, total)
-        want = np.repeat(np.asarray(vals), freqs)
-        print(json.dumps({"ok": bool((np.asarray(got) == want).all())}))
+        codes = rng.integers(0, 10_000, 8191).astype(np.int64)  # uneven pad
+        ok = True
+        for k in (2, 4, 7):
+            got = np.asarray(partition_histogram(
+                mesh, "data", jnp.asarray(codes, jnp.int32), k, salt=3))
+            want = np.bincount(hash_partition(codes, k, salt=3), minlength=k)
+            ok = ok and (got == want).all()
+        print(json.dumps({"ok": bool(ok)}))
     """))
     assert res["ok"]
 
 
-def test_host_parallel_desummarize_equals_full():
+def test_partitioned_pipeline_matches_oracle_on_virtual_devices():
+    """The tentpole acceptance gate: partitioned execution on 4 forced
+    virtual CPU devices — jax generation backend, shards built
+    device-parallel — produces a summary whose row count, desummarized
+    rows, and aggregates exactly equal the monolithic numpy oracle."""
+    res = run_child(textwrap.dedent("""
+        import json
+        import numpy as np
+        import jax
+        from repro.core.api import GraphicalJoin
+        from repro.relational.synth import lastfm_like
+        from repro.summary.algebra import SummaryFrame
+        assert jax.device_count() >= 4
+        cat, qs = lastfm_like(n_users=120, n_artists=90, artists_per_user=4,
+                              friends_per_user=3)
+        checks = []
+        for name in ("lastfm_A1", "lastfm_cyc"):
+            q = qs[name]
+            mono = GraphicalJoin(cat, q, generation_backend="numpy")
+            g0 = mono.run()
+            part = GraphicalJoin(cat, q, partitions=4,
+                                 generation_backend="jax")
+            g1 = part.run()
+            vs = sorted(q.variables)
+            def rows(gj, g):
+                r = gj.desummarize(g, decode=False)
+                m = np.stack([r[v] for v in vs], axis=1)
+                return m[np.lexsort(m.T[::-1])]
+            f0, f1 = SummaryFrame.of(g0), SummaryFrame.of(g1)
+            var = vs[0]
+            t0 = f0.group_by(vs[-1], n="count", s=("sum", var))
+            t1 = f1.group_by(vs[-1], n="count", s=("sum", var))
+            checks.append(bool(
+                g1.join_size == g0.join_size
+                and np.array_equal(rows(mono, g0), rows(part, g1))
+                and f1.count() == f0.count()
+                and f1.sum(var) == f0.sum(var)
+                and f1.min(var) == f0.min(var)
+                and f1.max(var) == f0.max(var)
+                and all(np.array_equal(np.asarray(t0[k]),
+                                       np.asarray(t1[k])) for k in t0)))
+        print(json.dumps({"ok": all(checks), "checks": checks}))
+    """), devices=4)
+    assert res["ok"], res
+
+
+def test_parallel_desummarize_equals_full():
     import numpy as np
     from repro.core.api import GraphicalJoin
-    from repro.dist.gj_parallel import host_parallel_desummarize
+    from repro.dist.partition import parallel_desummarize
     from repro.relational.synth import lastfm_like
     cat, qs = lastfm_like(n_users=100, n_artists=80, artists_per_user=4,
                           friends_per_user=3)
     gj = GraphicalJoin(cat, qs["lastfm_A1"])
     gfjs = gj.run()
     full = gj.desummarize(gfjs, decode=False)
-    par = host_parallel_desummarize(gfjs, 5)
+    par = parallel_desummarize(gfjs, 5)
     for v in gfjs.column_order:
         np.testing.assert_array_equal(full[v], par[v])
 
