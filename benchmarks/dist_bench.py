@@ -95,15 +95,20 @@ def bench_dist(partitions: int = 4, scale: float = 1.0) -> List[str]:
         shard_step = max(s.get(pvar, 0.0) for s in per_shard)
         step_scaling = mono_step / shard_step if shard_step > 0 else 0.0
         wall_scaling = mono_wall / part_wall if part_wall > 0 else 0.0
-        sizes = part_g.shard_sizes()
-        balance = (max(sizes) / (sum(sizes) / len(sizes))
-                   if sum(sizes) else 1.0)
+        # skew comes from the executor's shard report (the same per-shard
+        # matrix explain(analyze=True) renders) instead of being
+        # recomputed here — one measurement, every consumer
+        report = part_gj._executor.shard_report or {}
+        balance = report.get("skew", 1.0)
+        time_skew = report.get("time_skew", 1.0)
+        stragglers = len(report.get("stragglers", ()))
         lines.append(csv_line(
             f"dist/{name}_p{partitions}", part_wall * 1e6,
             f"step_scaling={step_scaling:.2f}x;"
             f"wall_scaling={wall_scaling:.2f}x;"
             f"partition_var={pvar};join_size={mono_g.join_size};"
-            f"shard_skew={balance:.2f};partitions={partitions}"))
+            f"shard_skew={balance:.2f};time_skew={time_skew:.2f};"
+            f"stragglers={stragglers};partitions={partitions}"))
     return lines
 
 

@@ -41,7 +41,19 @@ def main() -> None:
                     metavar="PATH",
                     help="where to write the dist-section JSON summary "
                          "('' disables)")
+    ap.add_argument("--trace", action="store_true",
+                    help="write a Chrome trace (BENCH_<section>.trace.json) "
+                         "per section, viewable at ui.perfetto.dev")
     args = ap.parse_args()
+
+    Tracer = None
+    if args.trace:
+        try:
+            from repro.obs.trace import Tracer
+        except ImportError as exc:
+            # obs export deps absent on this box: run untraced, say so
+            print(_skip_line("trace", exc), flush=True)
+            Tracer = None
 
     from benchmarks import tables
     from benchmarks.summary_bench import bench_summary
@@ -81,7 +93,19 @@ def main() -> None:
             if args.only and args.only != name:
                 continue
             try:
-                for line in fn(tmp):
+                if Tracer is not None:
+                    tracer = Tracer()
+                    # the root span makes the tracer ambient for the whole
+                    # section: every executor phase, elimination step,
+                    # shard, kernel, and cache op lands in the file
+                    with tracer.span(f"bench:{name}", cat="bench"):
+                        lines = list(fn(tmp))
+                    path = tracer.write_chrome_trace(
+                        f"BENCH_{name}.trace.json")
+                    lines.append(f"trace,{name},{path}")
+                else:
+                    lines = fn(tmp)
+                for line in lines:
                     print(line, flush=True)
             except (ImportError, RuntimeError, OSError) as exc:
                 # optional deps (zstandard/hypothesis) or accelerator

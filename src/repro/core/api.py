@@ -55,7 +55,9 @@ class GraphicalJoin:
     ``run()`` returns a :class:`~repro.core.gfjs.ShardedGFJS` whose shards
     were built independently (``partition_var`` overrides the planner's
     partition-key choice; incremental refresh is unsupported and falls
-    back to rebuild).
+    back to rebuild); ``tracer`` / ``metrics`` plug a
+    :class:`repro.obs.Tracer` / :class:`repro.obs.MetricsRegistry` into
+    every phase (off by default — see repro/obs and ``explain(analyze=True)``).
     """
 
     def __init__(
@@ -71,6 +73,8 @@ class GraphicalJoin:
         generation_backend: Optional[str] = None,
         partitions: Optional[int] = None,
         partition_var: Optional[str] = None,
+        tracer=None,
+        metrics=None,
     ) -> None:
         from repro.plan.executor import Executor
         self.catalog = catalog
@@ -85,6 +89,8 @@ class GraphicalJoin:
             generation_backend=generation_backend,
             partitions=partitions,
             partition_var=partition_var,
+            tracer=tracer,
+            metrics=metrics,
         )
 
     # -- executor state, exposed under the historical names ----------------
@@ -189,9 +195,14 @@ class GraphicalJoin:
         """
         return self._executor.refresh(state, deltas)
 
-    def explain(self) -> str:
-        """Render the plan, annotated with any timings measured so far."""
-        return self._executor.explain()
+    def explain(self, *, analyze: bool = False) -> str:
+        """Render the plan, annotated with any timings measured so far.
+
+        ``analyze=True`` is the full post-mortem: per-step measured
+        seconds (max and sum over shards), the per-shard breakdown, and
+        straggler flags — everything the run actually observed.
+        """
+        return self._executor.explain(analyze=analyze)
 
     def aggregate(self, op: str, var: Optional[str] = None, *,
                   by: Optional[Sequence[str]] = None,

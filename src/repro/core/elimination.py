@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.graph import QueryGraph, Triangulation, min_fill_order
 from repro.core.potentials import INT, Factor, _rank_rows
 from repro.core.potential_join import multiway_product
+from repro.obs.trace import span as _span
 from repro.relational.encoding import EncodedQuery
 
 
@@ -253,6 +254,7 @@ def build_generator(
     early_projection: bool = True,
     factors: Optional[List[Factor]] = None,
     record_trace: bool = False,
+    step_estimates: Optional[Dict[str, float]] = None,
 ) -> Generator:
     """Run Algorithm 2 over the (possibly cyclic) query graph.
 
@@ -263,6 +265,10 @@ def build_generator(
     ``record_trace`` keeps per-step provenance and messages on the returned
     generator (``Generator.trace``) so a later base-table append can re-run
     only the dirty steps (repro/summary/incremental.py).
+
+    ``step_estimates`` (var -> planner product-entry estimate) annotates
+    each step's trace span with est-vs-actual drift — the raw signal the
+    CostModel feedback loop consumes.  Purely observational.
     """
     query = enc.query
     sizes = enc.domain_sizes()
@@ -311,12 +317,19 @@ def build_generator(
         rest = [t for t in working if v not in t[2].vars]
         if not rel:  # pragma: no cover - connected graph invariant
             raise AssertionError(f"no factor contains variable {v}")
-        t_step = time.perf_counter()
-        obs: Dict[str, float] = {}
-        psi, parents, msg = eliminate_step(
-            [f for _, _, f in rel], v, order, out_vars, observe=obs)
-        step_seconds[v] = time.perf_counter() - t_step
-        step_products[v] = int(obs.get("product_entries", 0))
+        with _span(f"eliminate:{v}", cat="step", var=v) as sp:
+            t_step = time.perf_counter()
+            obs: Dict[str, float] = {}
+            psi, parents, msg = eliminate_step(
+                [f for _, _, f in rel], v, order, out_vars, observe=obs)
+            step_seconds[v] = time.perf_counter() - t_step
+            step_products[v] = int(obs.get("product_entries", 0))
+            sp.set(product=step_products[v], seconds=step_seconds[v])
+            if step_estimates is not None and v in step_estimates:
+                est = float(step_estimates[v])
+                sp.set(est=est,
+                       drift=(step_products[v] / est if est > 0.0
+                              else float("inf")))
         parents_of[v] = parents
         if psi is not None:
             psis[v] = psi

@@ -33,6 +33,8 @@ import jax.numpy as jnp  # noqa: E402  (after x64 flag)
 from repro.core.elimination import Generator, Psi  # noqa: E402
 from repro.core.gfjs import GFJS, LevelSummary, generate_gfjs  # noqa: E402
 from repro.core.potentials import INT, Factor, pack_keys  # noqa: E402
+from repro.obs.metrics import REGISTRY  # noqa: E402
+from repro.obs.trace import span as _span  # noqa: E402
 from repro.kernels import ops  # noqa: E402
 from repro.kernels import expand_fused as _expand_fused  # noqa: E402
 
@@ -278,21 +280,26 @@ def desummarize_jax(
     total = gfjs.join_size
     t_pad = ops.next_bucket(max(total, 1))
     for li, lvl in enumerate(gfjs.levels):
-        if any(lvl.key_cols[v].size and int(lvl.key_cols[v].max()) > I32_MAX
-               for v in lvl.vars):
-            # codes past the int32 kernel range (domains >= 2**31 values):
-            # numpy-expand this level instead of silently wrapping
-            for v in lvl.vars:
-                col = np.repeat(lvl.key_cols[v], lvl.freq)
-                out[v] = gfjs.domains[v].decode(col) if decode else col
-            continue
-        meta = ops.gfjs_expand_meta(gfjs, li, t_pad)
-        payloads = jnp.stack(
-            [jnp.asarray(lvl.key_cols[v], jnp.int32) for v in lvl.vars])
-        cols = np.asarray(ops.rle_expand_many(payloads, None, total,
-                                              interpret=interpret, meta=meta))
-        for k, v in enumerate(lvl.vars):
-            out[v] = gfjs.domains[v].decode(cols[k]) if decode else cols[k]
+        with _span(f"desummarize:level:{li}", cat="gen", backend="jax",
+                   device=True, runs=len(lvl.freq)):
+            if any(lvl.key_cols[v].size
+                   and int(lvl.key_cols[v].max()) > I32_MAX
+                   for v in lvl.vars):
+                # codes past the int32 kernel range (domains >= 2**31
+                # values): numpy-expand this level instead of wrapping
+                for v in lvl.vars:
+                    col = np.repeat(lvl.key_cols[v], lvl.freq)
+                    out[v] = gfjs.domains[v].decode(col) if decode else col
+                continue
+            meta = ops.gfjs_expand_meta(gfjs, li, t_pad)
+            payloads = jnp.stack(
+                [jnp.asarray(lvl.key_cols[v], jnp.int32) for v in lvl.vars])
+            cols = np.asarray(
+                ops.rle_expand_many(payloads, None, total,
+                                    interpret=interpret, meta=meta))
+            for k, v in enumerate(lvl.vars):
+                out[v] = gfjs.domains[v].decode(cols[k]) if decode \
+                    else cols[k]
     return {v: out[v] for v in gfjs.column_order}
 
 
@@ -506,7 +513,9 @@ def generate_gfjs_jax(
     cols: Dict[str, jax.Array] = {gen.root: jnp.asarray(root_p)}
     p_bucket = jnp.ones((n_pad,), jnp.int64)
 
-    for level in gen.levels:
+    runs_hist = REGISTRY.histogram("gfjs.runs_per_level", unit="runs")
+    runs_hist.observe(n)
+    for depth, level in enumerate(gen.levels):
         children = tuple(p.child for p in level)
         if n == 0:     # dead frontier: remaining levels are all empty
             levels_out.append(LevelSummary(
@@ -514,9 +523,14 @@ def generate_gfjs_jax(
                 np.zeros(0, INT)))
             for p in level:
                 cols[p.child] = jnp.zeros((0,), jnp.int32)
+            runs_hist.observe(0)
             continue
-        cols, p_bucket, freq, new_vars, n = expand_level_jax(
-            cols, p_bucket, level, n, interpret=interpret)
+        with _span(f"gfjs:level:{depth}", cat="gen", backend="jax",
+                   device=True, depth=depth) as sp:
+            cols, p_bucket, freq, new_vars, n = expand_level_jax(
+                cols, p_bucket, level, n, interpret=interpret)
+            sp.set(runs=n, vars=",".join(new_vars))
+        runs_hist.observe(n)
         levels_out.append(LevelSummary(
             new_vars,
             {v: np.asarray(cols[v][:n]).astype(INT) for v in new_vars},

@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.core.elimination import Generator, Psi
 from repro.core.potentials import INT, _rank_rows_joint
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import span as _span
 from repro.relational.encoding import Domain
 
 
@@ -239,9 +241,15 @@ def generate_gfjs(
     cols: Dict[str, np.ndarray] = {gen.root: gen.root_codes}
     p_bucket = np.ones(len(gen.root_codes), INT)
 
-    for level in gen.levels:
-        cols, p_bucket, freq, new_vars, cache = expand_level(
-            cols, p_bucket, level)
+    runs_hist = REGISTRY.histogram("gfjs.runs_per_level", unit="runs")
+    runs_hist.observe(len(gen.root_codes))
+    for depth, level in enumerate(gen.levels):
+        with _span(f"gfjs:level:{depth}", cat="gen", backend="numpy",
+                   depth=depth) as sp:
+            cols, p_bucket, freq, new_vars, cache = expand_level(
+                cols, p_bucket, level)
+            sp.set(runs=len(freq), vars=",".join(new_vars))
+        runs_hist.observe(len(freq))
         levels_out.append(LevelSummary(
             new_vars, {v: cols[v] for v in new_vars}, freq))
         if expansion_cache is not None:

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.gfjs import GFJS, ShardedGFJS, desummarize, desummarize_range
 from repro.core.potentials import INT
+from repro.obs.trace import span as _span
 from repro.relational.encoding import EncodedQuery
 
 # Knuth multiplicative constant (2^32 / phi); the hash must be identical
@@ -114,19 +115,21 @@ def partition_encoded(enc: EncodedQuery,
         raise ValueError(
             f"partition variable {scheme.var!r} is not a query variable "
             f"(have: {sorted(enc.domains)})")
-    occ_pids = [scheme.shard_of(cols[scheme.var]) if scheme.var in cols
-                else None for cols in enc.encoded_tables]
-    out: List[EncodedQuery] = []
-    for s in range(scheme.num_partitions):
-        tabs = []
-        for cols, pids in zip(enc.encoded_tables, occ_pids):
-            if pids is None:
-                tabs.append(cols)                    # replicated by reference
-            else:
-                m = pids == s
-                tabs.append({v: a[m] for v, a in cols.items()})
-        out.append(EncodedQuery(enc.query, enc.domains, tabs))
-    return out
+    with _span("dist:partition_encoded", cat="dist", var=scheme.var,
+               partitions=scheme.num_partitions):
+        occ_pids = [scheme.shard_of(cols[scheme.var]) if scheme.var in cols
+                    else None for cols in enc.encoded_tables]
+        out: List[EncodedQuery] = []
+        for s in range(scheme.num_partitions):
+            tabs = []
+            for cols, pids in zip(enc.encoded_tables, occ_pids):
+                if pids is None:
+                    tabs.append(cols)                # replicated by reference
+                else:
+                    m = pids == s
+                    tabs.append({v: a[m] for v, a in cols.items()})
+            out.append(EncodedQuery(enc.query, enc.domains, tabs))
+        return out
 
 
 def partition_counts(enc: EncodedQuery, scheme: PartitionScheme) -> np.ndarray:

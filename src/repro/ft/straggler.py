@@ -41,6 +41,39 @@ class StragglerEvent:
 
 
 @dataclass
+class ShardStraggler:
+    """One shard of a partitioned summarize that blew the deadline.
+
+    Produced by :func:`flag_shard_stragglers` from the per-shard wall
+    times the executor's shard spans measure; surfaced by
+    ``explain(analyze=True)`` and counted in the ``dist.stragglers``
+    metric.  Same ``k * median`` rule as the step-level monitor, applied
+    across shards of one build instead of across steps of one shard.
+    """
+
+    shard: int
+    seconds: float
+    median: float
+    ratio: float
+
+
+def flag_shard_stragglers(seconds: List[float],
+                          threshold: float = 2.0) -> List[ShardStraggler]:
+    """Shards whose wall time exceeds ``threshold * median(seconds)``.
+
+    With fewer than 3 shards a median is meaningless (any imbalance
+    would flag one of two shards), so nothing is flagged.
+    """
+    if len(seconds) < 3:
+        return []
+    med = sorted(seconds)[len(seconds) // 2]
+    if med <= 0.0:
+        return []
+    return [ShardStraggler(shard=i, seconds=dt, median=med, ratio=dt / med)
+            for i, dt in enumerate(seconds) if dt > threshold * med]
+
+
+@dataclass
 class StragglerMonitor:
     """Deadline-based step-time monitor."""
 

@@ -26,8 +26,22 @@ from repro.kernels import dense_contract as _dense
 from repro.kernels import expand as _expand
 from repro.kernels import expand_fused as _expand_fused
 from repro.kernels import segsum as _segsum
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import span as _span
 
 F32_EXACT = 1 << 24
+
+
+def _launch(kernel: str, expanded_bytes: int = 0, **args):
+    """Count a kernel launch (+ bytes written by expansions) and open a
+    device-annotated span — `jax.profiler.TraceAnnotation` rides along so
+    host spans line up with device traces.  The span is the ambient no-op
+    when tracing is off; the counters always accumulate."""
+    REGISTRY.counter("kernels.launches").inc()
+    if expanded_bytes:
+        REGISTRY.counter("kernels.bytes_expanded", unit="B").inc(
+            expanded_bytes)
+    return _span(f"kernel:{kernel}", cat="kernel", device=True, **args)
 
 
 def default_interpret() -> bool:
@@ -53,17 +67,18 @@ def rle_expand(payload, bounds, total: int, *, interpret: bool | None = None,
     interpret = default_interpret() if interpret is None else interpret
     t_pad = next_bucket(max(total, 1))
     payload = jnp.asarray(payload, jnp.int32)
-    if meta is None:
-        out = _expand.expand_gather(
-            payload, jnp.asarray(bounds, jnp.int32),
-            t_pad=t_pad, interpret=interpret)
-    else:
-        bounds_p, start_block = meta
-        payload_p = jnp.pad(payload,
-                            (0, bounds_p.shape[0] - payload.shape[0]))
-        out = _expand.expand_gather_with_meta(
-            payload_p, bounds_p, start_block, t_pad=t_pad,
-            interpret=interpret)
+    with _launch("rle_expand", expanded_bytes=total * 4, total=total):
+        if meta is None:
+            out = _expand.expand_gather(
+                payload, jnp.asarray(bounds, jnp.int32),
+                t_pad=t_pad, interpret=interpret)
+        else:
+            bounds_p, start_block = meta
+            payload_p = jnp.pad(payload,
+                                (0, bounds_p.shape[0] - payload.shape[0]))
+            out = _expand.expand_gather_with_meta(
+                payload_p, bounds_p, start_block, t_pad=t_pad,
+                interpret=interpret)
     return out[:total]
 
 
@@ -80,17 +95,21 @@ def rle_expand_many(payloads, bounds, total: int, *,
     interpret = default_interpret() if interpret is None else interpret
     t_pad = next_bucket(max(total, 1))
     payloads = jnp.asarray(payloads, jnp.int32)
-    if meta is None:
-        out = _expand_fused.expand_gather_many(
-            payloads, jnp.asarray(bounds, jnp.int32),
-            t_pad=t_pad, interpret=interpret)
-    else:
-        bounds_p, start_block = meta
-        payloads_p = jnp.pad(
-            payloads, ((0, 0), (0, bounds_p.shape[0] - payloads.shape[1])))
-        out = _expand_fused.expand_gather_many_with_meta(
-            payloads_p, bounds_p, start_block, t_pad=t_pad,
-            interpret=interpret)
+    with _launch("rle_expand_many",
+                 expanded_bytes=int(payloads.shape[0]) * total * 4,
+                 k=int(payloads.shape[0]), total=total):
+        if meta is None:
+            out = _expand_fused.expand_gather_many(
+                payloads, jnp.asarray(bounds, jnp.int32),
+                t_pad=t_pad, interpret=interpret)
+        else:
+            bounds_p, start_block = meta
+            payloads_p = jnp.pad(
+                payloads,
+                ((0, 0), (0, bounds_p.shape[0] - payloads.shape[1])))
+            out = _expand_fused.expand_gather_many_with_meta(
+                payloads_p, bounds_p, start_block, t_pad=t_pad,
+                interpret=interpret)
     return out[:, :total]
 
 
@@ -133,24 +152,27 @@ def mul_segsum(seg_ids, x, y, num_segments: int, *,
         return jax.ops.segment_sum(
             jnp.asarray(x, idt) * jnp.asarray(y, idt),
             jnp.asarray(seg_ids, jnp.int32), num_segments=num_segments)
-    out = _segsum.mul_segsum(
-        jnp.asarray(seg_ids, jnp.int32),
-        jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
-        num_segments=num_segments, interpret=interpret)
+    with _launch("mul_segsum", segments=num_segments):
+        out = _segsum.mul_segsum(
+            jnp.asarray(seg_ids, jnp.int32),
+            jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
+            num_segments=num_segments, interpret=interpret)
     return out
 
 
 def run_boundaries(keys, *, interpret: bool | None = None):
     interpret = default_interpret() if interpret is None else interpret
-    return _boundaries.run_boundaries(jnp.asarray(keys, jnp.int32),
-                                      interpret=interpret)
+    with _launch("run_boundaries"):
+        return _boundaries.run_boundaries(jnp.asarray(keys, jnp.int32),
+                                          interpret=interpret)
 
 
 def dense_message(phi, m, *, interpret: bool | None = None):
     interpret = default_interpret() if interpret is None else interpret
-    return _dense.dense_message(jnp.asarray(phi, jnp.float32),
-                                jnp.asarray(m, jnp.float32),
-                                interpret=interpret)
+    with _launch("dense_message"):
+        return _dense.dense_message(jnp.asarray(phi, jnp.float32),
+                                    jnp.asarray(m, jnp.float32),
+                                    interpret=interpret)
 
 
 def group_by_count(keys, *, interpret: bool | None = None):

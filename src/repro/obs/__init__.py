@@ -1,0 +1,20 @@
+"""Unified tracing + metrics for the GJ pipeline (DESIGN.md §16).
+
+Spans (:mod:`repro.obs.trace`) answer "where did this query's time go"
+with a Perfetto-loadable timeline; metrics (:mod:`repro.obs.metrics`)
+accumulate the counters and latency distributions that the serving and
+plan-feedback layers consume.  Both are stdlib-only and off by default:
+without an active :class:`Tracer` the ambient :func:`span` call is a
+single ContextVar read returning a shared no-op.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               REGISTRY, TimingsView)
+from repro.obs.trace import (NULL_SPAN, Span, Tracer, ambient_tracer,
+                             current_span, span, span_in)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "TimingsView", "NULL_SPAN", "Span", "Tracer", "ambient_tracer",
+    "current_span", "span", "span_in",
+]

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, Iterator, Optional, Sequence, Union
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -21,6 +21,9 @@ from repro.core.elimination import Generator, build_generator
 from repro.core.gfjs import (GFJS, ShardedGFJS, desummarize,
                              desummarize_range, generate_gfjs,
                              stream_desummarize)
+from repro.obs.metrics import REGISTRY, MetricsRegistry, TimingsView
+from repro.obs.trace import (Tracer, ambient_tracer, span as obs_span,
+                             span_in)
 from repro.plan.ir import LogicalPlan, PhysicalPlan
 from repro.plan.search import plan_query
 from repro.plan.stats import QueryStats
@@ -40,9 +43,16 @@ class Executor:
                  record_trace: bool = False,
                  generation_backend: Optional[str] = None,
                  partitions: Optional[int] = None,
-                 partition_var: Optional[str] = None) -> None:
+                 partition_var: Optional[str] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None) -> None:
         self.catalog = catalog
         self.query = query
+        # observability: spans land on ``tracer`` (or whatever tracer is
+        # ambient at call time — benchmarks activate one around a section);
+        # phase timings mirror into ``metrics`` histograms via TimingsView
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else REGISTRY
         self.elimination_order = elimination_order
         self.early_projection = early_projection
         self.planner = planner
@@ -64,7 +74,7 @@ class Executor:
                 "record_trace is unsupported under a partitioned plan: "
                 "splice-based incremental refresh does not understand "
                 "shard structure (partitioned summaries rebuild on append)")
-        self.timings: Dict[str, float] = {}
+        self.timings: Dict[str, float] = TimingsView(self.metrics)
         self.enc: Optional[EncodedQuery] = None
         self.logical: Optional[LogicalPlan] = None
         self.plan: Optional[PhysicalPlan] = plan
@@ -82,10 +92,25 @@ class Executor:
         # content versions of the tables actually encoded by build_model
         self.source_versions: Optional[Dict[str, str]] = None
         # plan feedback: measured per-step product sizes and wall times
-        # from the last generator build (summed over shards when
-        # partitioned); explain() renders them next to the estimates
+        # from the last generator build.  Partitioned runs keep the FULL
+        # per-shard picture: ``step_actuals`` sums over shards (shards
+        # partition the monolithic product exactly), ``step_seconds`` is
+        # the per-step max (critical path of a device-parallel deploy),
+        # ``step_seconds_sum`` the total work, and ``shard_report`` the
+        # per-shard matrix + walls + skew + stragglers that
+        # explain(analyze=True) renders
         self.step_actuals: Dict[str, float] = {}
         self.step_seconds: Dict[str, float] = {}
+        self.step_seconds_sum: Dict[str, float] = {}
+        self.shard_report: Optional[Dict[str, Any]] = None
+
+    # -- observability plumbing --------------------------------------------
+    def _phase(self, name: str, **args: Any):
+        """A ``phase:<name>`` span on this executor's tracer, the ambient
+        tracer, or the shared no-op — in that order."""
+        if self.tracer is not None:
+            return self.tracer.span(f"phase:{name}", cat="phase", **args)
+        return obs_span(f"phase:{name}", cat="phase", **args)
 
     # -- phases ------------------------------------------------------------
     def build_model(self) -> "Executor":
@@ -101,12 +126,14 @@ class Executor:
         later chains its deltas from.
         """
         self._reset_downstream()
-        t0 = time.perf_counter()
-        snapshot = {qt.table: self.catalog[qt.table]
-                    for qt in self.query.tables}
-        self.enc = encode_query(Catalog(dict(snapshot)), self.query)
-        self.source_versions = {n: t.version() for n, t in snapshot.items()}
-        self.timings = {"build_model": time.perf_counter() - t0}
+        with self._phase("build_model"):
+            t0 = time.perf_counter()
+            snapshot = {qt.table: self.catalog[qt.table]
+                        for qt in self.query.tables}
+            self.enc = encode_query(Catalog(dict(snapshot)), self.query)
+            self.source_versions = {n: t.version()
+                                    for n, t in snapshot.items()}
+            self.timings["build_model"] = time.perf_counter() - t0
         return self
 
     def _reset_downstream(self) -> None:
@@ -117,9 +144,11 @@ class Executor:
         self.expansion_cache = None
         self.step_actuals = {}
         self.step_seconds = {}
+        self.step_seconds_sum = {}
+        self.shard_report = None
         if not self._forced_plan:
             self.plan = None
-        self.timings = {}
+        self.timings = TimingsView(self.metrics)
 
     def build_plan(self) -> PhysicalPlan:
         """Logical plan + order search + physical pinning (cached)."""
@@ -127,6 +156,10 @@ class Executor:
             self.build_model()
         if self.plan is not None and self.logical is not None:
             return self.plan
+        with self._phase("plan", planner=self.planner):
+            return self._build_plan_inner()
+
+    def _build_plan_inner(self) -> PhysicalPlan:
         t0 = time.perf_counter()
         if self.plan is not None:
             # pre-compiled plan: every choice is already pinned, so skip
@@ -159,20 +192,23 @@ class Executor:
 
     def build_generator(self) -> "Executor":
         plan = self.build_plan()
-        t0 = time.perf_counter()
-        self.generator = build_generator(
-            self.enc,
-            elimination_order=list(plan.order),
-            early_projection=plan.early_projection,
-            # a partitioned pre-compiled plan carries no monolithic stats
-            # factors; None lets build_generator derive its own
-            factors=list(self.logical.stats.factors) or None,
-            record_trace=self.record_trace,
-        )
-        self.step_actuals = {v: float(n) for v, n
-                             in self.generator.step_products.items()}
-        self.step_seconds = dict(self.generator.step_seconds)
-        self.timings["build_generator"] = time.perf_counter() - t0
+        with self._phase("build_generator"):
+            t0 = time.perf_counter()
+            self.generator = build_generator(
+                self.enc,
+                elimination_order=list(plan.order),
+                early_projection=plan.early_projection,
+                # a partitioned pre-compiled plan carries no monolithic stats
+                # factors; None lets build_generator derive its own
+                factors=list(self.logical.stats.factors) or None,
+                record_trace=self.record_trace,
+                step_estimates={s.var: s.product_entries for s in plan.steps},
+            )
+            self.step_actuals = {v: float(n) for v, n
+                                 in self.generator.step_products.items()}
+            self.step_seconds = dict(self.generator.step_seconds)
+            self.step_seconds_sum = dict(self.generator.step_seconds)
+            self.timings["build_generator"] = time.perf_counter() - t0
         return self
 
     def summarize(self) -> Union[GFJS, ShardedGFJS]:
@@ -181,21 +217,22 @@ class Executor:
             return self._summarize_partitioned(plan)
         if self.generator is None:
             self.build_generator()
-        t0 = time.perf_counter()
         backend = (self.plan.backends.get("summarize", "numpy")
                    if self.plan is not None else "numpy")
-        if self.record_trace:
-            # trace capture needs the host (src, cidx) gather indices that
-            # splice-based incremental refresh replays — numpy only
-            self.expansion_cache = []
-            gfjs = generate_gfjs(self.generator, self.enc.domains,
-                                 self.expansion_cache)
-        elif backend == "jax":
-            from repro.core.engine_jax import generate_gfjs_jax
-            gfjs = generate_gfjs_jax(self.generator, self.enc.domains)
-        else:
-            gfjs = generate_gfjs(self.generator, self.enc.domains)
-        self.timings["summarize"] = time.perf_counter() - t0
+        with self._phase("summarize", backend=backend):
+            t0 = time.perf_counter()
+            if self.record_trace:
+                # trace capture needs the host (src, cidx) gather indices
+                # that splice-based incremental refresh replays — numpy only
+                self.expansion_cache = []
+                gfjs = generate_gfjs(self.generator, self.enc.domains,
+                                     self.expansion_cache)
+            elif backend == "jax":
+                from repro.core.engine_jax import generate_gfjs_jax
+                gfjs = generate_gfjs_jax(self.generator, self.enc.domains)
+            else:
+                gfjs = generate_gfjs(self.generator, self.enc.domains)
+            self.timings["summarize"] = time.perf_counter() - t0
         return gfjs
 
     def _summarize_partitioned(self, plan: PhysicalPlan) -> ShardedGFJS:
@@ -211,53 +248,120 @@ class Executor:
         appends (the service handles that transparently).
 
         Per-step actuals are *summed* over shards (the shards partition
-        the monolithic product exactly), per-step seconds take the max
-        (the critical path of a device-parallel deployment).
+        the monolithic product exactly).  Per-step seconds keep the FULL
+        per-shard matrix (``shard_report["step_seconds"]``), exposed two
+        ways: ``step_seconds`` is the per-step max (the critical path of a
+        device-parallel deployment), ``step_seconds_sum`` the total work.
+        Shard spans are opened from worker threads with the summarize
+        phase span handed across explicitly (ambient context never
+        crosses the pool boundary).
         """
         if self._sharded is not None:
             return self._sharded
         from repro.dist.partition import PartitionScheme, partition_encoded
-        t0 = time.perf_counter()
-        scheme = PartitionScheme(plan.partition_var, plan.partitions)
-        shard_encs = partition_encoded(self.enc, scheme)
-        self.timings["partition"] = time.perf_counter() - t0
+        with self._phase("partition", partitions=plan.partitions,
+                         partition_var=plan.partition_var):
+            t0 = time.perf_counter()
+            scheme = PartitionScheme(plan.partition_var, plan.partitions)
+            shard_encs = partition_encoded(self.enc, scheme)
+            self.timings["partition"] = time.perf_counter() - t0
 
         backend = plan.backends.get("summarize", "numpy")
         order = list(plan.order)
+        # expected per-shard product: the shards partition the monolithic
+        # product exactly, so 1/k of the planner estimate per step
+        shard_est = {s.var: s.product_entries / plan.partitions
+                     for s in plan.steps}
 
-        def run_shard(enc_s):
-            gen = build_generator(enc_s, elimination_order=order,
-                                  early_projection=plan.early_projection)
-            if backend == "jax":
-                from repro.core.engine_jax import generate_gfjs_jax
-                gfjs = generate_gfjs_jax(gen, enc_s.domains)
-            else:
-                gfjs = generate_gfjs(gen, enc_s.domains)
-            return gen, gfjs
+        with self._phase("summarize", backend=backend,
+                         partitions=plan.partitions) as parent_sp:
+            tracer = self.tracer if self.tracer is not None \
+                else ambient_tracer()
 
-        t1 = time.perf_counter()
-        with ThreadPoolExecutor(max_workers=plan.partitions) as pool:
-            results = list(pool.map(run_shard, shard_encs))
-        gens = [g for g, _ in results]
-        shards = [s for _, s in results]
-        self.step_actuals = {}
-        self.step_seconds = {}
-        for g in gens:
-            for v, n in g.step_products.items():
-                self.step_actuals[v] = self.step_actuals.get(v, 0.0) + float(n)
-            for v, dt in g.step_seconds.items():
-                self.step_seconds[v] = max(self.step_seconds.get(v, 0.0), dt)
-        sharded = ShardedGFJS(
-            shards=shards,
-            column_order=list(shards[0].column_order),
-            join_size=int(sum(s.join_size for s in shards)),
-            domains=self.enc.domains,
-            partition_var=scheme.var,
-            salt=scheme.salt,
-        )
-        self.timings["summarize"] = time.perf_counter() - t1
+            def run_shard(item):
+                i, enc_s = item
+                t_s = time.perf_counter()
+                with span_in(tracer, parent_sp, f"shard:{i}", cat="shard",
+                             shard=i) as sp:
+                    gen = build_generator(
+                        enc_s, elimination_order=order,
+                        early_projection=plan.early_projection,
+                        step_estimates=shard_est)
+                    if backend == "jax":
+                        from repro.core.engine_jax import generate_gfjs_jax
+                        gfjs = generate_gfjs_jax(gen, enc_s.domains)
+                    else:
+                        gfjs = generate_gfjs(gen, enc_s.domains)
+                    sp.set(rows=gfjs.join_size)
+                return i, gen, gfjs, time.perf_counter() - t_s, sp
+
+            t1 = time.perf_counter()
+            with ThreadPoolExecutor(max_workers=plan.partitions) as pool:
+                results = list(pool.map(run_shard, enumerate(shard_encs)))
+            gens = [g for _, g, _, _, _ in results]
+            shards = [s for _, _, s, _, _ in results]
+            shard_walls = [w for _, _, _, w, _ in results]
+            shard_spans = [sp for _, _, _, _, sp in results]
+
+            self.step_actuals = {}
+            self.step_seconds = {}
+            self.step_seconds_sum = {}
+            shard_matrix: List[Dict[str, float]] = []
+            for g in gens:
+                shard_matrix.append(dict(g.step_seconds))
+                for v, n in g.step_products.items():
+                    self.step_actuals[v] = \
+                        self.step_actuals.get(v, 0.0) + float(n)
+                for v, dt in g.step_seconds.items():
+                    self.step_seconds[v] = \
+                        max(self.step_seconds.get(v, 0.0), dt)
+                    self.step_seconds_sum[v] = \
+                        self.step_seconds_sum.get(v, 0.0) + dt
+            sharded = ShardedGFJS(
+                shards=shards,
+                column_order=list(shards[0].column_order),
+                join_size=int(sum(s.join_size for s in shards)),
+                domains=self.enc.domains,
+                partition_var=scheme.var,
+                salt=scheme.salt,
+            )
+            self.timings["summarize"] = time.perf_counter() - t1
+            self.shard_report = self._make_shard_report(
+                sharded, shard_walls, shard_matrix, shard_spans)
         self._sharded = sharded
         return sharded
+
+    def _make_shard_report(self, sharded: ShardedGFJS,
+                           walls: List[float],
+                           matrix: List[Dict[str, float]],
+                           spans: List[Any]) -> Dict[str, Any]:
+        """Per-shard breakdown + skew + stragglers (satellite of the old
+        lossy max-reduction): this is what explain(analyze=True) renders
+        and what dist_bench derives its skew numbers from."""
+        from repro.ft.straggler import flag_shard_stragglers
+        sizes = [int(s.join_size) for s in sharded.shards]
+        mean_size = sum(sizes) / len(sizes) if sizes else 0.0
+        mean_wall = sum(walls) / len(walls) if walls else 0.0
+        skew = max(sizes) / mean_size if mean_size > 0 else 1.0
+        time_skew = max(walls) / mean_wall if mean_wall > 0 else 1.0
+        stragglers = flag_shard_stragglers(walls)
+        straggler_ids = {s.shard for s in stragglers}
+        for i, sp in enumerate(spans):
+            sp.set(wall_seconds=walls[i], straggler=i in straggler_ids)
+        self.metrics.gauge("dist.shard_skew", unit="x").set(skew)
+        self.metrics.gauge("dist.time_skew", unit="x").set(time_skew)
+        if stragglers:
+            self.metrics.counter("dist.stragglers").inc(len(stragglers))
+        for w in walls:
+            self.metrics.histogram("dist.shard_seconds", unit="s").observe(w)
+        return {
+            "sizes": sizes,
+            "seconds": list(walls),
+            "step_seconds": matrix,
+            "skew": skew,
+            "time_skew": time_skew,
+            "stragglers": stragglers,
+        }
 
     def run(self) -> Union[GFJS, ShardedGFJS]:
         return self.summarize()
@@ -280,9 +384,10 @@ class Executor:
         from repro.summary.incremental import refresh_state
         if not isinstance(deltas, (list, tuple)):
             deltas = [deltas]
-        t0 = time.perf_counter()
-        new_state, report = refresh_state(state, deltas)
-        self.timings["refresh"] = time.perf_counter() - t0
+        with self._phase("refresh"):
+            t0 = time.perf_counter()
+            new_state, report = refresh_state(state, deltas)
+            self.timings["refresh"] = time.perf_counter() - t0
         self.generator = new_state.generator
         self.expansion_cache = new_state.expansion_cache
         self.source_versions = dict(new_state.table_versions)
@@ -304,18 +409,21 @@ class Executor:
         Sharded summaries expand shard by shard (each through the pinned
         backend) and concatenate in shard order.
         """
-        t0 = time.perf_counter()
         backend = (self.plan.backends.get("desummarize", "numpy")
                    if self.plan is not None else "numpy")
-        if backend == "jax" and isinstance(gfjs, ShardedGFJS):
-            parts = [_desummarize_jax(s, decode=decode) for s in gfjs.shards]
-            out = {v: np.concatenate([p[v] for p in parts])
-                   for v in gfjs.column_order}
-        elif backend == "jax":
-            out = _desummarize_jax(gfjs, decode=decode)
-        else:
-            out = desummarize(gfjs, decode=decode)  # dispatches on shape
-        self.timings["desummarize"] = time.perf_counter() - t0
+        with self._phase("desummarize", backend=backend,
+                         rows=gfjs.join_size):
+            t0 = time.perf_counter()
+            if backend == "jax" and isinstance(gfjs, ShardedGFJS):
+                parts = [_desummarize_jax(s, decode=decode)
+                         for s in gfjs.shards]
+                out = {v: np.concatenate([p[v] for p in parts])
+                       for v in gfjs.column_order}
+            elif backend == "jax":
+                out = _desummarize_jax(gfjs, decode=decode)
+            else:
+                out = desummarize(gfjs, decode=decode)  # dispatches on shape
+            self.timings["desummarize"] = time.perf_counter() - t0
         return out
 
     def materialize(self, gfjs: Union[GFJS, ShardedGFJS], *,
@@ -339,9 +447,18 @@ class Executor:
         return self.desummarize(gfjs, decode=decode)
 
     # -- observability -----------------------------------------------------
-    def explain(self) -> str:
+    def explain(self, *, analyze: bool = False) -> str:
+        """Render the plan; ``analyze=True`` adds everything measured —
+        per-step seconds (max and summed over shards), the per-shard
+        breakdown (never the lossy max-reduction), and stragglers."""
         plan = self.build_plan()
-        return plan.explain(timings=self.timings, actuals=self.step_actuals)
+        if not analyze:
+            return plan.explain(timings=self.timings,
+                                actuals=self.step_actuals)
+        return plan.explain(timings=self.timings, actuals=self.step_actuals,
+                            step_seconds=self.step_seconds,
+                            step_seconds_sum=self.step_seconds_sum,
+                            shard_report=self.shard_report)
 
 
 _I32_MAX = (1 << 31) - 1

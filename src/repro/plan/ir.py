@@ -116,7 +116,10 @@ class PhysicalPlan:
 
     # -- rendering ---------------------------------------------------------
     def explain(self, timings: Optional[Dict[str, float]] = None,
-                actuals: Optional[Dict[str, float]] = None) -> str:
+                actuals: Optional[Dict[str, float]] = None,
+                step_seconds: Optional[Dict[str, float]] = None,
+                step_seconds_sum: Optional[Dict[str, float]] = None,
+                shard_report: Optional[Dict[str, object]] = None) -> str:
         """Human-readable plan: order, per-step estimates, backends.
 
         Pass the executor's ``timings`` to annotate phases with measured
@@ -124,6 +127,12 @@ class PhysicalPlan:
         (var -> measured product entries) to render estimate-vs-actual
         drift per step — the honest-numbers half of the plan-feedback
         loop (no re-planning yet).
+
+        The analyze-mode kwargs (``Executor.explain(analyze=True)``
+        supplies them) extend each step with measured seconds — the
+        per-shard max alongside the summed work when partitioned — and
+        append a per-shard section (rows, wall, straggler flags, skew)
+        instead of collapsing shards into one number.
         """
         lines = [
             f"PhysicalPlan {self.query_name!r}  "
@@ -156,7 +165,28 @@ class PhysicalPlan:
                     drift = (act / s.product_entries
                              if s.product_entries > 0.0 else float("inf"))
                     line += f"  actual={act:.3g} ({drift:.2f}x est)"
+                if step_seconds and s.var in step_seconds:
+                    line += f"  time={step_seconds[s.var] * 1e3:.2f}ms"
+                    if (step_seconds_sum
+                            and s.var in step_seconds_sum
+                            and step_seconds_sum[s.var]
+                            != step_seconds[s.var]):
+                        line += (f" (max; sum "
+                                 f"{step_seconds_sum[s.var] * 1e3:.2f}ms)")
                 lines.append(line)
+        if shard_report:
+            sizes = shard_report.get("sizes", [])
+            seconds = shard_report.get("seconds", [])
+            stragglers = {getattr(s, "shard", None)
+                          for s in shard_report.get("stragglers", [])}
+            lines.append("  shards:")
+            for i, (rows, sec) in enumerate(zip(sizes, seconds)):
+                mark = "  STRAGGLER" if i in stragglers else ""
+                lines.append(f"    shard {i:<3d} rows={rows:<12d} "
+                             f"wall={sec * 1e3:10.2f}ms{mark}")
+            lines.append(
+                f"    skew: rows={shard_report.get('skew', 1.0):.2f}x  "
+                f"time={shard_report.get('time_skew', 1.0):.2f}x")
         if self.alternatives:
             lines.append("  candidates:")
             for c in self.alternatives:

@@ -155,6 +155,21 @@ def plan_query(enc: EncodedQuery, *,
             f"partition_var={partition_var!r} requires partitions > 1 "
             "(a monolithic plan would silently ignore it)")
     t0 = time.perf_counter()
+    from repro.obs.trace import span as _span
+    with _span("plan:search", cat="plan", planner=planner):
+        return _plan_query_inner(
+            enc, t0, elimination_order=elimination_order,
+            early_projection=early_projection, planner=planner,
+            beam_width=beam_width, stats=stats,
+            generation_backend=generation_backend,
+            partitions=partitions, partition_var=partition_var)
+
+
+def _plan_query_inner(enc: EncodedQuery, t0: float, *,
+                      elimination_order, early_projection, planner,
+                      beam_width, stats, generation_backend,
+                      partitions, partition_var
+                      ) -> Tuple[LogicalPlan, PhysicalPlan]:
     logical = build_logical_plan(enc, early_projection=early_projection,
                                  stats=stats)
     model = CostModel(logical.stats)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import LM
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import span as _span
 
 
 @dataclass
@@ -93,23 +95,30 @@ class RelationalFeatureProvider:
 
     def features(self, keys: np.ndarray) -> np.ndarray:
         """[len(keys), num_features] float32; zeros for unknown keys."""
-        versions = self._current_versions()
-        memo = self._memo
-        if memo is None or memo[0] != versions:
-            memo = (versions, self._feature_table())
-            self._memo = memo
-        tab = memo[1]
-        uniq = np.asarray(tab[self.key_var])
-        keys = np.asarray(keys)
-        pos = np.searchsorted(uniq, keys)
-        pos_c = np.clip(pos, 0, max(len(uniq) - 1, 0))
-        ok = (uniq[pos_c] == keys) if len(uniq) else np.zeros(len(keys), bool)
-        out = np.zeros((len(keys), len(self.aggs)), np.float32)
-        for j, name in enumerate(self.aggs):
-            col = np.asarray(tab[name], np.float32)
-            if len(col):
-                out[:, j] = np.where(ok, col[pos_c], 0.0)
-        return out
+        with _span("serve:features", cat="serve", keys=len(keys)) as sp:
+            versions = self._current_versions()
+            memo = self._memo
+            fresh = memo is None or memo[0] != versions
+            if fresh:
+                memo = (versions, self._feature_table())
+                self._memo = memo
+            sp.set(memo_hit=not fresh)
+            REGISTRY.counter("serve.feature_requests").inc()
+            if fresh:
+                REGISTRY.counter("serve.feature_recomputes").inc()
+            tab = memo[1]
+            uniq = np.asarray(tab[self.key_var])
+            keys = np.asarray(keys)
+            pos = np.searchsorted(uniq, keys)
+            pos_c = np.clip(pos, 0, max(len(uniq) - 1, 0))
+            ok = (uniq[pos_c] == keys) if len(uniq) \
+                else np.zeros(len(keys), bool)
+            out = np.zeros((len(keys), len(self.aggs)), np.float32)
+            for j, name in enumerate(self.aggs):
+                col = np.asarray(tab[name], np.float32)
+                if len(col):
+                    out[:, j] = np.where(ok, col[pos_c], 0.0)
+            return out
 
 
 class ServeEngine:

@@ -40,6 +40,8 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 
 from repro.core.gfjs import GFJS
 from repro.core.storage import load_gfjs, save_gfjs
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import span as _span
 from repro.relational.query import JoinQuery
 from repro.relational.table import Catalog
 
@@ -103,6 +105,12 @@ class SummaryCache:
         self._lock = threading.RLock()
         self.stats = CacheStats()
 
+    def _bump(self, stat: str, n: int = 1) -> None:
+        """Increment a CacheStats field and mirror it into the process
+        metrics registry (``cache.<stat>``) — one write, two views."""
+        setattr(self.stats, stat, getattr(self.stats, stat) + n)
+        REGISTRY.counter(f"cache.{stat}").inc(n)
+
     # -- introspection -----------------------------------------------------
     def __len__(self) -> int:
         with self._lock:
@@ -159,19 +167,25 @@ class SummaryCache:
         The source tier is determined by *this* lookup, not inferred from
         shared counters — concurrent requests cannot mislabel each other.
         """
+        with _span("cache:get", cat="cache") as sp:
+            gfjs, source = self._get_with_source(key)
+            sp.set(source=source)
+            return gfjs, source
+
+    def _get_with_source(self, key: str) -> Tuple[Optional[GFJS], str]:
         with self._lock:
             hit = self._entries.get(key)
             if hit is not None:
                 if self._expired(self._born.get(key, 0.0)):
                     self._drop(key)
-                    self.stats.expirations += 1
+                    self._bump("expirations")
                 else:
                     self._entries.move_to_end(key)
                     # re-measure: expansion caches (_bounds / _launch) grow
                     # lazily after admission, and the byte budget must see
                     # them — O(levels) per hit, settled at the next shrink
                     self._nbytes[key] = hit.resident_nbytes()
-                    self.stats.hits += 1
+                    self._bump("hits")
                     return hit, "memory"
             path = self._spill_path(key)
             load_from: Optional[str] = None
@@ -181,11 +195,11 @@ class SummaryCache:
                 if self._expired(born):
                     os.remove(path)
                     self._prune_provenance(key)
-                    self.stats.expirations += 1
+                    self._bump("expirations")
                 else:
                     load_from = path
             if load_from is None:
-                self.stats.misses += 1
+                self._bump("misses")
                 return None, "miss"
         # disk I/O happens outside the lock: a slow spill promotion must not
         # stall every other thread's memory hits.  Two threads promoting the
@@ -194,15 +208,15 @@ class SummaryCache:
             gfjs = load_gfjs(load_from)
         except FileNotFoundError:      # raced with invalidate()/expiry
             with self._lock:
-                self.stats.misses += 1
+                self._bump("misses")
             return None, "miss"
         with self._lock:
             if not os.path.exists(load_from):
                 # invalidate() removed the file while we were loading: the
                 # summary we hold is stale — do NOT resurrect it
-                self.stats.misses += 1
+                self._bump("misses")
                 return None, "miss"
-            self.stats.disk_hits += 1
+            self._bump("disk_hits")
             spills = self._admit(key, gfjs, born=born)
         self._write_spills(spills)
         return gfjs, "disk"
@@ -211,12 +225,13 @@ class SummaryCache:
             tables: Optional[Iterable[str]] = None) -> None:
         """Insert/refresh an entry; ``tables`` names the base tables it was
         built on (enables `invalidate`)."""
-        with self._lock:
-            self.stats.puts += 1
-            if tables is not None:
-                self._tables[key] = frozenset(tables)
-            spills = self._admit(key, gfjs, born=time.time())
-        self._write_spills(spills)
+        with _span("cache:put", cat="cache"):
+            with self._lock:
+                self._bump("puts")
+                if tables is not None:
+                    self._tables[key] = frozenset(tables)
+                spills = self._admit(key, gfjs, born=time.time())
+            self._write_spills(spills)
 
     def refresh(self, old_key: str, new_key: str, gfjs: GFJS,
                 tables: Optional[Iterable[str]] = None) -> None:
@@ -231,8 +246,8 @@ class SummaryCache:
         a promotion in flight (`invalidate` races are handled identically:
         provenance for ``old_key`` is gone before the lock is released).
         """
-        with self._lock:
-            self.stats.refreshes += 1
+        with _span("cache:refresh", cat="cache"), self._lock:
+            self._bump("refreshes")
             if old_key != new_key:
                 self._entries.pop(old_key, None)
                 self._nbytes.pop(old_key, None)
@@ -272,7 +287,7 @@ class SummaryCache:
                 self._tables.pop(key, None)
                 if hit:                  # one logical entry, however stored
                     removed += 1
-            self.stats.invalidations += removed
+            self._bump("invalidations", removed)
         return removed
 
     def _admit(self, key: str, gfjs: GFJS, *, born: float) -> List[Tuple]:
@@ -304,7 +319,7 @@ class SummaryCache:
             gfjs = self._entries.pop(victim)
             self._nbytes.pop(victim)
             born = self._born.pop(victim, time.time())
-            self.stats.evictions += 1
+            self._bump("evictions")
             path = self._spill_path(victim)
             if path is None:
                 self._tables.pop(victim, None)   # nothing left to invalidate
@@ -327,12 +342,13 @@ class SummaryCache:
                 # summary was declared stale — do not write it back
                 if had_tables and key not in self._tables:
                     continue
-            tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
-            save_gfjs(gfjs, tmp)
-            os.utime(tmp, (born, born))    # spill mtime == creation time
-            os.replace(tmp, path)          # atomic publish
+            with _span("cache:spill", cat="cache", key=key):
+                tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+                save_gfjs(gfjs, tmp)
+                os.utime(tmp, (born, born))  # spill mtime == creation time
+                os.replace(tmp, path)        # atomic publish
             with self._lock:
-                self.stats.spills += 1
+                self._bump("spills")
 
     def clear(self) -> None:
         with self._lock:

@@ -50,6 +50,8 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.api import GraphicalJoin
+from repro.obs.metrics import REGISTRY
+from repro.obs.trace import span as _span
 from repro.plan.ir import PhysicalPlan
 from repro.relational.query import JoinQuery
 from repro.relational.table import Catalog, TableDelta
@@ -72,6 +74,19 @@ class ServiceReply:
     @property
     def cache_hit(self) -> bool:
         return self.source in ("memory", "disk")
+
+    def explain(self) -> str:
+        """Provenance report: where the frame came from, what it cost,
+        and (when available) the plan it was built under."""
+        lines = [
+            f"ServiceReply  source={self.source}  key={self.key[:16]}…",
+            "  timings:",
+        ]
+        for k, v in self.timings.items():
+            lines.append(f"    {k:<16s} {v * 1e3:10.2f}ms")
+        if self.plan is not None:
+            lines.append(self.plan.explain())
+        return "\n".join(lines)
 
 
 class JoinService:
@@ -156,7 +171,28 @@ class JoinService:
     # -- summary acquisition ----------------------------------------------
     def frame(self, query: JoinQuery,
               plan: Optional[PhysicalPlan] = None) -> ServiceReply:
-        """The summary for ``query``: cache first, GraphicalJoin on miss."""
+        """The summary for ``query``: cache first, GraphicalJoin on miss.
+
+        Every reply — cache hits included — carries a ``"service"``
+        timing (end-to-end request latency) and lands in the
+        ``service.latency_seconds.<source>`` histogram, so the serving
+        path is measurable even when no join ever runs.
+        """
+        with _span("service:frame", cat="service", query=query.name) as sp:
+            t_req = time.perf_counter()
+            reply = self._frame_inner(query, plan)
+            dt = time.perf_counter() - t_req
+            reply.timings["service"] = dt
+            sp.set(source=reply.source)
+            REGISTRY.counter("service.requests").inc()
+            REGISTRY.counter(f"service.source.{reply.source}").inc()
+            REGISTRY.histogram(
+                f"service.latency_seconds.{reply.source}",
+                unit="s").observe(dt)
+            return reply
+
+    def _frame_inner(self, query: JoinQuery,
+                     plan: Optional[PhysicalPlan] = None) -> ServiceReply:
         with self._lock:
             self.requests += 1
         gj: Optional[GraphicalJoin] = None

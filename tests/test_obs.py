@@ -1,0 +1,423 @@
+"""Observability subsystem (DESIGN.md §16): spans, metrics, explain(analyze).
+
+Pins the tracing + metrics contract:
+
+* span nesting is correct across the sharded-build thread pool — shard
+  spans are parented to the summarize phase span, per-step elimination
+  spans stay inside their own shard (no orphaned or crossed parents);
+* the exported Chrome trace passes the `repro.obs.check` validator (the
+  same gate CI runs on `benchmarks/run.py --trace` output);
+* elimination spans carry product / est / drift annotations;
+* metrics snapshots JSON-round-trip through `MetricsRegistry.from_snapshot`;
+* `Executor.timings` stays a real dict (legacy equality) while mirroring
+  writes into per-phase histograms;
+* the disabled-tracing path is a shared no-op whose total cost across a
+  pipeline's span call sites is <2% of the untraced pipeline wall.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import GraphicalJoin
+from repro.ft.straggler import flag_shard_stragglers
+from repro.obs.check import validate
+from repro.obs.metrics import (REGISTRY, MetricsRegistry, TimingsView)
+from repro.obs.trace import (NULL_SPAN, Tracer, ambient_tracer, current_span,
+                             span as obs_span, span_in)
+from repro.relational.synth import figure1, lastfm_like
+from repro.summary.service import JoinService
+
+PARTS = 4
+
+
+def _lastfm():
+    cat, qs = lastfm_like(n_users=200, n_artists=150, artists_per_user=5,
+                          friends_per_user=3, alpha=1.3, seed=11)
+    return cat, qs["lastfm_A2"]
+
+
+def _span_index(tracer):
+    return {s.span_id: s for s in tracer.spans}
+
+
+def _ancestors(span, by_id):
+    out = []
+    pid = span.parent_id
+    while pid is not None:
+        sp = by_id.get(pid)
+        if sp is None:
+            break
+        out.append(sp)
+        pid = sp.parent_id
+    return out
+
+
+# ---------------------------------------------------------------------------
+# span mechanics
+# ---------------------------------------------------------------------------
+
+def test_nested_spans_parent_via_ambient_context():
+    tr = Tracer()
+    with tr.span("outer") as outer:
+        assert current_span() is outer
+        assert ambient_tracer() is tr
+        with tr.span("inner") as inner:
+            pass
+    assert current_span() is None
+    assert inner.parent_id == outer.span_id
+    assert outer.parent_id is None
+    assert outer.t1 >= inner.t1 >= inner.t0 >= outer.t0
+
+
+def test_ambient_context_does_not_cross_threads():
+    """A worker thread starts with no ambient span: its spans are roots
+    unless the parent is handed over explicitly (span_in)."""
+    tr = Tracer()
+    got = {}
+
+    def worker(parent):
+        got["ambient"] = current_span()
+        with span_in(tr, parent, "child-explicit"):
+            pass
+        with tr.span("child-implicit"):
+            pass
+
+    with tr.span("coordinator") as parent:
+        t = threading.Thread(target=worker, args=(parent,))
+        t.start()
+        t.join()
+
+    assert got["ambient"] is None          # fresh context in the thread
+    by_name = {s.name: s for s in tr.spans}
+    assert by_name["child-explicit"].parent_id == parent.span_id
+    assert by_name["child-implicit"].parent_id is None
+
+
+def test_disabled_tracing_returns_shared_noop():
+    assert obs_span("anything", cat="x", arg=1) is NULL_SPAN
+    assert span_in(None, None, "anything") is NULL_SPAN
+    with obs_span("anything") as sp:
+        assert sp.set(a=1) is sp           # set() is a no-op, chains
+    assert ambient_tracer() is None
+
+
+def test_span_args_mutable_until_export():
+    tr = Tracer()
+    with tr.span("s", k=1) as sp:
+        pass
+    sp.set(late=2)                          # annotation after exit is legal
+    ev = [e for e in tr.to_chrome_trace()["traceEvents"]
+          if e.get("ph") == "X"][0]
+    assert ev["args"]["k"] == 1 and ev["args"]["late"] == 2
+    # numpy scalars must be coerced to plain JSON types
+    sp.set(np_val=np.int64(7))
+    doc = tr.to_chrome_trace()
+    assert json.loads(json.dumps(doc))      # round-trips through json
+
+
+# ---------------------------------------------------------------------------
+# pipeline span topology (monolithic + shard pool)
+# ---------------------------------------------------------------------------
+
+def test_monolithic_pipeline_trace_validates():
+    cat, query = figure1()
+    tr = Tracer()
+    gj = GraphicalJoin(cat, query, tracer=tr)
+    gfjs = gj.run()
+    gj.desummarize(gfjs)
+    names = {s.name for s in tr.spans}
+    for phase in ("phase:build_model", "phase:plan", "phase:build_generator",
+                  "phase:summarize", "phase:desummarize"):
+        assert phase in names, phase
+    doc = tr.to_chrome_trace()
+    assert validate(doc) == []
+
+
+def test_eliminate_spans_carry_product_and_drift():
+    cat, query = figure1()
+    tr = Tracer()
+    GraphicalJoin(cat, query, tracer=tr).run()
+    elim = tr.find("eliminate")
+    assert elim
+    for sp in elim:
+        assert "product" in sp.args and sp.args["product"] >= 0
+        assert "seconds" in sp.args
+        if "est" in sp.args:
+            assert "drift" in sp.args
+    # the planner estimates every step on figure1, so drift must be there
+    assert any("drift" in sp.args for sp in elim)
+    # parented inside the build_generator phase
+    by_id = _span_index(tr)
+    gen_phase = tr.find("phase:build_generator")[0]
+    for sp in elim:
+        assert gen_phase in _ancestors(sp, by_id)
+
+
+def test_shard_pool_span_topology(tmp_path):
+    """Shard spans hang off phase:summarize; every eliminate span inside a
+    worker is parented (transitively) to its OWN shard's span — no
+    orphans, no crossed parents across pool threads."""
+    cat, query = _lastfm()
+    tr = Tracer()
+    gj = GraphicalJoin(cat, query, partitions=PARTS, tracer=tr)
+    gfjs = gj.run()
+    assert gfjs.join_size > 0
+
+    by_id = _span_index(tr)
+    # no orphaned parents anywhere: every parent_id resolves
+    for sp in by_id.values():
+        assert sp.parent_id is None or sp.parent_id in by_id, sp.name
+
+    shards = tr.find("shard")
+    assert len(shards) == PARTS
+    summarize = tr.find("phase:summarize")[0]
+    for sp in shards:
+        assert sp.parent_id == summarize.span_id
+        assert sp.args["shard"] in range(PARTS)
+        assert "rows" in sp.args and "wall_seconds" in sp.args
+        assert "straggler" in sp.args
+
+    # each eliminate span belongs to exactly one shard, and that shard
+    # ran on the same thread (the pool hands one shard to one worker)
+    shard_ids = {sp.span_id: sp for sp in shards}
+    elim = tr.find("eliminate")
+    assert len(elim) >= PARTS            # every shard eliminates something
+    for sp in elim:
+        anc = _ancestors(sp, by_id)
+        owners = [a for a in anc if a.span_id in shard_ids]
+        assert len(owners) == 1, f"{sp.name} crosses shard boundaries"
+        assert sp.tid == owners[0].tid
+
+    # the exported file passes the CI validator's sharded profile
+    path = tr.write_chrome_trace(str(tmp_path / "shard.trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate(doc, expect_shards=True) == []
+
+
+def test_validator_flags_broken_traces():
+    assert validate({"nope": 1}) != []
+    assert validate({"traceEvents": []}) != []
+    # a trace with phases but no eliminate spans is flagged
+    ev = [{"name": f"phase:{p}", "ph": "X", "ts": 0, "dur": 1,
+           "pid": 1, "tid": 1, "args": {"span_id": i}}
+          for i, p in enumerate(("build_model", "plan", "build_generator",
+                                 "summarize"))]
+    errs = validate({"traceEvents": ev})
+    assert any("eliminate" in e for e in errs)
+    # an eliminate span with est but no drift is flagged
+    ev2 = ev + [{"name": "eliminate:X", "ph": "X", "ts": 0, "dur": 1,
+                 "pid": 1, "tid": 1,
+                 "args": {"span_id": 99, "product": 3, "est": 4.0}}]
+    errs = validate({"traceEvents": ev2})
+    assert any("drift" in e for e in errs)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_metrics_snapshot_json_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("c.events").inc(3)
+    reg.gauge("g.skew", unit="x").set(1.75)
+    h = reg.histogram("h.lat", unit="s")
+    for v in (0.001, 0.002, 0.5, 3.0):
+        h.observe(v)
+    reg.histogram("h.empty", unit="s")       # never observed: min/max None
+
+    snap = reg.snapshot()
+    wire = json.loads(json.dumps(snap))      # must survive JSON transport
+    reg2 = MetricsRegistry.from_snapshot(wire)
+    assert reg2.snapshot() == snap
+
+    s = snap["h.lat"]
+    assert s["count"] == 4 and s["min"] == 0.001 and s["max"] == 3.0
+    assert s["sum"] == pytest.approx(3.503)
+    assert sum(s["buckets"].values()) == 4
+    assert snap["h.empty"]["min"] is None
+
+
+def test_metrics_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_timings_view_is_a_legacy_dict_and_mirrors_histograms():
+    reg = MetricsRegistry()
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query, metrics=reg)
+    gj.run()
+    t = gj.timings
+
+    # legacy surface: a real dict, equal to its plain-dict copy
+    assert isinstance(t, dict)
+    assert t == dict(t)
+    for key in ("build_model", "plan", "build_generator", "summarize"):
+        assert key in t and t[key] >= 0.0
+
+    # every phase write landed in the registry's histogram twin
+    snap = reg.snapshot()
+    for key in ("build_model", "plan", "build_generator", "summarize"):
+        h = snap[f"executor.phase_seconds.{key}"]
+        assert h["type"] == "histogram" and h["count"] >= 1
+    # external mutation (the GraphicalJoin "aggregate" pattern) mirrors too
+    t["aggregate"] = 0.25
+    assert reg.snapshot()["executor.phase_seconds.aggregate"]["count"] == 1
+    # a non-numeric write keeps dict semantics and skips the mirror
+    t["note"] = "not-a-number"
+    assert t["note"] == "not-a-number"
+    assert "executor.phase_seconds.note" not in reg.snapshot()
+
+
+def test_build_model_reentry_resets_timings_view():
+    reg = MetricsRegistry()
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query, metrics=reg)
+    gj.run()
+    gj.build_model()                          # re-entry clears downstream
+    assert "summarize" not in gj.timings
+    assert isinstance(gj.timings, TimingsView)   # mirror survives the reset
+    # but history in the registry is retained (it is a histogram)
+    assert reg.snapshot()["executor.phase_seconds.summarize"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# service + dist metrics
+# ---------------------------------------------------------------------------
+
+def test_service_records_latency_and_source_metrics():
+    cat, query = figure1()
+    svc = JoinService(cat)
+
+    def val(name):
+        inst = REGISTRY._instruments.get(name)
+        return inst.value if inst is not None else 0.0
+
+    req0 = val("service.requests")
+    computed0 = val("service.source.computed")
+    memory0 = val("service.source.memory")
+
+    miss = svc.frame(query)
+    assert miss.source == "computed"
+    assert miss.timings["service"] > 0.0     # latency is on every reply
+    hit = svc.frame(query)
+    assert hit.source == "memory"
+    assert hit.timings["service"] > 0.0      # ... including cache hits
+
+    assert val("service.requests") == req0 + 2
+    assert val("service.source.computed") == computed0 + 1
+    assert val("service.source.memory") == memory0 + 1
+    lat = REGISTRY.snapshot()["service.latency_seconds.memory"]
+    assert lat["unit"] == "s" and lat["count"] >= 1
+    assert "computed" in miss.explain() and "timings" in miss.explain()
+
+
+def test_partitioned_run_populates_shard_report_and_gauges():
+    reg = MetricsRegistry()
+    cat, query = _lastfm()
+    gj = GraphicalJoin(cat, query, partitions=PARTS, metrics=reg)
+    gj.run()
+    rep = gj._executor.shard_report
+    assert rep is not None
+    assert len(rep["sizes"]) == PARTS and len(rep["seconds"]) == PARTS
+    assert len(rep["step_seconds"]) == PARTS          # FULL per-shard matrix
+    assert all(isinstance(m, dict) for m in rep["step_seconds"])
+    assert rep["skew"] >= 1.0 and rep["time_skew"] >= 1.0
+    # step_seconds (max) <= step_seconds_sum, per step, by construction
+    ex = gj._executor
+    for v, mx in ex.step_seconds.items():
+        assert mx <= ex.step_seconds_sum[v] + 1e-12
+        col = [m.get(v, 0.0) for m in rep["step_seconds"]]
+        assert mx == pytest.approx(max(col))
+        assert ex.step_seconds_sum[v] == pytest.approx(sum(col))
+    snap = reg.snapshot()
+    assert snap["dist.shard_skew"]["value"] == pytest.approx(rep["skew"])
+    assert snap["dist.time_skew"]["value"] == pytest.approx(rep["time_skew"])
+    assert snap["dist.shard_seconds"]["count"] == PARTS
+
+
+def test_flag_shard_stragglers_rule():
+    assert flag_shard_stragglers([]) == []
+    assert flag_shard_stragglers([5.0, 0.1]) == []        # <3 shards: never
+    assert flag_shard_stragglers([1.0, 1.0, 1.0, 1.0]) == []
+    out = flag_shard_stragglers([1.0, 1.0, 1.0, 10.0])
+    assert [s.shard for s in out] == [3]
+    assert out[0].ratio == pytest.approx(10.0)
+    assert out[0].median == pytest.approx(1.0)
+    assert flag_shard_stragglers([0.0, 0.0, 0.0]) == []   # degenerate median
+
+
+# ---------------------------------------------------------------------------
+# explain(analyze=True)
+# ---------------------------------------------------------------------------
+
+def test_explain_analyze_renders_per_shard_breakdown():
+    cat, query = _lastfm()
+    gj = GraphicalJoin(cat, query, partitions=PARTS)
+    gj.run()
+    text = gj.explain(analyze=True)
+    assert "shards:" in text
+    for i in range(PARTS):
+        assert f"shard {i}" in text
+    assert "skew: rows=" in text and "time=" in text
+    assert "(max; sum" in text                 # per-step max vs summed work
+    # plain explain() keeps the historical shape (no shard section)
+    assert "shards:" not in gj.explain()
+
+
+def test_explain_analyze_monolithic_has_step_times():
+    cat, query = figure1()
+    gj = GraphicalJoin(cat, query)
+    gj.run()
+    text = gj.explain(analyze=True)
+    assert "eliminate" in text and "est_product=" in text
+    assert "time=" in text
+    assert "shards:" not in text
+
+
+# ---------------------------------------------------------------------------
+# disabled-tracing overhead (<2% on the plan_bench smoke instance)
+# ---------------------------------------------------------------------------
+
+def test_noop_tracer_overhead_under_two_percent():
+    """Overhead budget of tracing-off runs, measured structurally: (number
+    of span call sites a traced pipeline run exercises) x (cost of one
+    no-op span) must stay under 2% of the untraced pipeline wall.  This is
+    the deterministic form of the wall-clock A/B (which CI load would
+    render flaky) — same instance the planner smoke uses."""
+    cat, query = _lastfm()
+
+    # untraced pipeline wall (best of 3 to shed warm-up noise)
+    walls = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        GraphicalJoin(cat, query).run()
+        walls.append(time.perf_counter() - t0)
+    untraced = min(walls)
+
+    # span call sites exercised by the same pipeline when traced
+    tr = Tracer()
+    GraphicalJoin(cat, query, tracer=tr).run()
+    n_sites = len(tr.spans)
+    assert n_sites > 0
+
+    # cost of one disabled span (enter + exit + one set), amortized
+    reps = 50_000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with obs_span("x") as sp:
+            sp.set(a=1)
+    per_call = (time.perf_counter() - t0) / reps
+
+    overhead = n_sites * per_call
+    assert overhead < 0.02 * untraced, (
+        f"no-op tracing would cost {overhead * 1e6:.1f}us across {n_sites} "
+        f"span sites vs {untraced * 1e6:.1f}us untraced wall "
+        f"({100 * overhead / untraced:.2f}% > 2%)")
