@@ -8,19 +8,26 @@ on skewed lastfm-shaped instances:
   deployment: shards are independent programs, so the slowest shard IS
   the step's distributed latency);
 * **wall scaling** — end-to-end summarize wall time, monolithic vs the
-  thread-pooled shard run on this host (an underestimate of device
-  scaling: numpy shards contend for the GIL);
-* **balance** — per-shard row counts of the partitioned occurrences
-  (how the multiplicative hash spreads a Zipf-skewed key).
+  sharded run on this host.  Thread rows contend for the GIL (an
+  underestimate of device scaling); process rows (DESIGN §17 — the
+  repro/dist/actions.py spawn pool) are real multi-core parallelism,
+  bounded by the ``cpus`` column (on a 1-CPU container the honest
+  process wall_scaling is ~1x minus dispatch overhead: the workers
+  serialize on the single core);
+* **balance** — per-worker folded row counts of the partitioned
+  occurrences (how the multiplicative hash + over-partition fold spread
+  a Zipf-skewed key).
 
 Run as a module:
 
   PYTHONPATH=src python -m benchmarks.dist_bench --smoke     # CI gate
   PYTHONPATH=src python -m benchmarks.dist_bench --json BENCH_dist.json
+  PYTHONPATH=src python -m benchmarks.dist_bench --shard-executor=process
 
 ``--smoke`` is an exact-equality gate: the partitioned summary's row
 count, desummarized row multiset, and aggregates must equal the
-monolithic numpy oracle's bit for bit.
+monolithic numpy oracle's bit for bit — on the thread path AND across
+real spawned shard workers (2-worker process path).
 """
 
 from __future__ import annotations
@@ -53,12 +60,30 @@ def _instances(scale: float):
     return out
 
 
-def _run(cat, query, partitions: int):
+def _cpus() -> int:
+    """CPUs this process may actually use (the hard cap on process-path
+    wall scaling — reported next to it so the numbers stay honest)."""
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:  # pragma: no cover - non-Linux
+        return os.cpu_count() or 1
+
+
+def _run(cat, query, partitions: int, shard_executor=None):
     """(gj, gfjs, summarize_wall_seconds) for one pipeline run."""
     from repro.core.api import GraphicalJoin
-    gj = GraphicalJoin(cat, query) if partitions <= 1 else \
-        GraphicalJoin(cat, query, partitions=partitions)
+    kw = {}
+    if partitions > 1:
+        kw["partitions"] = partitions
+        if shard_executor:
+            kw["shard_executor"] = shard_executor
+    gj = GraphicalJoin(cat, query, **kw)
     gj.plan()                       # planning excluded from the wall time
+    if shard_executor == "process":
+        # pool startup (spawn + worker imports) is a one-time service
+        # cost, not per-query latency: run one untimed warmup query so the
+        # persistent shared pool is hot before the measured dispatch
+        GraphicalJoin(cat, query, **kw).run()
     t0 = time.perf_counter()
     gfjs = gj.run()
     wall = time.perf_counter() - t0
@@ -66,13 +91,16 @@ def _run(cat, query, partitions: int):
 
 
 def _serial_shard_step_seconds(enc, plan) -> List[dict]:
-    """Per-shard step wall times measured in ISOLATION (shards one at a
-    time) — each shard of a real deployment runs alone on its device, so
-    the un-contended per-shard max is the honest step-level critical path
-    (the executor's threaded run would charge GIL contention to it)."""
+    """Per-virtual-shard step wall times measured in ISOLATION (shards
+    one at a time) — each shard of a real deployment runs alone on its
+    device, so the un-contended per-shard max is the honest step-level
+    critical path (the executor's pooled run would charge contention to
+    it).  With ``partition_fold`` > 1 the caller folds these onto the
+    worker count before taking the max."""
     from repro.core.elimination import build_generator
     from repro.dist.partition import PartitionScheme, partition_encoded
-    scheme = PartitionScheme(plan.partition_var, plan.partitions)
+    scheme = PartitionScheme(plan.partition_var,
+                             plan.partitions * plan.partition_fold)
     out = []
     for enc_s in partition_encoded(enc, scheme):
         gen = build_generator(enc_s, elimination_order=list(plan.order),
@@ -81,34 +109,50 @@ def _serial_shard_step_seconds(enc, plan) -> List[dict]:
     return out
 
 
-def bench_dist(partitions: int = 4, scale: float = 1.0) -> List[str]:
+def bench_dist(partitions: int = 4, scale: float = 1.0,
+               shard_executor: str = "both") -> List[str]:
+    executors = ("thread", "process") if shard_executor == "both" \
+        else (shard_executor,)
     lines: List[str] = []
     for name, cat, query in _instances(scale):
         mono_gj, mono_g, mono_wall = _run(cat, query, 1)
-        part_gj, part_g, part_wall = _run(cat, query, partitions)
-        assert part_g.join_size == mono_g.join_size
+        for executor in executors:
+            part_gj, part_g, part_wall = _run(cat, query, partitions,
+                                              shard_executor=executor)
+            assert part_g.join_size == mono_g.join_size
 
-        plan = part_gj.plan()
-        pvar = plan.partition_var
-        mono_step = mono_gj._executor.step_seconds.get(pvar, 0.0)
-        per_shard = _serial_shard_step_seconds(part_gj.enc, plan)
-        shard_step = max(s.get(pvar, 0.0) for s in per_shard)
-        step_scaling = mono_step / shard_step if shard_step > 0 else 0.0
-        wall_scaling = mono_wall / part_wall if part_wall > 0 else 0.0
-        # skew comes from the executor's shard report (the same per-shard
-        # matrix explain(analyze=True) renders) instead of being
-        # recomputed here — one measurement, every consumer
-        report = part_gj._executor.shard_report or {}
-        balance = report.get("skew", 1.0)
-        time_skew = report.get("time_skew", 1.0)
-        stragglers = len(report.get("stragglers", ()))
-        lines.append(csv_line(
-            f"dist/{name}_p{partitions}", part_wall * 1e6,
-            f"step_scaling={step_scaling:.2f}x;"
-            f"wall_scaling={wall_scaling:.2f}x;"
-            f"partition_var={pvar};join_size={mono_g.join_size};"
-            f"shard_skew={balance:.2f};time_skew={time_skew:.2f};"
-            f"stragglers={stragglers};partitions={partitions}"))
+            plan = part_gj.plan()
+            pvar = plan.partition_var
+            mono_step = mono_gj._executor.step_seconds.get(pvar, 0.0)
+            per_shard = _serial_shard_step_seconds(part_gj.enc, plan)
+            # fold the virtual-shard step times onto the worker count —
+            # the folded max is the per-device critical path
+            from repro.dist.partition import fold_loads
+            shard_step = float(fold_loads(
+                [s.get(pvar, 0.0) for s in per_shard],
+                plan.partitions).max())
+            step_scaling = mono_step / shard_step if shard_step > 0 else 0.0
+            wall_scaling = mono_wall / part_wall if part_wall > 0 else 0.0
+            # skew comes from the executor's shard report (the same
+            # per-shard matrix explain(analyze=True) renders) instead of
+            # being recomputed here — one measurement, every consumer
+            report = part_gj._executor.shard_report or {}
+            balance = report.get("skew", 1.0)
+            time_skew = report.get("time_skew", 1.0)
+            stragglers = len(report.get("stragglers", ()))
+            suffix = "" if executor == "thread" else f"_{executor}"
+            lines.append(csv_line(
+                f"dist/{name}_p{partitions}{suffix}", part_wall * 1e6,
+                f"step_scaling={step_scaling:.2f}x;"
+                f"wall_scaling={wall_scaling:.2f}x;"
+                f"partition_var={pvar};join_size={mono_g.join_size};"
+                f"shard_skew={balance:.2f};time_skew={time_skew:.2f};"
+                f"stragglers={stragglers};partitions={partitions};"
+                f"fold={plan.partition_fold};"
+                f"executor={executor};workers={report.get('workers', 0)};"
+                f"retries={report.get('retries', 0)};cpus={_cpus()}"))
+    from repro.dist.actions import shutdown_shared_executor
+    shutdown_shared_executor()
     return lines
 
 
@@ -124,21 +168,30 @@ def _row_multiset(gj, gfjs, all_vars) -> np.ndarray:
     return m[np.lexsort(m.T[::-1])]
 
 
-def smoke() -> int:
+def smoke(workers: int = 2) -> int:
+    from repro.dist.actions import shutdown_shared_executor
     from repro.relational.synth import lastfm_like
     from repro.summary.algebra import SummaryFrame
     cat, qs = lastfm_like(n_users=250, n_artists=180, artists_per_user=6,
                           friends_per_user=4, alpha=1.3, seed=3)
     failures = 0
-    for name in ("lastfm_A1", "lastfm_A2", "lastfm_cyc"):
+    cases = [(name, 4, "thread")
+             for name in ("lastfm_A1", "lastfm_A2", "lastfm_cyc")]
+    # the process path across real spawned shard workers — same exact-
+    # equality bar, acyclic + cyclic
+    cases += [(name, workers, "process")
+              for name in ("lastfm_A2", "lastfm_cyc")]
+    for name, parts, executor in cases:
         query = qs[name]
         mono_gj, mono_g, _ = _run(cat, query, 1)
-        part_gj, part_g, _ = _run(cat, query, 4)
+        part_gj, part_g, _ = _run(cat, query, parts,
+                                  shard_executor=executor)
         vs = sorted(query.variables)
         f0, f1 = SummaryFrame.of(mono_g), SummaryFrame.of(part_g)
         var, key = vs[0], vs[-1]
         t0 = f0.group_by(key, n="count", s=("sum", var), lo=("min", var))
         t1 = f1.group_by(key, n="count", s=("sum", var), lo=("min", var))
+        report = part_gj._executor.shard_report or {}
         ok = (part_g.join_size == mono_g.join_size
               and np.array_equal(_row_multiset(mono_gj, mono_g, vs),
                                  _row_multiset(part_gj, part_g, vs))
@@ -146,19 +199,23 @@ def smoke() -> int:
               and f1.sum(var) == f0.sum(var)
               and f1.min(var) == f0.min(var)
               and f1.max(var) == f0.max(var)
+              and report.get("executor") == executor
               and all(np.array_equal(np.asarray(t0[k]), np.asarray(t1[k]))
                       for k in t0))
-        print(f"dist-smoke {name}: join_size={mono_g.join_size} "
+        print(f"dist-smoke {name} [{executor} x{parts}]: "
+              f"join_size={mono_g.join_size} "
               f"shards={part_g.shard_sizes()} "
+              f"retries={report.get('retries', 0)} "
               f"{'OK' if ok else 'MISMATCH'}")
         if not ok:
             failures += 1
+    shutdown_shared_executor()
     try:
         import jax
         ndev = jax.device_count()
     except Exception:
         ndev = 0
-    print(f"dist-smoke devices={ndev}")
+    print(f"dist-smoke devices={ndev} cpus={_cpus()}")
     return 1 if failures else 0
 
 
@@ -169,12 +226,18 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the csv rows as a JSON summary")
     ap.add_argument("--partitions", type=int, default=4)
+    ap.add_argument("--shard-executor", default="both",
+                    choices=("thread", "process", "both"),
+                    help="which shard-executor rows to measure "
+                         "(smoke always covers both paths)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="process-pool workers for the smoke gate")
     ap.add_argument("--scale", type=float,
                     default=float(os.environ.get("BENCH_SCALE", "1.0")))
     args = ap.parse_args(argv)
     if args.smoke:
-        return smoke()
-    lines = bench_dist(args.partitions, args.scale)
+        return smoke(args.workers)
+    lines = bench_dist(args.partitions, args.scale, args.shard_executor)
     print("name,us_per_call,derived")
     for line in lines:
         print(line, flush=True)

@@ -44,6 +44,9 @@ def main() -> None:
     ap.add_argument("--trace", action="store_true",
                     help="write a Chrome trace (BENCH_<section>.trace.json) "
                          "per section, viewable at ui.perfetto.dev")
+    ap.add_argument("--shard-executor", default="both",
+                    choices=("thread", "process", "both"),
+                    help="which shard-executor rows the dist section runs")
     args = ap.parse_args()
 
     Tracer = None
@@ -68,7 +71,7 @@ def main() -> None:
     def dist_section(tmp):
         from benchmarks.dist_bench import bench_dist
         from benchmarks.kernels_bench import write_json
-        lines = bench_dist()
+        lines = bench_dist(shard_executor=args.shard_executor)
         if args.dist_json:
             write_json(lines, args.dist_json)
         return lines

@@ -55,7 +55,11 @@ class GraphicalJoin:
     ``run()`` returns a :class:`~repro.core.gfjs.ShardedGFJS` whose shards
     were built independently (``partition_var`` overrides the planner's
     partition-key choice; incremental refresh is unsupported and falls
-    back to rebuild); ``tracer`` / ``metrics`` plug a
+    back to rebuild); ``shard_executor`` picks where shard pipelines run
+    ("thread" — default — or "process": the repro/dist/actions.py spawn
+    pool), ``partition_fold`` over-partitions for skew smoothing, and
+    ``shard_timeout`` (seconds) bounds each process-shard action before
+    the degrade-to-thread retry; ``tracer`` / ``metrics`` plug a
     :class:`repro.obs.Tracer` / :class:`repro.obs.MetricsRegistry` into
     every phase (off by default — see repro/obs and ``explain(analyze=True)``).
     """
@@ -73,6 +77,9 @@ class GraphicalJoin:
         generation_backend: Optional[str] = None,
         partitions: Optional[int] = None,
         partition_var: Optional[str] = None,
+        partition_fold: Optional[int] = None,
+        shard_executor: Optional[str] = None,
+        shard_timeout: Optional[float] = None,
         tracer=None,
         metrics=None,
     ) -> None:
@@ -89,6 +96,9 @@ class GraphicalJoin:
             generation_backend=generation_backend,
             partitions=partitions,
             partition_var=partition_var,
+            partition_fold=partition_fold,
+            shard_executor=shard_executor,
+            shard_timeout=shard_timeout,
             tracer=tracer,
             metrics=metrics,
         )

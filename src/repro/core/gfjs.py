@@ -75,10 +75,18 @@ class GFJS:
         return int(sum(l.num_runs for l in self.levels))
 
     def bounds(self, level: int) -> np.ndarray:
-        """Cached inclusive prefix sums of a level's run lengths."""
-        if level not in self._bounds:
-            self._bounds[level] = np.cumsum(self.levels[level].freq)
-        return self._bounds[level]
+        """Cached inclusive prefix sums of a level's run lengths.
+
+        Lockless: concurrent callers may both compute and one insert wins
+        (the arrays are identical).  Return the local value, never re-read
+        the dict — a concurrent eviction between insert and read would
+        KeyError otherwise.
+        """
+        b = self._bounds.get(level)
+        if b is None:
+            b = np.cumsum(self.levels[level].freq)
+            self._bounds[level] = b
+        return b
 
     def aux_nbytes(self) -> int:
         """Bytes held by the lazily-built expansion caches.
@@ -87,12 +95,25 @@ class GFJS:
         (one entry per level each) but invisible to :meth:`nbytes`, which
         stays the *serialized* summary size (the paper's Table-4 metric).
         """
-        # list() snapshots are single C calls (atomic under the GIL): other
-        # threads holding this GFJS insert into these dicts lockless (via
-        # bounds()/gfjs_expand_meta), and a Python-level iteration here
-        # would race them into "dict changed size during iteration"
-        n = sum(int(b.nbytes) for b in list(self._bounds.values()))
-        for _, meta in list(self._launch.values()):
+        # other threads holding this GFJS insert into these dicts lockless
+        # (via bounds()/gfjs_expand_meta), so snapshot the KEYS first and
+        # re-fetch each entry with .get(): a key list is detached from the
+        # dict the instant it is built, whereas iterating values()/items()
+        # views — even wrapped in list() — keys off dict internals that a
+        # concurrent insert may resize.  An entry replaced mid-walk yields
+        # its new value; one racing in/out is simply skipped — either way
+        # the measurement stays a valid point-in-time bound, never a
+        # "dict changed size during iteration"
+        n = 0
+        for lvl in list(self._bounds):
+            b = self._bounds.get(lvl)
+            if b is not None:
+                n += int(b.nbytes)
+        for lvl in list(self._launch):
+            entry = self._launch.get(lvl)
+            if entry is None:
+                continue
+            _, meta = entry
             n += sum(int(getattr(a, "nbytes", 0)) for a in meta)
         return int(n)
 

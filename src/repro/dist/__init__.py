@@ -19,11 +19,17 @@ stay jax-free (see ``plan/search.py::_select_backends``).
 
 _SHARDING = {"ShardingRules", "DEFAULT_RULES", "SP_FSDP_RULES", "param_specs"}
 _ACT = {"constrain", "use"}
-_PARTITION = {"PartitionScheme", "choose_partition_var", "hash_partition",
+_PARTITION = {"PartitionScheme", "choose_partition_fold",
+              "choose_partition_var", "fold_loads", "hash_partition",
               "parallel_desummarize", "partition_counts", "partition_encoded",
               "partition_histogram", "sharded_potential_counts"}
+_ACTIONS = {"ShardBuildAction", "ShardBuildResult", "DispatchOutcome",
+            "ProcessShardExecutor", "encode_action", "decode_action",
+            "encode_result", "decode_result", "perform_action",
+            "run_shard_action", "shared_shard_executor",
+            "shutdown_shared_executor"}
 
-__all__ = sorted(_SHARDING | _ACT | _PARTITION)
+__all__ = sorted(_SHARDING | _ACT | _PARTITION | _ACTIONS)
 
 
 def __getattr__(name):
@@ -35,4 +41,6 @@ def __getattr__(name):
                        name)
     if name in _PARTITION:
         return getattr(importlib.import_module("repro.dist.partition"), name)
+    if name in _ACTIONS:
+        return getattr(importlib.import_module("repro.dist.actions"), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -81,24 +81,131 @@ class PartitionScheme:
         return hash_partition(codes, self.num_partitions, salt=self.salt)
 
 
-def choose_partition_var(steps: Sequence, order: Sequence[str]) -> str:
-    """Default partition key: the variable of the costliest estimated step.
+def _aggregate_degrees(stats, var: str):
+    """Summed degree vector of ``var`` over every factor containing it.
 
-    Partitioning on a step's eliminated variable shards that step and
-    everything downstream of it in the message-flow DAG, so the planner
-    aims the split at the estimated bottleneck.  Ties break toward the
-    earlier step (more downstream work sharded); a step-less plan (single
-    variable) falls back to the root.
+    The hash partitions *codes*, so the unit of placement is one code's
+    total row mass across the partitioned occurrences — exactly this sum.
+    ``None`` when no factor kept a degree vector for ``var`` (domain past
+    ``DEGREE_CAP``), in which case skew is unknowable from the stats.
+    """
+    total = None
+    for fs in stats.factor_stats:
+        deg = fs.degrees.get(var)
+        if deg is None:
+            continue
+        total = deg.copy() if total is None else total + deg
+    return total
+
+
+def _top_key_share(stats, var: str) -> float:
+    """Mass fraction of ``var``'s heaviest code (0.0 when unknown).
+
+    A code is atomic under hash partitioning: whichever shard its heaviest
+    code lands on carries at least this fraction of the partitioned work,
+    so ``1 / top_key_share`` caps achievable speedup no matter how many
+    shards are cut ("Skew Strikes Back": the degree distribution, not the
+    cardinality, decides what parallelism buys).
+    """
+    deg = _aggregate_degrees(stats, var)
+    if deg is None:
+        return 0.0
+    total = float(deg.sum())
+    if total <= 0.0:
+        return 0.0
+    return float(deg.max()) / total
+
+
+def choose_partition_var(steps: Sequence, order: Sequence[str],
+                         stats=None, partitions: int = 1) -> str:
+    """Partition key: the costliest step, discounted by key skew.
+
+    Base rule (and the whole rule when ``stats`` is absent): the variable
+    of the costliest estimated step — partitioning on a step's eliminated
+    variable shards that step and everything downstream of it in the
+    message-flow DAG.
+
+    With ``stats``, each candidate's product mass is discounted by how
+    much of it is *unparallelizable*: a variable whose heaviest code holds
+    share ``s`` of its row mass cannot spread below ``max(s, 1/k)`` on one
+    shard, so the shardable benefit is ``product_entries * (1 - cap)``.
+    A huge step on a one-hot-key variable (cap -> 1) loses to a slightly
+    smaller step that actually splits.  Ties (including the balanced case
+    where every cap is 1/k) break toward higher raw product then earlier
+    step, which degenerates to the base rule.
     """
     best = None
-    for s in steps:
-        if best is None or s.product_entries > best.product_entries:
-            best = s
+    best_score = None
+    for pos, s in enumerate(steps):
+        if stats is not None and partitions > 1:
+            cap = max(_top_key_share(stats, s.var), 1.0 / partitions)
+            score = (s.product_entries * (1.0 - cap), s.product_entries,
+                     -pos)
+        else:
+            score = (s.product_entries, -pos)
+        if best_score is None or score > best_score:
+            best, best_score = s, score
     if best is not None:
         return best.var
     if not order:
         raise ValueError("cannot choose a partition variable: empty order")
     return order[-1]
+
+
+def fold_loads(sizes: Sequence[float], workers: int) -> np.ndarray:
+    """Greedy largest-first (LPT) fold of shard loads onto ``workers`` bins.
+
+    Models what a work-stealing pool does with over-partitioned shards:
+    big shards land first, small ones fill the valleys.  Used both to
+    *predict* folded balance (:func:`choose_partition_fold`) and to
+    *report* it (the executor's ``shard_report`` skew is computed over
+    these per-worker loads, so fold=1 degenerates to per-shard skew).
+    """
+    workers = max(1, int(workers))
+    loads = np.zeros(workers, np.float64)
+    for s in sorted((float(s) for s in sizes), reverse=True):
+        loads[int(np.argmin(loads))] += s
+    return loads
+
+
+def choose_partition_fold(stats, var: str, partitions: int, *,
+                          max_fold: int = 8, target_skew: float = 1.2,
+                          salt: int = 0) -> int:
+    """Over-partitioning factor ``f``: cut ``partitions * f`` virtual
+    shards so folding can smooth hash unluck.
+
+    With exactly ``k`` shards, one hot code landing next to a merely warm
+    one doubles that shard; with ``k*f`` virtual shards folded back onto
+    ``k`` workers, the fold redistributes everything *except* the atomic
+    hot codes.  Simulates the real ``hash_partition`` on ``var``'s
+    aggregate degree vector and picks the smallest ``f`` whose predicted
+    folded worker skew (max/mean) meets ``target_skew``; if none does
+    (e.g. a single code holds half the mass), the best-predicted ``f``
+    wins.  Returns 1 when no degree vector exists or shards are already
+    balanced — over-partitioning is pure overhead then.
+    """
+    partitions = max(1, int(partitions))
+    if partitions == 1:
+        return 1
+    deg = None if stats is None else _aggregate_degrees(stats, var)
+    if deg is None or float(deg.sum()) <= 0.0:
+        return 1
+    codes = np.arange(len(deg))
+    best_f, best_skew = 1, np.inf
+    f = 1
+    while f <= max_fold:
+        pids = hash_partition(codes, partitions * f, salt=salt)
+        shard_loads = np.bincount(pids, weights=deg,
+                                  minlength=partitions * f)
+        worker = fold_loads(shard_loads, partitions)
+        mean = float(worker.mean())
+        skew = float(worker.max()) / mean if mean > 0 else 1.0
+        if skew < best_skew - 1e-12:
+            best_f, best_skew = f, skew
+        if skew <= target_skew:
+            return f
+        f *= 2
+    return best_f
 
 
 def partition_encoded(enc: EncodedQuery,

@@ -174,6 +174,38 @@ class MetricsRegistry:
                 raise ValueError(f"unknown instrument type {kind!r} for {name!r}")
         return reg
 
+    def merge(self, snap: Dict[str, Dict[str, Any]]) -> None:
+        """Fold another registry's ``snapshot()`` into this one.
+
+        The cross-process half of observability: shard workers snapshot
+        their (freshly reset) registry and the coordinator merges every
+        reply, so ``kernels.*`` / ``gfjs.*`` numbers look the same whether
+        shards ran on threads or processes.  Counters add, gauges take the
+        incoming value (last writer wins, same as ``set``), histograms
+        merge bucket-wise.
+        """
+        for name, s in snap.items():
+            kind = s.get("type")
+            if kind == "counter":
+                self.counter(name, s.get("unit", "")).inc(s["value"])
+            elif kind == "gauge":
+                self.gauge(name, s.get("unit", "")).set(s["value"])
+            elif kind == "histogram":
+                h = self.histogram(name, s.get("unit", ""))
+                with h._lock:
+                    h.count += s["count"]
+                    h.sum += s["sum"]
+                    if s["min"] is not None and s["min"] < h.min:
+                        h.min = s["min"]
+                    if s["max"] is not None and s["max"] > h.max:
+                        h.max = s["max"]
+                    for b, n in s["buckets"].items():
+                        b = int(b)
+                        h._buckets[b] = h._buckets.get(b, 0) + n
+            else:
+                raise ValueError(
+                    f"unknown instrument type {kind!r} for {name!r}")
+
     def reset(self) -> None:
         with self._lock:
             self._instruments.clear()

@@ -226,6 +226,51 @@ class Tracer:
             json.dump(self.to_chrome_trace(), f)
         return path
 
+    # -- cross-process stitching -------------------------------------------
+    def records(self) -> List[Dict[str, Any]]:
+        """Finished spans as plain JSON-able dicts (the shard-action wire
+        format's span payload).  Times are this tracer's ``perf_counter``
+        values — meaningless in another process until :meth:`graft`
+        rebases them."""
+        return [{"name": s.name, "cat": s.cat, "span_id": s.span_id,
+                 "parent_id": s.parent_id, "tid": s.tid,
+                 "t0": s.t0, "t1": s.t1,
+                 "args": {k: _jsonable(v) for k, v in s.args.items()}}
+                for s in self.spans]
+
+    def graft(self, records: List[Dict[str, Any]], *, parent: Any = None,
+              offset: float = 0.0) -> List[Span]:
+        """Re-home span records from another process under ``parent``.
+
+        Every record gets a fresh span id from this process's counter;
+        parent links *within* the record set are remapped, records whose
+        parent is unknown (the worker's root) attach to ``parent``
+        (a :class:`Span`, or None for top-level).  ``offset`` is added to
+        every timestamp — the coordinator computes it so the worker's
+        clock lands inside the observed dispatch window (the two
+        ``perf_counter`` epochs are otherwise incomparable).
+
+        Returns the grafted spans in record order (callers typically keep
+        the worker's root to annotate wall/straggler facts onto).
+        """
+        base = parent.span_id if isinstance(parent, Span) else None
+        idmap: Dict[int, int] = {}
+        out: List[Span] = []
+        for r in records:
+            sp = Span(name=r["name"], cat=r.get("cat", "op"),
+                      span_id=next(_IDS), parent_id=None,
+                      tid=int(r.get("tid", 0)),
+                      t0=float(r["t0"]) + offset, t1=float(r["t1"]) + offset,
+                      args=dict(r.get("args", {})))
+            if r.get("span_id") is not None:
+                idmap[r["span_id"]] = sp.span_id
+            out.append(sp)
+        for r, sp in zip(records, out):
+            pid = r.get("parent_id")
+            sp.parent_id = idmap.get(pid, base) if pid is not None else base
+            self._record(sp)
+        return out
+
 
 def _jsonable(v: Any) -> Any:
     """Coerce numpy scalars etc. so ``json.dump`` never chokes on args."""

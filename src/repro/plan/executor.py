@@ -44,6 +44,9 @@ class Executor:
                  generation_backend: Optional[str] = None,
                  partitions: Optional[int] = None,
                  partition_var: Optional[str] = None,
+                 partition_fold: Optional[int] = None,
+                 shard_executor: Optional[str] = None,
+                 shard_timeout: Optional[float] = None,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None) -> None:
         self.catalog = catalog
@@ -67,6 +70,14 @@ class Executor:
         # only as a misleading capture_state error much later
         self.partitions = partitions
         self.partition_var = partition_var
+        # process-parallel shards (repro/dist/actions.py): "process" sends
+        # shard builds to the spawn-based worker pool; fold over-partitions
+        # for skew smoothing; shard_timeout (seconds) bounds each action
+        # before the degrade-to-thread retry — a runtime knob, not plan
+        # identity, so it lives here and not on the PhysicalPlan
+        self.partition_fold = partition_fold
+        self.shard_executor = shard_executor
+        self.shard_timeout = shard_timeout
         if record_trace and (
                 (partitions is not None and partitions > 1)
                 or (plan is not None and plan.partitions > 1)):
@@ -186,7 +197,9 @@ class Executor:
                 planner=self.planner,
                 generation_backend=self.generation_backend,
                 partitions=self.partitions,
-                partition_var=self.partition_var)
+                partition_var=self.partition_var,
+                partition_fold=self.partition_fold,
+                shard_executor=self.shard_executor)
         self.timings["plan"] = time.perf_counter() - t0
         return self.plan
 
@@ -255,64 +268,64 @@ class Executor:
         Shard spans are opened from worker threads with the summarize
         phase span handed across explicitly (ambient context never
         crosses the pool boundary).
+
+        ``plan.partition_fold`` > 1 cuts ``partitions * fold`` *virtual*
+        shards: the pool still runs ``partitions`` workers, and free
+        workers pulling queued shards is the fold that smooths hash skew
+        (DESIGN §17).  ``plan.shard_executor == "process"`` dispatches the
+        virtual shards to the repro/dist/actions.py spawn pool instead of
+        the thread pool — except under the jax backend, where device work
+        already overlaps across threads and a second process would mean a
+        second XLA runtime.  Worker span records are grafted under the
+        summarize phase span and worker metrics merged into this
+        executor's registry, so explain(analyze=True)/shard_report keep
+        the same shape on every path.
         """
         if self._sharded is not None:
             return self._sharded
         from repro.dist.partition import PartitionScheme, partition_encoded
+        nshards = plan.partitions * max(1, plan.partition_fold)
         with self._phase("partition", partitions=plan.partitions,
-                         partition_var=plan.partition_var):
+                         partition_var=plan.partition_var,
+                         fold=plan.partition_fold):
             t0 = time.perf_counter()
-            scheme = PartitionScheme(plan.partition_var, plan.partitions)
+            scheme = PartitionScheme(plan.partition_var, nshards)
             shard_encs = partition_encoded(self.enc, scheme)
             self.timings["partition"] = time.perf_counter() - t0
 
         backend = plan.backends.get("summarize", "numpy")
         order = list(plan.order)
         # expected per-shard product: the shards partition the monolithic
-        # product exactly, so 1/k of the planner estimate per step
-        shard_est = {s.var: s.product_entries / plan.partitions
+        # product exactly, so 1/nshards of the planner estimate per step
+        shard_est = {s.var: s.product_entries / nshards
                      for s in plan.steps}
+        use_process = plan.shard_executor == "process" and backend != "jax"
 
         with self._phase("summarize", backend=backend,
-                         partitions=plan.partitions) as parent_sp:
+                         partitions=plan.partitions,
+                         executor=plan.shard_executor) as parent_sp:
             tracer = self.tracer if self.tracer is not None \
                 else ambient_tracer()
-
-            def run_shard(item):
-                i, enc_s = item
-                t_s = time.perf_counter()
-                with span_in(tracer, parent_sp, f"shard:{i}", cat="shard",
-                             shard=i) as sp:
-                    gen = build_generator(
-                        enc_s, elimination_order=order,
-                        early_projection=plan.early_projection,
-                        step_estimates=shard_est)
-                    if backend == "jax":
-                        from repro.core.engine_jax import generate_gfjs_jax
-                        gfjs = generate_gfjs_jax(gen, enc_s.domains)
-                    else:
-                        gfjs = generate_gfjs(gen, enc_s.domains)
-                    sp.set(rows=gfjs.join_size)
-                return i, gen, gfjs, time.perf_counter() - t_s, sp
-
             t1 = time.perf_counter()
-            with ThreadPoolExecutor(max_workers=plan.partitions) as pool:
-                results = list(pool.map(run_shard, enumerate(shard_encs)))
-            gens = [g for _, g, _, _, _ in results]
-            shards = [s for _, _, s, _, _ in results]
-            shard_walls = [w for _, _, _, w, _ in results]
-            shard_spans = [sp for _, _, _, _, sp in results]
+            if use_process:
+                shards, shard_walls, shard_matrix, shard_spans, \
+                    shard_products, retries = self._run_shards_process(
+                        plan, shard_encs, order, shard_est, parent_sp,
+                        tracer)
+            else:
+                shards, shard_walls, shard_matrix, shard_spans, \
+                    shard_products, retries = self._run_shards_thread(
+                        plan, shard_encs, order, shard_est, backend,
+                        parent_sp, tracer)
 
             self.step_actuals = {}
             self.step_seconds = {}
             self.step_seconds_sum = {}
-            shard_matrix: List[Dict[str, float]] = []
-            for g in gens:
-                shard_matrix.append(dict(g.step_seconds))
-                for v, n in g.step_products.items():
+            for products, seconds in zip(shard_products, shard_matrix):
+                for v, n in products.items():
                     self.step_actuals[v] = \
                         self.step_actuals.get(v, 0.0) + float(n)
-                for v, dt in g.step_seconds.items():
+                for v, dt in seconds.items():
                     self.step_seconds[v] = \
                         max(self.step_seconds.get(v, 0.0), dt)
                     self.step_seconds_sum[v] = \
@@ -327,23 +340,121 @@ class Executor:
             )
             self.timings["summarize"] = time.perf_counter() - t1
             self.shard_report = self._make_shard_report(
-                sharded, shard_walls, shard_matrix, shard_spans)
+                sharded, shard_walls, shard_matrix, shard_spans,
+                workers=plan.partitions,
+                executor="process" if use_process else "thread",
+                retries=retries)
         self._sharded = sharded
         return sharded
+
+    def _run_shards_thread(self, plan, shard_encs, order, shard_est,
+                           backend, parent_sp, tracer):
+        """The GIL-sharing pool: ``partitions`` worker threads pull the
+        (possibly over-partitioned) shard queue."""
+
+        def run_shard(item):
+            i, enc_s = item
+            t_s = time.perf_counter()
+            with span_in(tracer, parent_sp, f"shard:{i}", cat="shard",
+                         shard=i) as sp:
+                gen = build_generator(
+                    enc_s, elimination_order=order,
+                    early_projection=plan.early_projection,
+                    step_estimates=shard_est)
+                if backend == "jax":
+                    from repro.core.engine_jax import generate_gfjs_jax
+                    gfjs = generate_gfjs_jax(gen, enc_s.domains)
+                else:
+                    gfjs = generate_gfjs(gen, enc_s.domains)
+                sp.set(rows=gfjs.join_size)
+            return gen, gfjs, time.perf_counter() - t_s, sp
+
+        with ThreadPoolExecutor(max_workers=plan.partitions) as pool:
+            results = list(pool.map(run_shard, enumerate(shard_encs)))
+        return ([gfjs for _, gfjs, _, _ in results],
+                [w for _, _, w, _ in results],
+                [dict(g.step_seconds) for g, _, _, _ in results],
+                [sp for _, _, _, sp in results],
+                [dict(g.step_products) for g, _, _, _ in results],
+                0)
+
+    def _run_shards_process(self, plan, shard_encs, order, shard_est,
+                            parent_sp, tracer):
+        """Dispatch shard builds to the repro/dist/actions.py spawn pool.
+
+        One :class:`ShardBuildAction` per virtual shard; the shared
+        persistent pool runs ``plan.partitions`` worker processes.  Each
+        reply's span records are grafted under the summarize phase span —
+        rebased so the worker's root lands at its observed completion time
+        (worker and coordinator ``perf_counter`` epochs are otherwise
+        incomparable) — and its metrics snapshot is merged, so the
+        analyze/report surface matches the thread path shape-for-shape.
+        A failed or timed-out worker already came back via the inline
+        thread retry inside the pool (degrade, don't kill the query).
+        """
+        from repro.dist.actions import (ShardBuildAction,
+                                        shared_shard_executor)
+        from repro.obs.trace import NULL_SPAN
+        actions = [
+            ShardBuildAction(shard=i, enc=enc_s, order=tuple(order),
+                             early_projection=plan.early_projection,
+                             backend="numpy", step_estimates=shard_est)
+            for i, enc_s in enumerate(shard_encs)]
+        pool = shared_shard_executor(plan.partitions)
+        outcomes = pool.run(actions, timeout=self.shard_timeout)
+
+        shards, walls, matrix, spans, products = [], [], [], [], []
+        retries = 0
+        for out in outcomes:
+            res = out.result
+            retries += 1 if out.retried else 0
+            shards.append(res.gfjs)
+            walls.append(res.build_seconds)
+            matrix.append(dict(res.step_seconds))
+            products.append(dict(res.step_products))
+            if res.metrics:
+                self.metrics.merge(res.metrics)
+            root = NULL_SPAN
+            if tracer is not None and res.spans:
+                # the worker's root span is its last-closed record; rebase
+                # so it ends at the observed completion instant (graft
+                # ignores a non-Span parent, so NULL_SPAN is safe)
+                offset = out.t_done - float(res.spans[-1]["t1"])
+                grafted = tracer.graft(res.spans, parent=parent_sp,
+                                       offset=offset)
+                root = grafted[-1]
+                root.set(retried=out.retried)
+            spans.append(root)
+        return shards, walls, matrix, spans, products, retries
 
     def _make_shard_report(self, sharded: ShardedGFJS,
                            walls: List[float],
                            matrix: List[Dict[str, float]],
-                           spans: List[Any]) -> Dict[str, Any]:
+                           spans: List[Any], *,
+                           workers: Optional[int] = None,
+                           executor: str = "thread",
+                           retries: int = 0) -> Dict[str, Any]:
         """Per-shard breakdown + skew + stragglers (satellite of the old
         lossy max-reduction): this is what explain(analyze=True) renders
-        and what dist_bench derives its skew numbers from."""
+        and what dist_bench derives its skew numbers from.
+
+        Skew is computed over per-*worker* loads: the (possibly
+        over-partitioned) virtual-shard sizes/walls are folded onto
+        ``workers`` bins first (repro/dist/partition.py::fold_loads — the
+        same LPT model the planner used to pick the fold), so fold=1
+        degenerates to the old per-shard skew and fold>1 reports the
+        balance the pool actually achieves, not the raw hash spread.
+        """
+        from repro.dist.partition import fold_loads
         from repro.ft.straggler import flag_shard_stragglers
+        workers = len(sharded.shards) if workers is None else workers
         sizes = [int(s.join_size) for s in sharded.shards]
-        mean_size = sum(sizes) / len(sizes) if sizes else 0.0
-        mean_wall = sum(walls) / len(walls) if walls else 0.0
-        skew = max(sizes) / mean_size if mean_size > 0 else 1.0
-        time_skew = max(walls) / mean_wall if mean_wall > 0 else 1.0
+        w_sizes = fold_loads(sizes, workers)
+        w_walls = fold_loads(walls, workers)
+        mean_size = float(w_sizes.mean()) if len(w_sizes) else 0.0
+        mean_wall = float(w_walls.mean()) if len(w_walls) else 0.0
+        skew = float(w_sizes.max()) / mean_size if mean_size > 0 else 1.0
+        time_skew = float(w_walls.max()) / mean_wall if mean_wall > 0 else 1.0
         stragglers = flag_shard_stragglers(walls)
         straggler_ids = {s.shard for s in stragglers}
         for i, sp in enumerate(spans):
@@ -352,6 +463,8 @@ class Executor:
         self.metrics.gauge("dist.time_skew", unit="x").set(time_skew)
         if stragglers:
             self.metrics.counter("dist.stragglers").inc(len(stragglers))
+        if retries:
+            self.metrics.counter("dist.shard_degraded").inc(retries)
         for w in walls:
             self.metrics.histogram("dist.shard_seconds", unit="s").observe(w)
         return {
@@ -361,6 +474,9 @@ class Executor:
             "skew": skew,
             "time_skew": time_skew,
             "stragglers": stragglers,
+            "executor": executor,
+            "workers": workers,
+            "retries": retries,
         }
 
     def run(self) -> Union[GFJS, ShardedGFJS]:

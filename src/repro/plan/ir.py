@@ -66,9 +66,15 @@ class PhysicalPlan:
     planner: str = "cost"
     search_seconds: float = 0.0
     # hash-partitioned execution (repro/dist/partition.py): split into
-    # ``partitions`` shards on hash(partition_var); 1 = monolithic
+    # ``partitions`` shards on hash(partition_var); 1 = monolithic.
+    # ``partition_fold`` over-partitions: partitions * fold virtual shards
+    # folded back onto ``partitions`` workers (skew smoothing, DESIGN §17);
+    # ``shard_executor`` picks where shard pipelines run ("thread" — the
+    # GIL-bound pool — or "process": the repro/dist/actions.py worker pool).
     partitions: int = 1
     partition_var: Optional[str] = None
+    partition_fold: int = 1
+    shard_executor: str = "thread"
 
     # -- delta support -----------------------------------------------------
     def dirty_steps(self, table: str) -> Tuple[str, ...]:
@@ -111,6 +117,8 @@ class PhysicalPlan:
             # keep their historical signatures (and spilled cache entries)
             canon["partitions"] = int(self.partitions)
             canon["partition_var"] = self.partition_var
+            canon["partition_fold"] = int(self.partition_fold)
+            canon["shard_executor"] = self.shard_executor
         return hashlib.sha256(
             json.dumps(canon, separators=(",", ":")).encode()).hexdigest()[:16]
 
@@ -148,8 +156,13 @@ class PhysicalPlan:
             f"   (search {self.search_seconds * 1e3:.2f}ms)",
         ]
         if self.partitions > 1:
-            lines.insert(5, f"  partitions        : {self.partitions} "
-                            f"by hash({self.partition_var})")
+            part = (f"  partitions        : {self.partitions} "
+                    f"by hash({self.partition_var})")
+            if self.partition_fold > 1:
+                part += (f" x{self.partition_fold} fold "
+                         f"({self.partitions * self.partition_fold} virtual)")
+            part += f"  executor={self.shard_executor}"
+            lines.insert(5, part)
         if self.steps:
             lines.append("  steps:")
             for s in self.steps:
@@ -187,6 +200,13 @@ class PhysicalPlan:
             lines.append(
                 f"    skew: rows={shard_report.get('skew', 1.0):.2f}x  "
                 f"time={shard_report.get('time_skew', 1.0):.2f}x")
+            if shard_report.get("executor"):
+                line = (f"    executor: {shard_report['executor']} "
+                        f"workers={shard_report.get('workers', '?')}")
+                if shard_report.get("retries"):
+                    line += (f"  degraded={shard_report['retries']} "
+                             "(retried on threads)")
+                lines.append(line)
         if self.alternatives:
             lines.append("  candidates:")
             for c in self.alternatives:

@@ -127,7 +127,9 @@ def plan_query(enc: EncodedQuery, *,
                stats: Optional[QueryStats] = None,
                generation_backend: Optional[str] = None,
                partitions: Optional[int] = None,
-               partition_var: Optional[str] = None
+               partition_var: Optional[str] = None,
+               partition_fold: Optional[int] = None,
+               shard_executor: Optional[str] = None
                ) -> Tuple[LogicalPlan, PhysicalPlan]:
     """Logical + physical plan for an encoded query.
 
@@ -141,8 +143,13 @@ def plan_query(enc: EncodedQuery, *,
     ``partitions`` > 1 pins hash-partitioned execution
     (repro/dist/partition.py): the executor splits the encoded potentials
     into that many shards on ``partition_var`` (default: the eliminated
-    variable of the costliest estimated step) and runs the shards
-    independently, producing a ``ShardedGFJS``.
+    variable of the costliest estimated step, discounted by key skew) and
+    runs the shards independently, producing a ``ShardedGFJS``.
+    ``shard_executor`` picks where shard pipelines run: ``"thread"``
+    (default) or ``"process"`` — the repro/dist/actions.py worker pool.
+    ``partition_fold`` over-partitions into ``partitions * fold`` virtual
+    shards folded back onto ``partitions`` workers (skew smoothing);
+    default: auto-chosen from the degree stats (1 when balanced).
     """
     if generation_backend not in (None, "numpy", "jax"):
         raise ValueError(
@@ -154,6 +161,22 @@ def plan_query(enc: EncodedQuery, *,
         raise ValueError(
             f"partition_var={partition_var!r} requires partitions > 1 "
             "(a monolithic plan would silently ignore it)")
+    if shard_executor not in (None, "thread", "process"):
+        raise ValueError(f"unknown shard executor {shard_executor!r} "
+                         "(have: thread, process)")
+    if partitions == 1 and shard_executor is not None:
+        raise ValueError(
+            f"shard_executor={shard_executor!r} requires partitions > 1 "
+            "(a monolithic plan would silently ignore it)")
+    if partition_fold is not None:
+        partition_fold = int(partition_fold)
+        if partition_fold < 1:
+            raise ValueError(
+                f"partition_fold must be >= 1, got {partition_fold}")
+        if partitions == 1 and partition_fold != 1:
+            raise ValueError(
+                f"partition_fold={partition_fold} requires partitions > 1 "
+                "(a monolithic plan would silently ignore it)")
     t0 = time.perf_counter()
     from repro.obs.trace import span as _span
     with _span("plan:search", cat="plan", planner=planner):
@@ -162,13 +185,15 @@ def plan_query(enc: EncodedQuery, *,
             early_projection=early_projection, planner=planner,
             beam_width=beam_width, stats=stats,
             generation_backend=generation_backend,
-            partitions=partitions, partition_var=partition_var)
+            partitions=partitions, partition_var=partition_var,
+            partition_fold=partition_fold, shard_executor=shard_executor)
 
 
 def _plan_query_inner(enc: EncodedQuery, t0: float, *,
                       elimination_order, early_projection, planner,
                       beam_width, stats, generation_backend,
-                      partitions, partition_var
+                      partitions, partition_var,
+                      partition_fold=None, shard_executor=None
                       ) -> Tuple[LogicalPlan, PhysicalPlan]:
     logical = build_logical_plan(enc, early_projection=early_projection,
                                  stats=stats)
@@ -211,14 +236,20 @@ def _plan_query_inner(enc: EncodedQuery, t0: float, *,
     if generation_backend is not None:
         backends["summarize"] = generation_backend
     if partitions > 1:
+        # jax-free import: dist.partition keeps its device imports lazy
+        from repro.dist.partition import (choose_partition_fold,
+                                          choose_partition_var)
         if partition_var is None:
-            # jax-free import: dist.partition keeps its device imports lazy
-            from repro.dist.partition import choose_partition_var
-            partition_var = choose_partition_var(steps, chosen.order)
+            partition_var = choose_partition_var(
+                steps, chosen.order, stats=logical.stats,
+                partitions=partitions)
         elif partition_var not in graph.variables:
             raise ValueError(
                 f"partition variable {partition_var!r} is not a query "
                 f"variable (have: {sorted(graph.variables)})")
+        if partition_fold is None:
+            partition_fold = choose_partition_fold(
+                logical.stats, partition_var, partitions)
     physical = PhysicalPlan(
         query_name=query.name,
         order=chosen.order,
@@ -233,5 +264,7 @@ def _plan_query_inner(enc: EncodedQuery, t0: float, *,
         search_seconds=time.perf_counter() - t0,
         partitions=partitions,
         partition_var=partition_var,
+        partition_fold=partition_fold if partition_fold else 1,
+        shard_executor=shard_executor if shard_executor else "thread",
     )
     return logical, physical

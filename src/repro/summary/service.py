@@ -103,7 +103,9 @@ class JoinService:
                  max_states: int = 16,
                  max_state_bytes: int = 512 << 20,
                  max_pending_deltas: int = 64,
-                 partitions: int = 1) -> None:
+                 partitions: int = 1,
+                 partition_fold: Optional[int] = None,
+                 shard_executor: Optional[str] = None) -> None:
         self.catalog = catalog
         self.cache = cache if cache is not None else SummaryCache(
             byte_budget=byte_budget, spill_dir=spill_dir,
@@ -114,6 +116,12 @@ class JoinService:
         # signature, and appends fall back to rebuild (no splice-refresh of
         # sharded summaries) — the aggregate API is shape-oblivious
         self.partitions = int(partitions)
+        # partitioned-execution knobs, pinned into every compiled plan:
+        # shard_executor="process" routes shard builds to the
+        # repro/dist/actions.py spawn pool; partition_fold over-partitions
+        # for skew smoothing (None = planner auto-choice from stats)
+        self.partition_fold = partition_fold
+        self.shard_executor = shard_executor
         self.max_plans = int(max_plans)
         self.incremental = bool(incremental)
         self.max_states = int(max_states)
@@ -161,7 +169,9 @@ class JoinService:
                 self._plans.move_to_end(pkey)
                 return hit[0]
         gj = GraphicalJoin(self.catalog, query, planner=self.planner,
-                           partitions=self.partitions)
+                           partitions=self.partitions,
+                           partition_fold=self.partition_fold,
+                           shard_executor=self.shard_executor)
         plan = gj.plan()
         with self._lock:
             self._remember_plan(
@@ -211,7 +221,9 @@ class JoinService:
                 gj = GraphicalJoin(self.catalog, query, planner=self.planner,
                                    record_trace=self.incremental
                                    and self.partitions == 1,
-                                   partitions=self.partitions)
+                                   partitions=self.partitions,
+                                   partition_fold=self.partition_fold,
+                                   shard_executor=self.shard_executor)
                 plan = gj.plan()
                 with self._lock:
                     self._remember_plan(

@@ -1,0 +1,313 @@
+"""Shard-build action protocol + process-pool shard executor (DESIGN §17).
+
+The contract: a ``shard_executor="process"`` plan produces *exactly* the
+monolithic / thread-sharded answer — same join_size, same desummarized row
+multiset, same aggregate values — while the shard pipelines run in real
+spawned worker processes; worker spans stitch under ``phase:summarize``
+(the PR 6 ``--expect-shards`` trace validation passes unchanged) and
+worker metrics merge into the coordinator registry.  Fault posture: a
+killed worker, a raised action, or a timed-out action degrades that shard
+to the inline thread path — never kills the query, never double-counts.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from test_plan import _random_instance, _row_multiset
+
+from repro.core.api import GraphicalJoin
+from repro.dist.actions import (ProcessShardExecutor, ShardBuildAction,
+                                decode_action, decode_result, encode_action,
+                                encode_result, perform_action,
+                                shared_shard_executor,
+                                shutdown_shared_executor)
+from repro.obs.check import validate
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.plan.executor import Executor
+from repro.plan.search import plan_query
+from repro.relational.encoding import encode_query
+from repro.relational.synth import figure1
+from repro.relational.table import Catalog, Table
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drain_shared_pool():
+    """Each module run starts and ends without a lingering spawn pool."""
+    shutdown_shared_executor()
+    yield
+    shutdown_shared_executor()
+
+
+def _figure1_action(shard=0, **kw):
+    cat, q = figure1()
+    enc = encode_query(cat, q)
+    _, plan = plan_query(enc)
+    return ShardBuildAction(shard=shard, enc=enc, order=tuple(plan.order),
+                            step_estimates={s.var: s.product_entries
+                                            for s in plan.steps}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Wire format.
+# ---------------------------------------------------------------------------
+
+def test_action_roundtrip_bytes():
+    act = _figure1_action(shard=3, fault=None)
+    act2 = decode_action(encode_action(act))
+    assert act2.shard == 3
+    assert act2.order == act.order
+    assert act2.early_projection == act.early_projection
+    assert act2.backend == "numpy"
+    assert act2.step_estimates == pytest.approx(act.step_estimates)
+    assert act2.enc.query == act.enc.query
+    for a, b in zip(act.enc.encoded_tables, act2.enc.encoded_tables):
+        assert sorted(a) == sorted(b)
+        for v in a:
+            np.testing.assert_array_equal(a[v], b[v])
+
+
+def test_result_roundtrip_bytes():
+    res = perform_action(_figure1_action())
+    res2 = decode_result(encode_result(res))
+    assert res2.shard == res.shard
+    assert res2.join_size == res.join_size
+    assert res2.gfjs.join_size == res.gfjs.join_size
+    assert res2.step_products == pytest.approx(res.step_products)
+    assert res2.step_seconds == pytest.approx(res.step_seconds)
+    assert [s["name"] for s in res2.spans] == [s["name"] for s in res.spans]
+    # worker spans nest under the shard root in the record set itself
+    root = res2.spans[-1]
+    assert root["name"] == "shard:0"
+    assert any(s["parent_id"] == root["span_id"] for s in res2.spans[:-1])
+
+
+def test_bad_container_rejected():
+    act = _figure1_action()
+    with pytest.raises(ValueError):
+        decode_action(b"NOPE" + b"\0" * 32)
+    with pytest.raises(ValueError):
+        # a result container is not an action container
+        decode_action(encode_result(perform_action(act)))
+
+
+# ---------------------------------------------------------------------------
+# Across a real spawned process.
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_across_spawned_process():
+    act = _figure1_action()
+    want = perform_action(act)
+    ex = ProcessShardExecutor(1)
+    try:
+        outs = ex.run([act])
+    finally:
+        ex.shutdown()
+    assert len(outs) == 1
+    got = outs[0].result
+    assert not outs[0].retried, outs[0].error
+    assert got.join_size == want.join_size
+    assert got.step_products == pytest.approx(want.step_products)
+    # a real worker shipped its metrics snapshot and span records
+    assert got.metrics, "worker metrics snapshot missing"
+    assert "gfjs.runs_per_level" in got.metrics
+    assert [s["name"] for s in got.spans][-1] == "shard:0"
+
+
+@pytest.mark.parametrize("shape,seed", [
+    ("chain3", 3), ("star3", 5), ("triangle", 11), ("cycle4", 2),
+])
+def test_process_thread_mono_exact_equality(shape, seed):
+    cat, query = _random_instance(shape, seed)
+    all_vars = sorted({v for t in query.tables for _, v in t.var_map})
+    mono = GraphicalJoin(cat, query)
+    g_mono = mono.run()
+    thr = GraphicalJoin(cat, query, partitions=2)
+    g_thr = thr.run()
+    prc = GraphicalJoin(cat, query, partitions=2, shard_executor="process")
+    g_prc = prc.run()
+    assert g_thr.join_size == g_mono.join_size
+    assert g_prc.join_size == g_mono.join_size
+    m0 = _row_multiset(mono, g_mono, all_vars)
+    np.testing.assert_array_equal(m0, _row_multiset(thr, g_thr, all_vars))
+    np.testing.assert_array_equal(m0, _row_multiset(prc, g_prc, all_vars))
+
+
+def test_jax_backend_keeps_threads():
+    """The process knob must not re-spawn an XLA runtime per shard."""
+    cat, q = figure1()
+    gj = GraphicalJoin(cat, q, partitions=2, shard_executor="process",
+                       generation_backend="numpy")
+    gj.run()
+    assert gj._executor.shard_report["executor"] == "process"
+    gj2 = GraphicalJoin(cat, q, partitions=2, shard_executor="process",
+                        generation_backend="jax")
+    gj2.run()
+    assert gj2._executor.shard_report["executor"] == "thread"
+
+
+# ---------------------------------------------------------------------------
+# Observability: span stitching + metrics merge.
+# ---------------------------------------------------------------------------
+
+def test_process_spans_stitch_under_summarize():
+    cat, q = figure1()
+    tracer = Tracer()
+    gj = GraphicalJoin(cat, q, partitions=2, shard_executor="process",
+                       tracer=tracer)
+    gj.run()
+    doc = tracer.to_chrome_trace()
+    errs = validate(doc, expect_shards=True)
+    assert errs == [], errs
+    shard_spans = tracer.find("shard")
+    assert len(shard_spans) == 2
+    summarize = [s for s in tracer.spans if s.name == "phase:summarize"]
+    assert len(summarize) == 1
+    for sp in shard_spans:
+        assert sp.parent_id == summarize[0].span_id
+        # rebased: the worker clock landed inside the coordinator window
+        assert summarize[0].t0 <= sp.t1 <= summarize[0].t1 + 1e-6
+        # child spans (eliminate/gfjs levels) re-homed under the shard root
+        kids = [s for s in tracer.spans if s.parent_id == sp.span_id]
+        assert any(s.name.startswith("eliminate:") for s in kids)
+
+
+def test_process_metrics_merge_into_coordinator():
+    cat, q = figure1()
+    reg = MetricsRegistry()
+    gj = GraphicalJoin(cat, q, partitions=2, shard_executor="process",
+                       metrics=reg)
+    gj.run()
+    snap = reg.snapshot()
+    # worker-side histograms crossed the process boundary and merged
+    assert "gfjs.runs_per_level" in snap
+    assert snap["gfjs.runs_per_level"]["count"] > 0
+    assert snap["dist.shard_skew"]["type"] == "gauge"
+
+
+def test_shard_report_shape_matches_thread_path():
+    cat, q = figure1()
+    gj_t = GraphicalJoin(cat, q, partitions=2)
+    gj_t.run()
+    gj_p = GraphicalJoin(cat, q, partitions=2, shard_executor="process")
+    gj_p.run()
+    rt, rp = gj_t._executor.shard_report, gj_p._executor.shard_report
+    assert set(rt) == set(rp)
+    assert rt["sizes"] == rp["sizes"]
+    assert len(rt["seconds"]) == len(rp["seconds"])
+    assert [sorted(m) for m in rt["step_seconds"]] == \
+        [sorted(m) for m in rp["step_seconds"]]
+    assert rp["executor"] == "process" and rt["executor"] == "thread"
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: degrade, don't kill.
+# ---------------------------------------------------------------------------
+
+def test_worker_killed_mid_build_degrades_to_thread():
+    act0 = _figure1_action(shard=0)
+    act1 = _figure1_action(shard=1, fault="kill:1")
+    want = perform_action(act0)
+    ex = ProcessShardExecutor(1)
+    try:
+        outs = ex.run([act0, act1])
+    finally:
+        ex.shutdown()
+    assert len(outs) == 2
+    by_shard = {o.result.shard: o for o in outs}
+    assert by_shard[1].retried and by_shard[1].error
+    # the degraded shard still produced the right answer
+    assert by_shard[1].result.join_size == want.join_size
+    assert by_shard[0].result.join_size == want.join_size
+
+
+def test_action_timeout_degrades_to_thread():
+    act0 = _figure1_action(shard=0, fault="hang:0:60")
+    act1 = _figure1_action(shard=1)
+    ex = ProcessShardExecutor(2, timeout=3.0)
+    t0 = time.perf_counter()
+    try:
+        outs = ex.run([act0, act1])
+    finally:
+        ex.shutdown()
+    assert time.perf_counter() - t0 < 30.0   # never waits out the hang
+    by_shard = {o.result.shard: o for o in outs}
+    assert by_shard[0].retried
+    assert by_shard[0].result.join_size == by_shard[1].result.join_size
+
+
+def test_fault_hooks_never_fire_inline():
+    """The inline (coordinator-thread) retry must ignore fault specs —
+    an os._exit there would take the whole query down."""
+    act = _figure1_action(shard=0, fault="kill:0")
+    res = perform_action(act)    # not in a worker: fault is a no-op
+    assert res.join_size >= 0
+    os.environ["REPRO_SHARD_FAULT"] = "kill:0"
+    try:
+        res = perform_action(act)
+        assert res.join_size >= 0
+    finally:
+        del os.environ["REPRO_SHARD_FAULT"]
+
+
+def test_degraded_query_still_exact():
+    """End-to-end: a killed shard worker degrades, the query answer is
+    still exactly the monolithic answer and the report says degraded."""
+    cat, query = _random_instance("triangle", 11)
+    all_vars = sorted({v for t in query.tables for _, v in t.var_map})
+    mono = GraphicalJoin(cat, query)
+    m0 = _row_multiset(mono, mono.run(), all_vars)
+    shutdown_shared_executor()
+    os.environ["REPRO_SHARD_FAULT"] = "kill:1"
+    try:
+        prc = GraphicalJoin(cat, query, partitions=2,
+                            shard_executor="process")
+        g = prc.run()
+        np.testing.assert_array_equal(m0, _row_multiset(prc, g, all_vars))
+        assert prc._executor.shard_report["retries"] >= 1
+    finally:
+        del os.environ["REPRO_SHARD_FAULT"]
+        shutdown_shared_executor()
+
+
+# ---------------------------------------------------------------------------
+# Pool lifecycle.
+# ---------------------------------------------------------------------------
+
+def test_shared_executor_persists_and_grows():
+    a = shared_shard_executor(1)
+    assert shared_shard_executor(1) is a          # reused
+    b = shared_shard_executor(2)
+    assert b is not a and b.max_workers == 2      # grown
+    assert shared_shard_executor(1) is b          # never shrunk
+    shutdown_shared_executor()
+
+
+def test_dist_lazy_exports():
+    import repro.dist as dist
+    assert dist.ShardBuildAction is ShardBuildAction
+    assert dist.ProcessShardExecutor is ProcessShardExecutor
+    assert callable(dist.choose_partition_fold)
+    assert callable(dist.fold_loads)
+
+
+def test_plan_knob_validation():
+    cat, q = figure1()
+    enc = encode_query(cat, q)
+    with pytest.raises(ValueError):
+        plan_query(enc, shard_executor="process")          # partitions == 1
+    with pytest.raises(ValueError):
+        plan_query(enc, partitions=2, shard_executor="gpu")
+    with pytest.raises(ValueError):
+        plan_query(enc, partition_fold=2)                  # partitions == 1
+    with pytest.raises(ValueError):
+        plan_query(enc, partitions=2, partition_fold=0)
+    _, plan = plan_query(enc, partitions=2, shard_executor="process",
+                         partition_fold=2)
+    assert plan.shard_executor == "process"
+    assert plan.partition_fold == 2
+    sig_thread = plan_query(enc, partitions=2)[1].signature()
+    assert plan.signature() != sig_thread   # executor+fold are identity

@@ -482,3 +482,149 @@ def test_sharded_frame_to_gfjs_roundtrip():
     all_vars = sorted(query.variables)
     assert np.array_equal(_row_multiset(mono, filt0, all_vars),
                           _row_multiset(part, filt1, all_vars))
+
+
+# ---------------------------------------------------------------------------
+# Skew-aware partitioning (PR 7): top-key discount + over-partition/fold.
+# ---------------------------------------------------------------------------
+
+def test_fold_loads_lpt_balancing():
+    from repro.dist.partition import fold_loads
+    # fold=1 degenerates: one shard per worker, loads pass through
+    np.testing.assert_allclose(sorted(fold_loads([3, 1, 2], 3)), [1, 2, 3])
+    # greedy largest-first: 5->w0, 4->w1, 3->w1, 3->w0, 3->w1
+    loads = fold_loads([5, 4, 3, 3, 3], 2)
+    assert sorted(loads) == [8, 10]
+    # more workers than shards: empties allowed
+    loads = fold_loads([7], 3)
+    assert sorted(loads) == [0, 0, 7]
+
+
+def test_choose_partition_var_discounts_hot_keys():
+    """A big step on a one-hot-key variable loses to a slightly smaller
+    step whose key actually splits."""
+    from dataclasses import dataclass as _dc
+
+    @_dc
+    class _Step:
+        var: str
+        product_entries: float
+
+    from repro.plan.stats import FactorStats, QueryStats
+    hot = np.zeros(16); hot[0] = 1000.0           # all mass on one code
+    flat = np.full(16, 10.0)                      # perfectly spread
+    stats = QueryStats(
+        sizes={"H": 16, "F": 16},
+        factors=[],
+        factor_stats=[
+            FactorStats(("H",), 1000.0, {"H": 1.0}, {"H": hot}),
+            FactorStats(("F",), 160.0, {"F": 16.0}, {"F": flat}),
+        ])
+    steps = [_Step("H", 1000.0), _Step("F", 900.0)]
+    # without stats: raw product wins
+    assert choose_partition_var(steps, ("H", "F")) == "H"
+    # with stats at k=4: H's shardable benefit is 0, F wins
+    from repro.dist.partition import choose_partition_var as cpv
+    assert cpv(steps, ("H", "F"), stats=stats, partitions=4) == "F"
+    # balanced candidates degenerate to the raw-product rule
+    stats_flat = QueryStats(
+        sizes={"H": 16, "F": 16}, factors=[],
+        factor_stats=[
+            FactorStats(("H",), 160.0, {"H": 16.0}, {"H": flat.copy()}),
+            FactorStats(("F",), 160.0, {"F": 16.0}, {"F": flat.copy()}),
+        ])
+    assert cpv(steps, ("H", "F"), stats=stats_flat, partitions=4) == "H"
+
+
+def test_choose_partition_fold_balanced_stays_one():
+    from repro.dist.partition import choose_partition_fold
+    from repro.plan.stats import FactorStats, QueryStats
+    flat = np.full(1024, 5.0)
+    stats = QueryStats(
+        sizes={"V": 1024}, factors=[],
+        factor_stats=[FactorStats(("V",), 5120.0, {"V": 1024.0},
+                                  {"V": flat})])
+    assert choose_partition_fold(stats, "V", 1) == 1        # monolithic
+    assert choose_partition_fold(None, "V", 4) == 1         # no stats
+    assert choose_partition_fold(stats, "V", 4) == 1        # balanced
+    # no degree vector for the var: unknowable, stay at 1
+    assert choose_partition_fold(stats, "W", 4) == 1
+
+
+def test_choose_partition_fold_smooths_zipf():
+    """A Zipf-ish degree vector at k=4: over-partitioning must be chosen
+    and must *predict* better folded balance than fold=1."""
+    from repro.dist.partition import (choose_partition_fold, fold_loads,
+                                      hash_partition)
+    from repro.plan.stats import FactorStats, QueryStats
+    rng = np.random.default_rng(0)
+    deg = (1.0 / np.arange(1, 2049) ** 1.1) * 1e4
+    rng.shuffle(deg)
+    stats = QueryStats(
+        sizes={"V": len(deg)}, factors=[],
+        factor_stats=[FactorStats(("V",), float(deg.sum()),
+                                  {"V": float(len(deg))}, {"V": deg})])
+    k = 4
+    f = choose_partition_fold(stats, "V", k)
+    codes = np.arange(len(deg))
+
+    def worker_skew(fold):
+        pids = hash_partition(codes, k * fold)
+        loads = np.bincount(pids, weights=deg, minlength=k * fold)
+        w = fold_loads(loads, k)
+        return float(w.max() / w.mean())
+
+    assert f > 1
+    assert worker_skew(f) <= worker_skew(1) + 1e-9
+
+
+@pytest.mark.parametrize("shape,seed,fold", [
+    ("chain3", 3, 2), ("triangle", 11, 4), ("cycle4", 2, 2),
+])
+def test_folded_partitions_equal_monolithic(shape, seed, fold):
+    """k workers x f virtual shards is still exactly the monolithic
+    answer (the fold only changes shard count, never membership)."""
+    cat, query = _random_instance(shape, seed)
+    all_vars = sorted({v for t in query.tables for _, v in t.var_map})
+    mono = GraphicalJoin(cat, query)
+    m0 = _row_multiset(mono, mono.run(), all_vars)
+    gj = GraphicalJoin(cat, query, partitions=2, partition_fold=fold)
+    sharded = gj.run()
+    assert sharded.num_partitions == 2 * fold
+    np.testing.assert_array_equal(
+        m0, _row_multiset(gj, sharded, all_vars))
+    rep = gj._executor.shard_report
+    assert len(rep["sizes"]) == 2 * fold
+    assert rep["workers"] == 2
+
+
+def test_fold_reports_worker_skew_not_shard_skew():
+    """With fold > 1 the reported skew is over folded per-worker loads —
+    it can only improve on (never exceed) the raw virtual-shard skew."""
+    from repro.dist.partition import fold_loads
+    cat, qs = lastfm_like(n_users=60, n_artists=40, artists_per_user=4,
+                          friends_per_user=3)
+    q = qs["lastfm_tri"]
+    gj = GraphicalJoin(cat, q, partitions=2, partition_fold=4)
+    gj.run()
+    rep = gj._executor.shard_report
+    sizes = rep["sizes"]
+    w = fold_loads(sizes, 2)
+    raw_mean = sum(sizes) / len(sizes)
+    raw_skew = max(sizes) / raw_mean if raw_mean > 0 else 1.0
+    assert rep["skew"] == pytest.approx(float(w.max() / w.mean()))
+    # folded worker skew is bounded by the raw per-shard skew
+    assert rep["skew"] <= raw_skew + 1e-9
+
+
+def test_explain_renders_fold_and_executor():
+    cat, q = figure1()
+    gj = GraphicalJoin(cat, q, partitions=4, partition_fold=2,
+                       shard_executor="process")
+    plan = gj.plan()
+    text = plan.explain()
+    pvar = plan.partition_var
+    # the PR 5 substring is untouched (append-only changes to that line)
+    assert f"partitions        : 4 by hash({pvar})" in text
+    assert "x2 fold (8 virtual)" in text
+    assert "executor=process" in text

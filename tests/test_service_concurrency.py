@@ -351,3 +351,52 @@ def test_cache_lock_guards_raw_operations(lastfm):
     for t in threads:
         t.join()
     assert not errors
+
+
+def test_aux_nbytes_hammer_vs_lockless_growers(lastfm):
+    """The PR 4 race: cache re-measurement iterates ``_bounds``/``_launch``
+    while reader threads grow them lockless (``bounds()`` memoization,
+    kernel-meta inserts).  ``aux_nbytes`` must snapshot keys defensively —
+    no "dict changed size during iteration", ever, and every returned
+    value a sane non-negative byte count."""
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    gfjs = svc.frame(qs["lastfm_tri"]).frame.gfjs
+    nlevels = len(gfjs.levels)
+    stop = threading.Event()
+    errors = []
+
+    def grower(i):
+        try:
+            arr = np.arange(64, dtype=np.int64)
+            j = 0
+            while not stop.is_set():
+                lvl = (i + j) % nlevels
+                gfjs.bounds(lvl)
+                # simulate repro.kernels.ops.gfjs_expand_meta's lockless
+                # replace-insert of launch metadata
+                gfjs._launch[lvl] = (64 + j, (arr, arr))
+                if j % 17 == 0:
+                    gfjs._bounds.pop(lvl, None)
+                    gfjs._launch.pop(lvl, None)
+                j += 1
+        except Exception as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    def measurer():
+        try:
+            while not stop.is_set():
+                n = gfjs.resident_nbytes()
+                assert n >= gfjs.nbytes()
+        except Exception as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=grower, args=(i,)) for i in range(4)]
+    threads += [threading.Thread(target=measurer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    time.sleep(1.0)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
