@@ -32,7 +32,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single section (table1..table6, "
-                         "sensitivity, planner, summary, kernels, dist)")
+                         "sensitivity, planner, summary, kernels, dist, "
+                         "serve)")
     ap.add_argument("--kernels-json", default="BENCH_kernels.json",
                     metavar="PATH",
                     help="where to write the kernels-section JSON summary "
@@ -40,6 +41,10 @@ def main() -> None:
     ap.add_argument("--dist-json", default="BENCH_dist.json",
                     metavar="PATH",
                     help="where to write the dist-section JSON summary "
+                         "('' disables)")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    metavar="PATH",
+                    help="where to write the serve-section JSON summary "
                          "('' disables)")
     ap.add_argument("--trace", action="store_true",
                     help="write a Chrome trace (BENCH_<section>.trace.json) "
@@ -76,6 +81,15 @@ def main() -> None:
             write_json(lines, args.dist_json)
         return lines
 
+    def serve_section(tmp):
+        import os
+        from benchmarks.kernels_bench import write_json
+        from benchmarks.serve_bench import bench_serve
+        lines = bench_serve(float(os.environ.get("BENCH_SCALE", "1.0")))
+        if args.serve_json:
+            write_json(lines, args.serve_json)
+        return lines
+
     sections = {
         "table1": tables.bench_table1,
         "table2": tables.bench_table2,
@@ -88,6 +102,7 @@ def main() -> None:
         "summary": lambda tmp: bench_summary(),
         "kernels": kernels_section,
         "dist": dist_section,
+        "serve": serve_section,
     }
 
     print("name,us_per_call,derived")

@@ -1,0 +1,322 @@
+"""Serving front-end benchmarks (DESIGN.md §18) — the ISSUE 8 closed loop.
+
+Measures :class:`repro.serve.server.JoinServer` under the traffic shapes a
+serving tier actually sees:
+
+* **cold stampede** — 16 threads racing one cold query.  The collapse
+  invariant is the row: builds must be 1, collapsed 15, and the reported
+  amplification (builds / racers) is the bugfix headline (the raw
+  service ran one full GJ build per racer);
+* **closed loop** — W worker threads drive skewed (Zipf) per-key probe
+  traffic (``keys_per_req`` keys each) through ``server.lookup`` against
+  a table a background appender keeps growing.  Reports sustained
+  keys/s, request p50/p99 latency, and the collapse rate (share of
+  requests answered from someone else's work: batched probes + collapsed
+  builds).  The acceptance bar is >= 10k keys/s with live appends.
+
+Run as a module (jax-free — the server fronts the numpy-side service):
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --smoke        # CI gate
+  PYTHONPATH=src python -m benchmarks.serve_bench --json BENCH_serve.json
+  PYTHONPATH=src python -m benchmarks.serve_bench --smoke --trace \
+      BENCH_serve.trace.json   # then: repro.obs.check --expect-server
+
+``--smoke`` is an exact-equality gate: every row ``server.lookup``
+returns under concurrency (appends quiesced) must equal the direct
+JoinService group-by oracle bit for bit, and a gated 16-thread stampede
+must produce exactly one service build.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import csv_line
+
+
+def _events_workload(n_rows: int, n_keys: int, seed: int = 0):
+    from repro.relational.query import JoinQuery
+    from repro.relational.table import Catalog, Table
+    rng = np.random.default_rng(seed)
+    t = Table("events",
+              {"x0": rng.integers(0, n_keys, n_rows).astype(np.int64),
+               "x1": rng.integers(0, 50, n_rows).astype(np.int64)})
+    q = JoinQuery.of("events_q", [("events", {"x0": "A", "x1": "B"})])
+    return Catalog.of(t), q
+
+
+def _zipf_keys(rng, n: int, n_keys: int, alpha: float = 1.3) -> np.ndarray:
+    return ((rng.zipf(alpha, n) - 1) % n_keys).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# rows
+# ---------------------------------------------------------------------------
+
+def _stampede_row(scale: float, tracer=None) -> str:
+    """16 racers x one cold query: 1 build, 15 collapsed replies."""
+    from repro.relational.synth import lastfm_like
+    from repro.serve.server import JoinServer
+    from repro.summary.service import JoinService
+
+    cat, qs = lastfm_like(n_users=int(400 * scale) or 50,
+                          n_artists=int(300 * scale) or 40,
+                          artists_per_user=8, friends_per_user=4, seed=11)
+    q = qs["lastfm_A1"]
+    svc = JoinService(cat)
+    plan = svc.compile(q)
+    server = JoinServer(svc, tracer=tracer)
+
+    # gate the build so every racer is provably parked on the latch
+    # before it runs — the measured collapse is structural, not lucky
+    entered, release = threading.Event(), threading.Event()
+    orig, calls = svc.frame, []
+
+    def gated(query, plan=None):
+        calls.append(query.name)
+        entered.set()
+        release.wait(30.0)
+        return orig(query, plan=plan)
+
+    svc.frame = gated
+    N = 16
+    replies: List = [None] * N
+
+    def racer(i):
+        replies[i] = server.frame(q, plan=plan)
+
+    t0 = time.perf_counter()
+    ts = [threading.Thread(target=racer, args=(i,)) for i in range(N)]
+    ts[0].start()
+    entered.wait(30.0)
+    for t in ts[1:]:
+        t.start()
+    while sum(fl.waiters for fl in server._flights._flights.values()) < N - 1:
+        time.sleep(0.0005)
+    release.set()
+    for t in ts:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    sources = [r.source for r in replies]
+    st = server.stats()
+    return csv_line(
+        "serve/cold_stampede_x16", wall * 1e6 / N,
+        f"builds={len(calls)};computed={sources.count('computed')};"
+        f"collapsed={st['collapsed']};racers={N};"
+        f"amplification={len(calls) / N:.3f};"
+        f"join_size={replies[0].frame.gfjs.join_size}")
+
+
+def _closed_loop_row(scale: float, *, workers: int = 8,
+                     keys_per_req: int = 16, duration: float = 3.0,
+                     tracer=None) -> str:
+    """Skewed probe traffic + live appends: keys/s, p50/p99, collapse."""
+    from repro.serve.server import JoinServer
+    from repro.summary.service import JoinService
+
+    n_keys = int(2000 * scale) or 200
+    cat, q = _events_workload(int(20000 * scale) or 2000, n_keys, seed=1)
+    svc = JoinService(cat)
+    plan = svc.compile(q)
+    server = JoinServer(svc, tracer=tracer, batch_window=0.0)
+    aggs = {"n": "count", "s": ("sum", "B")}
+    server.lookup(q, "A", np.arange(4), aggs, plan=plan)   # warm the table
+
+    stop = threading.Event()
+    lat: List[List[float]] = [[] for _ in range(workers)]
+    nreq = [0] * workers
+    errors: List[BaseException] = []
+    appends = [0]
+
+    def worker(w: int):
+        rng = np.random.default_rng(100 + w)
+        try:
+            while not stop.is_set():
+                ks = _zipf_keys(rng, keys_per_req, n_keys)
+                t0 = time.perf_counter()
+                server.lookup(q, "A", ks, aggs, plan=plan)
+                lat[w].append(time.perf_counter() - t0)
+                nreq[w] += 1
+        except BaseException as e:  # pragma: no cover - surfaced below
+            errors.append(e)
+
+    def appender():
+        rng = np.random.default_rng(999)
+        try:
+            while not stop.is_set():
+                svc.append("events",
+                           {"x0": _zipf_keys(rng, 64, n_keys),
+                            "x1": rng.integers(0, 50, 64).astype(np.int64)})
+                appends[0] += 1
+                time.sleep(0.02)
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(w,)) for w in range(workers)]
+    ta = threading.Thread(target=appender)
+    t0 = time.perf_counter()
+    for t in ts:
+        t.start()
+    ta.start()
+    time.sleep(duration)
+    stop.set()
+    for t in ts:
+        t.join()
+    ta.join()
+    wall = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+
+    all_lat = np.asarray([x for per in lat for x in per])
+    total_req = int(sum(nreq))
+    total_keys = total_req * keys_per_req
+    st = server.stats()
+    collapse_rate = (st["batched"] + st["collapsed"]) / max(st["requests"], 1)
+    return csv_line(
+        "serve/closed_loop_zipf", wall * 1e6 / max(total_req, 1),
+        f"keys_per_s={total_keys / wall:.0f};requests={total_req};"
+        f"workers={workers};keys_per_req={keys_per_req};"
+        f"p50_ms={np.percentile(all_lat, 50) * 1e3:.3f};"
+        f"p99_ms={np.percentile(all_lat, 99) * 1e3:.3f};"
+        f"collapse_rate={collapse_rate:.3f};batched={st['batched']};"
+        f"probes={st['probes']};table_recomputes={st['table_recomputes']};"
+        f"appends={appends[0]};live_rows={svc.catalog['events'].num_rows}")
+
+
+def bench_serve(scale: float = 1.0, *, duration: float = 3.0,
+                tracer=None) -> List[str]:
+    return [_stampede_row(scale, tracer=tracer),
+            _closed_loop_row(scale, duration=duration, tracer=tracer)]
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: server answers == direct JoinService answers, exactly
+# ---------------------------------------------------------------------------
+
+def smoke(tracer=None) -> int:
+    from repro.serve.server import JoinServer
+    from repro.summary.service import JoinService
+
+    scale = float(os.environ.get("BENCH_SCALE", "1.0"))
+    failures = 0
+
+    # 1. collapse invariant (gated, deterministic)
+    line = _stampede_row(scale, tracer=tracer)
+    derived = dict(kv.split("=") for kv in line.split(",", 2)[2].split(";"))
+    ok = (derived["builds"] == "1" and derived["computed"] == "1"
+          and derived["collapsed"] == "15")
+    print(f"serve-smoke stampede: builds={derived['builds']} "
+          f"collapsed={derived['collapsed']} {'OK' if ok else 'MISMATCH'}")
+    failures += 0 if ok else 1
+
+    # 2. concurrent lookups + live appends, then quiesce and compare the
+    # server's rows against a fresh direct-service oracle bit for bit
+    n_keys = 300
+    cat, q = _events_workload(4000, n_keys, seed=2)
+    svc = JoinService(cat)
+    plan = svc.compile(q)
+    server = JoinServer(svc, tracer=tracer)
+    aggs = {"n": "count", "s": ("sum", "B")}
+    stop = threading.Event()
+    errors: List[BaseException] = []
+
+    def prober(w: int):
+        rng = np.random.default_rng(w)
+        try:
+            while not stop.is_set():
+                ks = _zipf_keys(rng, 8, n_keys)
+                out = server.lookup(q, "A", ks, aggs, plan=plan)
+                # count monotone + internally consistent shape
+                if out.shape != (8, 2) or (out[:, 0] < 0).any():
+                    errors.append(AssertionError("bad probe rows"))
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+
+    def appender():
+        rng = np.random.default_rng(77)
+        try:
+            for _ in range(10):
+                svc.append("events",
+                           {"x0": _zipf_keys(rng, 32, n_keys),
+                            "x1": rng.integers(0, 50, 32).astype(np.int64)})
+                time.sleep(0.01)
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=prober, args=(w,)) for w in range(6)]
+    ta = threading.Thread(target=appender)
+    for t in ts:
+        t.start()
+    ta.start()
+    ta.join()
+    time.sleep(0.05)
+    stop.set()
+    for t in ts:
+        t.join()
+
+    oracle = JoinService(svc.catalog, incremental=False)
+    tab = oracle.frame(q, plan=plan).frame.group_by(["A"], **aggs)
+    keys = np.arange(n_keys)
+    got = server.lookup(q, "A", keys, aggs, plan=plan)
+    want = np.zeros((n_keys, 2), np.float32)
+    pos = np.asarray(tab["A"])
+    want[pos, 0] = np.asarray(tab["n"], np.float32)
+    want[pos, 1] = np.asarray(tab["s"], np.float32)
+    eq = np.array_equal(got, want)
+    st = server.stats()
+    print(f"serve-smoke equality: rows={svc.catalog['events'].num_rows} "
+          f"requests={st['requests']} batched={st['batched']} "
+          f"probes={st['probes']} errors={len(errors)} "
+          f"{'OK' if eq and not errors else 'MISMATCH'}")
+    failures += 0 if eq and not errors else 1
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="exact-equality gate (server vs direct service)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the csv rows as a JSON summary")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace of the run (validate with "
+                         "repro.obs.check --expect-server)")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="closed-loop seconds")
+    ap.add_argument("--scale", type=float,
+                    default=float(os.environ.get("BENCH_SCALE", "1.0")))
+    args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
+
+    if args.smoke:
+        rc = smoke(tracer=tracer)
+        if tracer is not None:
+            print(f"trace,serve,{tracer.write_chrome_trace(args.trace)}")
+        return rc
+
+    lines = bench_serve(args.scale, duration=args.duration, tracer=tracer)
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line, flush=True)
+    if tracer is not None:
+        print(f"trace,serve,{tracer.write_chrome_trace(args.trace)}")
+    if args.json:
+        from benchmarks.kernels_bench import write_json
+        write_json(lines, args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

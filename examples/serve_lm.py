@@ -21,14 +21,23 @@ from repro.serve.engine import (RelationalFeatureProvider, ServeConfig,
 
 
 def make_feature_provider() -> RelationalFeatureProvider:
-    """GJ-backed per-user features (listen counts over a friend join)."""
+    """GJ-backed per-user features (listen counts over a friend join).
+
+    Routed through a :class:`JoinServer` front-end: concurrent request
+    threads collapse onto one summary build, per-key probes batch
+    against the resident group-by table, and a deadline bounds how long
+    any request waits on someone else's build (DESIGN.md §18).
+    """
     from repro.relational.synth import lastfm_like
+    from repro.serve.server import JoinServer
     from repro.summary.service import JoinService
     cat, qs = lastfm_like(n_users=200, n_artists=150, artists_per_user=6,
                           friends_per_user=3)
     svc = JoinService(cat)
+    server = JoinServer(svc, default_deadline=5.0)
     prov = RelationalFeatureProvider(
-        svc, qs["lastfm_A1"], key_var="U1", aggs={"n_paths": "count"})
+        svc, qs["lastfm_A1"], key_var="U1", aggs={"n_paths": "count"},
+        server=server)
     print("serve plan:", " -> ".join(prov.plan.order),
           f"(chosen={prov.plan.source})")
     return prov
@@ -65,6 +74,7 @@ def main() -> None:
         user_ids = rng.integers(0, 200, args.batch)
         enriched = engine.attach_features(batch, user_ids)
         print("request features:", np.asarray(enriched["features"]).ravel())
+        print("join server:", provider.server.stats())
 
     out = engine.generate(batch, max_new=args.max_new, seed=1)
     for i, row in enumerate(out):

@@ -1,12 +1,18 @@
 """Validate an emitted Chrome trace file (CI smoke gate).
 
     python -m repro.obs.check BENCH_dist.trace.json [--expect-shards]
+    python -m repro.obs.check BENCH_serve.trace.json --expect-server
 
 Asserts the file parses as Chrome trace-event JSON and contains one span
 per executor phase, at least one per-step elimination span carrying
 product/drift annotations, and (with ``--expect-shards``) per-shard
-spans whose parent is the summarize phase span.  Exit 0 on success,
-non-zero with a message on any violation.
+spans whose parent is the summarize phase span.  With
+``--expect-server`` the trace must additionally profile the serving
+front-end: ``server:request`` spans each carrying a ``source``
+annotation, and collapsed requests carrying a ``build_span_id`` that
+resolves to a real ``server:build`` span — the span-level record of the
+latch handoff (DESIGN.md §18).  Exit 0 on success, non-zero with a
+message on any violation.
 """
 
 from __future__ import annotations
@@ -23,7 +29,8 @@ REQUIRED_PHASES = ("build_model", "plan", "build_generator", "summarize")
 REQUIRED_PHASES_SHARDED = ("build_model", "plan", "partition", "summarize")
 
 
-def validate(doc: Any, *, expect_shards: bool = False) -> List[str]:
+def validate(doc: Any, *, expect_shards: bool = False,
+             expect_server: bool = False) -> List[str]:
     """Return a list of violations (empty == valid)."""
     errs: List[str] = []
     if not isinstance(doc, dict) or "traceEvents" not in doc:
@@ -75,6 +82,30 @@ def validate(doc: Any, *, expect_shards: bool = False) -> List[str]:
             parent = by_id.get(pid)
             if parent is None or parent["name"] != "phase:summarize":
                 errs.append(f"{ev['name']} is not parented to phase:summarize")
+
+    if expect_server:
+        by_id = {ev.get("args", {}).get("span_id"): ev for ev in complete}
+        reqs = [ev for ev in complete if ev["name"] == "server:request"]
+        builds = [ev for ev in complete if ev["name"] == "server:build"]
+        if not reqs:
+            errs.append("no serving spans ('server:request')")
+        for ev in reqs:
+            if "source" not in ev.get("args", {}):
+                errs.append("server:request span missing 'source' annotation")
+                break
+        collapsed = [ev for ev in reqs
+                     if ev.get("args", {}).get("collapsed")]
+        if collapsed and not builds:
+            errs.append("collapsed server:request spans but no "
+                        "'server:build' span")
+        for ev in collapsed:
+            bid = ev.get("args", {}).get("build_span_id")
+            if bid is None:
+                continue            # leader ran untraced (null span id)
+            build = by_id.get(bid)
+            if build is None or build["name"] != "server:build":
+                errs.append("collapsed server:request carries build_span_id "
+                            f"{bid!r} that is not a server:build span")
     return errs
 
 
@@ -83,6 +114,9 @@ def main(argv=None) -> int:
     ap.add_argument("path", help="trace file to validate")
     ap.add_argument("--expect-shards", action="store_true",
                     help="require per-shard spans parented to summarize")
+    ap.add_argument("--expect-server", action="store_true",
+                    help="require server:request spans with source "
+                         "annotations and latch-handoff build links")
     ns = ap.parse_args(argv)
     try:
         with open(ns.path) as f:
@@ -90,7 +124,8 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"FAIL {ns.path}: {e}")
         return 2
-    errs = validate(doc, expect_shards=ns.expect_shards)
+    errs = validate(doc, expect_shards=ns.expect_shards,
+                    expect_server=ns.expect_server)
     if errs:
         for e in errs:
             print(f"FAIL {ns.path}: {e}")

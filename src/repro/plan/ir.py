@@ -98,6 +98,21 @@ class PhysicalPlan:
                     if table in s.tables)
         return dirty / total
 
+    def admission_cost(self) -> float:
+        """Cost of a cold build of this plan, for admission control.
+
+        Sum of the per-step CostModel estimates (product entries touched
+        across the elimination; DESIGN §15) divided by the partition
+        count — shards run in parallel, so the per-worker critical path
+        is what a serving deadline competes with.  Falls back to
+        ``est_cost`` when the plan carries no step breakdown (hand-built
+        plans).  ``repro.serve.server.JoinServer`` compares this against
+        its ``cost_ceiling`` before admitting a cold build.
+        """
+        total = sum(s.cost for s in self.steps) if self.steps \
+            else float(self.est_cost)
+        return total / max(int(self.partitions), 1)
+
     # -- identity ----------------------------------------------------------
     def signature(self) -> str:
         """Stable hash of the execution-relevant plan fields.

@@ -1,1 +1,25 @@
-from repro.serve.engine import ServeConfig, ServeEngine, make_serve_step
+"""Serving layer: the jit'd LM engine (``engine.py``) and the
+Graphical-Join serving front-end (``server.py``).
+
+Submodule re-exports resolve lazily (PEP 562, same idiom as
+``repro.dist``): ``engine`` imports jax at module level, and eagerly
+pulling it here would force the jax import onto every consumer of the
+(numpy-only) :class:`JoinServer` — benchmarks and the service-side tests
+import the server without ever touching a device.
+"""
+
+_ENGINE = {"RelationalFeatureProvider", "ServeConfig", "ServeEngine",
+           "make_serve_step"}
+_SERVER = {"AdmissionRejected", "DeadlineExceeded", "JoinServer",
+           "SingleFlight", "lookup_rows"}
+
+__all__ = sorted(_ENGINE | _SERVER)
+
+
+def __getattr__(name):
+    import importlib
+    if name in _ENGINE:
+        return getattr(importlib.import_module("repro.serve.engine"), name)
+    if name in _SERVER:
+        return getattr(importlib.import_module("repro.serve.server"), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

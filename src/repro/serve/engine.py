@@ -25,6 +25,7 @@ import numpy as np
 from repro.models.model import LM
 from repro.obs.metrics import REGISTRY
 from repro.obs.trace import span as _span
+from repro.serve.server import SingleFlight, lookup_rows
 
 
 @dataclass
@@ -53,7 +54,15 @@ class RelationalFeatureProvider:
     versions (memoized hashes — a dict compare, no data touched).  After a
     `JoinService.append`, the next call re-pulls the frame, which the
     service satisfies through the incremental refresher under the same
-    pre-compiled plan — never a cold rebuild, never a re-plan.
+    pre-compiled plan — never a cold rebuild, never a re-plan.  The memo
+    rebuild is single-flight: a post-append stampede of concurrent
+    `features` calls computes the new per-key table exactly once
+    (`serve.feature_recomputes` counts builds, not requests).
+
+    Pass ``server=`` (a :class:`~repro.serve.server.JoinServer`) to route
+    lookups through the serving front-end instead of the memo: probes
+    then batch across concurrent requests against the server's resident
+    table, and cold builds go through its collapse/admission machinery.
 
     The provider is oblivious to summary *shape*: a service configured
     with ``partitions > 1`` hands back shard-merging frames
@@ -64,18 +73,21 @@ class RelationalFeatureProvider:
     """
 
     def __init__(self, service, query, *, key_var: str,
-                 aggs: Dict[str, Any], plan=None) -> None:
+                 aggs: Dict[str, Any], plan=None, server=None) -> None:
         self.service = service
         self.query = query
         self.key_var = key_var
         self.aggs = dict(aggs)
         self.plan = plan if plan is not None else service.compile(query)
+        self.server = server
         # (versions, table) as ONE atomically-assigned pair: concurrent
-        # features() calls may both recompute, but an interleaving can
-        # never pair an old table with new versions (which would pass
-        # revalidation forever and pin stale features)
+        # features() calls can never pair an old table with new versions
+        # (which would pass revalidation forever and pin stale features)
         self._memo: Optional[Tuple[Dict[str, str],
                                    Dict[str, np.ndarray]]] = None
+        # collapses the post-append rebuild stampede: racers on the same
+        # versions key share one _feature_table() build
+        self._flight = SingleFlight()
 
     def _feature_table(self) -> Dict[str, np.ndarray]:
         reply = self.service.frame(self.query, plan=self.plan)
@@ -96,29 +108,29 @@ class RelationalFeatureProvider:
     def features(self, keys: np.ndarray) -> np.ndarray:
         """[len(keys), num_features] float32; zeros for unknown keys."""
         with _span("serve:features", cat="serve", keys=len(keys)) as sp:
+            REGISTRY.counter("serve.feature_requests").inc()
+            if self.server is not None:
+                sp.set(via="server")
+                return self.server.lookup(self.query, self.key_var, keys,
+                                          self.aggs, plan=self.plan)
             versions = self._current_versions()
             memo = self._memo
             fresh = memo is None or memo[0] != versions
+
+            def build(_fl):
+                REGISTRY.counter("serve.feature_recomputes").inc()
+                return (versions, self._feature_table())
+
             if fresh:
-                memo = (versions, self._feature_table())
+                # single-flight keyed on the exact version vector: a
+                # post-append stampede elects one builder, everyone else
+                # shares its table instead of re-deriving it per racer
+                memo, _, _ = self._flight.do(
+                    tuple(sorted(versions.items())), build)
                 self._memo = memo
             sp.set(memo_hit=not fresh)
-            REGISTRY.counter("serve.feature_requests").inc()
-            if fresh:
-                REGISTRY.counter("serve.feature_recomputes").inc()
-            tab = memo[1]
-            uniq = np.asarray(tab[self.key_var])
-            keys = np.asarray(keys)
-            pos = np.searchsorted(uniq, keys)
-            pos_c = np.clip(pos, 0, max(len(uniq) - 1, 0))
-            ok = (uniq[pos_c] == keys) if len(uniq) \
-                else np.zeros(len(keys), bool)
-            out = np.zeros((len(keys), len(self.aggs)), np.float32)
-            for j, name in enumerate(self.aggs):
-                col = np.asarray(tab[name], np.float32)
-                if len(col):
-                    out[:, j] = np.where(ok, col[pos_c], 0.0)
-            return out
+            return lookup_rows(memo[1], self.key_var, list(self.aggs),
+                               np.asarray(keys))
 
 
 class ServeEngine:

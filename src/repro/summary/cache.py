@@ -156,6 +156,28 @@ class SummaryCache:
         if path is None or not os.path.exists(path):
             self._tables.pop(key, None)
 
+    def probe(self, key: str) -> str:
+        """Non-mutating presence check: ``"memory" | "disk" | "miss"``.
+
+        No promotion, no LRU bump, no stats — the :class:`JoinServer`
+        admission gate asks whether a request *would* be a cold build
+        without perturbing the cache it is pricing.  TTL is respected
+        (an expired entry reads as a miss) but expiry is not acted on;
+        the next real ``get`` does the dropping.
+        """
+        with self._lock:
+            if key in self._entries \
+                    and not self._expired(self._born.get(key, 0.0)):
+                return "memory"
+            path = self._spill_path(key)
+        if path is not None and os.path.exists(path):
+            try:
+                if not self._expired(os.path.getmtime(path)):
+                    return "disk"
+            except OSError:      # raced an unlink between exists and stat
+                pass
+        return "miss"
+
     # -- core API ----------------------------------------------------------
     def get(self, key: str) -> Optional[GFJS]:
         """Memory first, then spill; None on a true miss or TTL expiry."""
@@ -218,7 +240,7 @@ class SummaryCache:
                 return None, "miss"
             self._bump("disk_hits")
             spills = self._admit(key, gfjs, born=born)
-        self._write_spills(spills)
+        self.write_spills(spills)
         return gfjs, "disk"
 
     def put(self, key: str, gfjs: GFJS,
@@ -231,10 +253,11 @@ class SummaryCache:
                 if tables is not None:
                     self._tables[key] = frozenset(tables)
                 spills = self._admit(key, gfjs, born=time.time())
-            self._write_spills(spills)
+            self.write_spills(spills)
 
     def refresh(self, old_key: str, new_key: str, gfjs: GFJS,
-                tables: Optional[Iterable[str]] = None) -> None:
+                tables: Optional[Iterable[str]] = None,
+                defer_spill: bool = False) -> List[Tuple]:
         """Upgrade an entry in place: retire ``old_key``, admit ``new_key``.
 
         The incremental-maintenance commit point: both the retirement of
@@ -245,6 +268,13 @@ class SummaryCache:
         window where a get on the old key could resurrect stale state from
         a promotion in flight (`invalidate` races are handled identically:
         provenance for ``old_key`` is gone before the lock is released).
+
+        With ``defer_spill=True`` the eviction spill work this admission
+        may trigger is *returned* instead of written — for callers
+        (``JoinService._try_refresh``) that must commit under a lock of
+        their own and stage the disk I/O outside it via
+        :meth:`write_spills`.  Returns the pending spill work either way
+        (empty when already written).
         """
         with _span("cache:refresh", cat="cache"), self._lock:
             self._bump("refreshes")
@@ -259,7 +289,10 @@ class SummaryCache:
             if tables is not None:
                 self._tables[new_key] = frozenset(tables)
             spills = self._admit(new_key, gfjs, born=time.time())
-        self._write_spills(spills)
+        if defer_spill:
+            return spills
+        self.write_spills(spills)
+        return []
 
     def invalidate(self, table: str) -> int:
         """Drop every entry recorded as built on ``table``.
@@ -304,7 +337,7 @@ class SummaryCache:
         The entry named by ``keep`` survives even if it alone exceeds the
         budget (an oversized summary is still better served hot once).
         Spill *writes* are deferred: this returns (key, gfjs, path, born)
-        work items for `_write_spills` to run after the lock is released —
+        work items for `write_spills` to run after the lock is released —
         serializing a large GFJS must not stall other threads' memory hits.
         """
         pending: List[Tuple] = []
@@ -329,7 +362,7 @@ class SummaryCache:
                 # provenance stays: the spill file (about to exist) needs it
         return pending
 
-    def _write_spills(self, pending: List[Tuple]) -> None:
+    def write_spills(self, pending: List[Tuple]) -> None:
         """Run deferred spill writes (no lock held during disk I/O).
 
         Writes go to a temp path and are renamed into place, so a reader

@@ -33,10 +33,16 @@ dropped state all fall back to the cold compute path — refresh is an
 optimization, never a correctness dependency.
 
 The service is safe to call from multiple threads: the summary cache locks
-internally and the plan cache is guarded here.  Two threads racing on the
+internally, the plan cache is guarded here, and append *staging* (the
+O(table) column copy) is serialized per table.  Two threads racing on the
 same cold query may both compute it (last put wins) — duplicate work, never
 a wrong answer.  Refresh races the same way: both threads derive the same
 new-consistent summary, and `SummaryCache.refresh` commits atomically.
+Serving tiers that cannot afford the duplicate work put
+`repro.serve.server.JoinServer` in front: it collapses concurrent
+identical-key misses onto one build (waiters' replies carry
+``source="collapsed"``), batches per-key probes, and admission-controls
+cold builds by the plan's cost estimate (DESIGN.md §18).
 """
 
 from __future__ import annotations
@@ -67,6 +73,8 @@ class ServiceReply:
 
     frame: SummaryFrame
     source: str                # "memory" | "disk" | "refreshed" | "computed"
+                               # (+ "collapsed": a JoinServer waiter that
+                               #  shared another request's in-flight build)
     key: str
     timings: Dict[str, float] = field(default_factory=dict)
     plan: Optional[PhysicalPlan] = None
@@ -141,6 +149,11 @@ class JoinService:
         # per-table append log frame() chains through to catch a state up
         self._states: "OrderedDict[str, IncrementalState]" = OrderedDict()
         self._pending: Dict[str, list] = {}
+        # per-table append staging locks (guarded by self._lock): k
+        # concurrent appenders to one hot table serialize the O(table)
+        # column copy — k stagings total, not the O(k²·table) of every
+        # loser re-staging against each winner's new base
+        self._append_locks: Dict[str, threading.Lock] = {}
 
     # -- planning -----------------------------------------------------------
     def _plan_key(self, query: JoinQuery) -> Tuple[str, Tuple[str, ...]]:
@@ -277,15 +290,29 @@ class JoinService:
         place; queries never asked again never pay for the append.
 
         The O(table) column copy of the grown table is staged *outside*
-        the service lock; only the install is serialized.  If another
-        append to the same table wins the race, staging retries against
-        the new base — the delta chain stays linear either way.
+        the service lock (a slow copy must not stall readers) but
+        *serialized per table*: concurrent appenders to one hot table
+        queue on the table's staging lock, so k appends cost k copies —
+        the unbounded lost-race re-staging this path used to do was
+        O(k²·table).  The retry loop survives only as a guard against
+        out-of-band catalog mutation (a table replaced around `append`);
+        the delta chain stays linear either way.
         """
+        with self._lock:
+            tlock = self._append_locks.setdefault(table, threading.Lock())
+        with tlock:
+            return self._append_staged(table, rows)
+
+    def _append_staged(self, table: str, rows) -> TableDelta:
+        """Stage + install one append (table staging lock held)."""
         while True:
             base = self.catalog[table]
             delta = base.append(rows)          # O(table) copy, unlocked
             with self._lock:
                 if self.catalog.tables.get(table) is not base:
+                    # only an out-of-band catalog.add can get here now:
+                    # same-table appends serialize on the staging lock
+                    REGISTRY.counter("service.append_restages").inc()
                     continue                   # lost the race: re-stage
                 self.catalog.add(delta.new_table)
                 log = self._pending.setdefault(table, [])
@@ -354,6 +381,23 @@ class JoinService:
                 return None
         return deltas
 
+    def can_refresh(self, query: JoinQuery, plan: PhysicalPlan) -> bool:
+        """True if a cache miss for (query, plan) would be served by a
+        delta refresh of a retained state rather than a cold GJ build.
+
+        Advisory — the answer can go stale the moment the lock drops —
+        but it is the admission gate ``repro.serve.server.JoinServer``
+        uses to price only genuinely cold builds: a refreshable miss
+        costs O(delta), not O(full build), and must not be rejected or
+        queued by a cost ceiling sized for the latter.
+        """
+        if not self.incremental:
+            return False
+        with self._lock:
+            state = self._states.get(self._state_key(query, plan))
+            return (state is not None
+                    and self._chain_deltas(state) is not None)
+
     def _try_refresh(self, query: JoinQuery, plan: PhysicalPlan,
                      lookup: float) -> Optional[ServiceReply]:
         """Serve a cache miss by delta-refreshing a retained state."""
@@ -386,15 +430,18 @@ class JoinService:
                 return None
             # cache.refresh runs under the service lock by design: the
             # atomic pairing with the state check above is what closes the
-            # invalidate() race.  The known cost is that an eviction spill
-            # triggered by this admit writes to disk inside the lock —
-            # rare (budget-exceeded refresh) and bounded by one summary.
-            self.cache.refresh(old_key, new_key, new_state.gfjs,
-                               tables={qt.table for qt in query.tables})
+            # invalidate() race.  Eviction spills triggered by this admit
+            # are *deferred* — only the in-memory bookkeeping happens under
+            # the lock; the disk writes run below, after release, so a slow
+            # spill can't stall concurrent cache-hit readers.
+            spills = self.cache.refresh(
+                old_key, new_key, new_state.gfjs,
+                tables={qt.table for qt in query.tables}, defer_spill=True)
             self.refreshes += 1
             self._states[skey] = new_state
             self._states.move_to_end(skey)
             self._shrink_states()
+        self.cache.write_spills(spills)
         timings = {"cache_lookup": lookup, "refresh": dt}
         timings.update({f"refresh_{k}": v for k, v in report.items()
                         if k != "seconds"})

@@ -1,0 +1,486 @@
+"""JoinServer unit + integration tests (ISSUE 8): single-flight request
+collapsing, batched per-key probes, admission control, deadlines, and the
+trace/metrics surface — every answer bit-identical to a direct
+JoinService call."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs.check import validate
+from repro.obs.trace import Tracer
+from repro.relational.query import JoinQuery
+from repro.relational.synth import lastfm_like
+from repro.relational.table import Catalog, Table
+from repro.serve.server import (AdmissionRejected, DeadlineExceeded,
+                                JoinServer, SingleFlight, lookup_rows)
+from repro.summary.service import JoinService
+
+
+@pytest.fixture(scope="module")
+def lastfm():
+    return lastfm_like(n_users=50, n_artists=40, artists_per_user=4,
+                       friends_per_user=3)
+
+
+def _gate_frames(svc, entered=None, release=None):
+    """Intercept ``svc.frame`` with an entered/release gate + call count.
+
+    Instance-attribute shadowing, so only this service is affected and
+    ``calls`` counts *service-level* builds — the thing the collapse
+    invariant bounds.
+    """
+    orig = svc.frame
+    calls = []
+
+    def gated(query, plan=None):
+        calls.append(query.name)
+        if entered is not None:
+            entered.set()
+        if release is not None:
+            assert release.wait(10.0), "gate never released"
+        return orig(query, plan=plan)
+
+    svc.frame = gated
+    return calls
+
+
+# -- SingleFlight unit ------------------------------------------------------
+
+def test_single_flight_collapses_and_shares_result():
+    sf = SingleFlight()
+    entered, release = threading.Event(), threading.Event()
+    builds, results = [], []
+
+    def build(_fl):
+        builds.append(1)
+        entered.set()
+        release.wait(5.0)
+        return "value"
+
+    def leader():
+        results.append(sf.do("k", build))
+
+    def waiter():
+        entered.wait(5.0)
+        results.append(sf.do("k", build))
+
+    ts = [threading.Thread(target=leader)] + \
+        [threading.Thread(target=waiter) for _ in range(4)]
+    for t in ts:
+        t.start()
+    entered.wait(5.0)
+    while sum(fl.waiters for fl in sf._flights.values()) < 4:
+        time.sleep(0.001)
+    release.set()
+    for t in ts:
+        t.join()
+    assert len(builds) == 1
+    assert {v for v, _, _ in results} == {"value"}
+    assert sorted(lead for _, lead, _ in results) == [False] * 4 + [True]
+    # flight table drains: a later call starts a fresh flight
+    assert sf.inflight() == 0
+    v, lead, _ = sf.do("k", lambda _fl: "again")
+    assert v == "again" and lead
+
+
+def test_single_flight_propagates_leader_error_to_waiters():
+    sf = SingleFlight()
+    entered, release = threading.Event(), threading.Event()
+    errors = []
+
+    def build(_fl):
+        entered.set()
+        release.wait(5.0)
+        raise ValueError("boom")
+
+    def leader():
+        try:
+            sf.do("k", build)
+        except ValueError as e:
+            errors.append(e)
+
+    def waiter():
+        entered.wait(5.0)
+        try:
+            sf.do("k", lambda _fl: "never")
+        except ValueError as e:
+            errors.append(e)
+
+    ts = [threading.Thread(target=leader), threading.Thread(target=waiter)]
+    ts[0].start()
+    entered.wait(5.0)
+    ts[1].start()
+    while sum(fl.waiters for fl in sf._flights.values()) < 1:
+        time.sleep(0.001)
+    release.set()
+    for t in ts:
+        t.join()
+    assert len(errors) == 2
+    assert all(str(e) == "boom" for e in errors)
+
+
+def test_single_flight_wait_timeout():
+    sf = SingleFlight()
+    entered, release = threading.Event(), threading.Event()
+
+    def leader():
+        sf.do("k", lambda _fl: (entered.set(), release.wait(5.0))[0])
+
+    t = threading.Thread(target=leader)
+    t.start()
+    entered.wait(5.0)
+    with pytest.raises(DeadlineExceeded):
+        sf.do("k", lambda _fl: "never", timeout=0.05)
+    release.set()
+    t.join()
+
+
+# -- lookup_rows ------------------------------------------------------------
+
+def test_lookup_rows_matches_table_and_zeros_missing():
+    table = {"U": np.asarray([2, 5, 9]),
+             "n": np.asarray([10.0, 20.0, 30.0]),
+             "s": np.asarray([1.5, 2.5, 3.5])}
+    out = lookup_rows(table, "U", ["n", "s"], np.asarray([5, 1, 9, 2, 99]))
+    np.testing.assert_allclose(out, [[20.0, 2.5], [0.0, 0.0], [30.0, 3.5],
+                                     [10.0, 1.5], [0.0, 0.0]])
+    assert out.dtype == np.float32
+    empty = lookup_rows({"U": np.asarray([]), "n": np.asarray([])},
+                        "U", ["n"], np.asarray([1, 2]))
+    np.testing.assert_allclose(empty, [[0.0], [0.0]])
+
+
+# -- request collapsing -----------------------------------------------------
+
+def test_frame_equals_direct_service(lastfm):
+    cat, qs = lastfm
+    q = qs["lastfm_A1"]
+    server = JoinServer(JoinService(cat))
+    want = JoinService(cat).frame(q)
+    got = server.frame(q)
+    assert got.frame.count() == want.frame.count()
+    np.testing.assert_array_equal(got.frame.weights[0],
+                                  want.frame.weights[0])
+
+
+def test_cold_stampede_collapses_to_one_build(lastfm):
+    """The tentpole invariant: 16 racers -> exactly 1 service build,
+    1 "computed" reply, 15 "collapsed" replies, all bit-identical."""
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    server = JoinServer(svc)
+    q = qs["lastfm_B"]
+    plan = svc.compile(q)           # pre-compile: the race is on the build
+    entered, release = threading.Event(), threading.Event()
+    calls = _gate_frames(svc, entered, release)
+
+    N = 16
+    replies, errors = [None] * N, []
+
+    def worker(i):
+        try:
+            replies[i] = server.frame(q, plan=plan)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(N)]
+    ts[0].start()
+    assert entered.wait(10.0)
+    for t in ts[1:]:
+        t.start()
+    # every non-leader must be parked on the latch before the build runs
+    while sum(fl.waiters
+              for fl in server._flights._flights.values()) < N - 1:
+        time.sleep(0.001)
+    release.set()
+    for t in ts:
+        t.join()
+
+    assert not errors
+    assert calls == [q.name]                     # exactly one service build
+    sources = sorted(r.source for r in replies)
+    assert sources.count("computed") == 1
+    assert sources.count("collapsed") == N - 1
+    assert {r.key for r in replies} == {replies[0].key}
+    ref = replies[0].frame
+    for r in replies:
+        assert r.frame.count() == replies[0].frame.count()
+        for a, b in zip(r.frame.weights, ref.weights):
+            np.testing.assert_array_equal(a, b)  # same build: bit-identical
+    st = server.stats()
+    assert st["requests"] == N and st["collapsed"] == N - 1
+    assert st["inflight"] == 0
+
+
+def test_waiter_deadline_expiry_is_clean(lastfm):
+    """Waiters whose deadline expires get DeadlineExceeded — never a
+    partial frame; the leader still completes."""
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    server = JoinServer(svc)
+    q = qs["lastfm_tri"]
+    plan = svc.compile(q)
+    entered, release = threading.Event(), threading.Event()
+    _gate_frames(svc, entered, release)
+
+    leader_reply, waiter_errs = [], []
+
+    def leader():
+        leader_reply.append(server.frame(q, plan=plan))
+
+    def waiter():
+        try:
+            server.frame(q, plan=plan, deadline=0.05)
+        except DeadlineExceeded as e:
+            waiter_errs.append(e)
+
+    tl = threading.Thread(target=leader)
+    tl.start()
+    assert entered.wait(10.0)
+    tw = [threading.Thread(target=waiter) for _ in range(3)]
+    for t in tw:
+        t.start()
+    for t in tw:
+        t.join()                    # expire while the leader is gated
+    release.set()
+    tl.join()
+
+    assert len(waiter_errs) == 3
+    assert all(isinstance(e, TimeoutError) for e in waiter_errs)
+    assert leader_reply[0].source == "computed"
+    assert server.stats()["deadline_expired"] == 3
+
+
+# -- batched probes ---------------------------------------------------------
+
+def test_lookup_matches_direct_group_by(lastfm):
+    cat, qs = lastfm
+    q = qs["lastfm_A1"]
+    svc = JoinService(cat)
+    server = JoinServer(svc)
+    aggs = {"n": "count", "s": ("sum", "A1")}
+    direct = JoinService(cat).frame(q).frame.group_by(["U1"], **aggs)
+    uniq = np.asarray(direct["U1"])
+    keys = np.concatenate([uniq[:7], np.asarray([10 ** 9])])  # + a miss
+    rows = server.lookup(q, "U1", keys, aggs)
+    assert rows.shape == (8, 2)
+    np.testing.assert_allclose(rows[:7, 0], np.asarray(direct["n"][:7],
+                                                       np.float32))
+    np.testing.assert_allclose(rows[:7, 1], np.asarray(direct["s"][:7],
+                                                       np.float32))
+    np.testing.assert_allclose(rows[7], [0.0, 0.0])
+    # resident table: the second probe re-pulls nothing
+    server.lookup(q, "U1", keys, aggs)
+    assert server.stats()["table_recomputes"] == 1
+
+
+def test_concurrent_probes_batch_into_one_lookup(lastfm):
+    """Followers arriving while the leader resolves the table are answered
+    by the leader's single vectorized lookup."""
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    server = JoinServer(svc)
+    q = qs["lastfm_B"]
+    plan = svc.compile(q)
+    aggs = {"n": "count"}
+    direct = JoinService(cat).frame(q).frame.group_by(["U1"], **aggs)
+    uniq = np.asarray(direct["U1"])
+    entered, release = threading.Event(), threading.Event()
+    _gate_frames(svc, entered, release)
+
+    outs, errors = {}, []
+
+    def prober(i):
+        try:
+            ks = uniq[i:i + 3]
+            outs[i] = (ks, server.lookup(q, "U1", ks, aggs, plan=plan))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=prober, args=(i,)) for i in range(4)]
+    ts[0].start()
+    assert entered.wait(10.0)       # leader parked inside the table build
+    for t in ts[1:]:
+        t.start()
+    while sum(len(b.pending) for b in server._batchers.values()) < 3:
+        time.sleep(0.001)
+    release.set()
+    for t in ts:
+        t.join()
+
+    assert not errors
+    for i, (ks, rows) in outs.items():
+        pos = np.searchsorted(uniq, ks)
+        np.testing.assert_allclose(
+            rows[:, 0], np.asarray(direct["n"], np.float32)[pos])
+    st = server.stats()
+    assert st["probes"] == 1               # ONE vectorized lookup
+    assert st["batched"] == 3              # followers served from the batch
+    assert st["table_recomputes"] == 1
+
+
+def test_lookup_sees_appends(lastfm):
+    """The resident table is keyed on content versions: an append mints a
+    new table and probes reflect the grown catalog."""
+    rng = np.random.default_rng(3)
+    t = Table("events", {"x0": rng.integers(0, 5, 40).astype(np.int64),
+                         "x1": rng.integers(0, 5, 40).astype(np.int64)})
+    q = JoinQuery.of("events_q", [("events", {"x0": "A", "x1": "B"})])
+    svc = JoinService(Catalog.of(t))
+    server = JoinServer(svc)
+    keys = np.arange(5)
+    before = server.lookup(q, "A", keys, {"n": "count"})
+    svc.append("events", {"x0": np.zeros(6, np.int64),
+                          "x1": np.ones(6, np.int64)})
+    after = server.lookup(q, "A", keys, {"n": "count"})
+    assert after[0, 0] == before[0, 0] + 6
+    assert server.stats()["table_recomputes"] == 2
+
+
+# -- admission control ------------------------------------------------------
+
+def test_admission_rejects_expensive_cold_build(lastfm):
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    q = qs["lastfm_A1"]
+    plan = svc.compile(q)
+    assert plan.admission_cost() > 0.0
+    server = JoinServer(svc, cost_ceiling=plan.admission_cost() / 2)
+    with pytest.raises(AdmissionRejected):
+        server.frame(q, plan=plan)
+    assert server.stats()["rejected"] == 1
+    # warm via the raw service: the hit path is never admission-gated
+    svc.frame(q, plan=plan)
+    assert server.frame(q, plan=plan).source == "memory"
+
+
+def test_admission_passes_cheap_and_unceilinged(lastfm):
+    cat, qs = lastfm
+    q = qs["lastfm_B"]
+    svc = JoinService(cat)
+    plan = svc.compile(q)
+    assert JoinServer(svc).frame(q, plan=plan).source == "computed"
+    svc2 = JoinService(cat)
+    plan2 = svc2.compile(q)
+    server = JoinServer(svc2, cost_ceiling=plan2.admission_cost() * 10)
+    assert server.frame(q, plan=plan2).source == "computed"
+    assert server.stats()["rejected"] == 0
+
+
+def test_admission_queue_deadline(lastfm):
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    q = qs["lastfm_tri"]
+    plan = svc.compile(q)
+    server = JoinServer(svc, cost_ceiling=plan.admission_cost() / 2,
+                        admission="queue", max_expensive_builds=1)
+    server._build_slots.acquire()           # occupy the only build slot
+    try:
+        with pytest.raises(DeadlineExceeded):
+            server.frame(q, plan=plan, deadline=0.1)
+        assert server.stats()["deadline_expired"] == 1
+        assert server.stats()["queue_depth"] == 0   # gauge unwound
+    finally:
+        server._build_slots.release()
+    reply = server.frame(q, plan=plan, deadline=30.0)
+    assert reply.source == "computed"       # slot free: queued build runs
+
+
+def test_admission_queue_skips_refreshable_miss():
+    """A refreshable miss is O(delta): it must pass the ceiling free."""
+    rng = np.random.default_rng(4)
+    t = Table("events", {"x0": rng.integers(0, 5, 40).astype(np.int64),
+                         "x1": rng.integers(0, 5, 40).astype(np.int64)})
+    q = JoinQuery.of("events_q", [("events", {"x0": "A", "x1": "B"})])
+    svc = JoinService(Catalog.of(t))
+    plan = svc.compile(q)
+    svc.frame(q, plan=plan)                 # retain incremental state
+    svc.append("events", {"x0": np.asarray([1], np.int64),
+                          "x1": np.asarray([2], np.int64)})
+    assert svc.can_refresh(q, plan)
+    server = JoinServer(svc, cost_ceiling=plan.admission_cost() / 2)
+    reply = server.frame(q, plan=plan)      # miss, but never rejected
+    assert reply.source == "refreshed"
+
+
+def test_server_constructor_validation(lastfm):
+    cat, _ = lastfm
+    svc = JoinService(cat)
+    with pytest.raises(ValueError):
+        JoinServer(svc, admission="maybe")
+    with pytest.raises(ValueError):
+        JoinServer(svc, max_expensive_builds=0)
+    with pytest.raises(ValueError):
+        JoinServer(svc, batch_window=-1.0)
+
+
+# -- observability ----------------------------------------------------------
+
+def test_server_trace_validates_with_expect_server(lastfm):
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    tracer = Tracer()
+    server = JoinServer(svc, tracer=tracer)
+    q = qs["lastfm_A1"]
+    plan = svc.compile(q)
+    entered, release = threading.Event(), threading.Event()
+    _gate_frames(svc, entered, release)
+
+    def leader():
+        server.frame(q, plan=plan)
+
+    def waiter():
+        entered.wait(10.0)
+        server.frame(q, plan=plan)
+
+    tl = threading.Thread(target=leader)
+    tw = threading.Thread(target=waiter)
+    tl.start()
+    assert entered.wait(10.0)
+    tw.start()
+    while sum(fl.waiters
+              for fl in server._flights._flights.values()) < 1:
+        time.sleep(0.001)
+    release.set()
+    tl.join()
+    tw.join()
+    server.lookup(q, "U1", np.asarray([1, 2, 3]), {"n": "count"}, plan=plan)
+
+    reqs = tracer.find("server:request")
+    builds = tracer.find("server:build")
+    # 2 frame racers + 1 lookup + the lookup's internal frame pull
+    assert len([s for s in reqs if s.args["kind"] == "frame"]) == 3
+    assert len([s for s in reqs if s.args["kind"] == "lookup"]) == 1
+    assert builds, "leader opened no server:build span"
+    assert all("source" in s.args for s in reqs)
+    collapsed = [s for s in reqs if s.args.get("collapsed")]
+    assert len(collapsed) == 1
+    # the latch handoff is recorded: waiter's span links the leader's build
+    assert collapsed[0].args["build_span_id"] in {b.span_id for b in builds}
+    doc = tracer.to_chrome_trace()
+    assert validate(doc, expect_server=True) == []
+
+    # the validator actually bites: strip sources and it must complain
+    for ev in doc["traceEvents"]:
+        if ev.get("name") == "server:request":
+            ev["args"].pop("source", None)
+    assert any("source" in e for e in validate(doc, expect_server=True))
+    assert any("server:request" in e
+               for e in validate({"traceEvents": [
+                   {"name": "x", "ph": "X", "ts": 0, "dur": 1,
+                    "pid": 1, "tid": 1}]}, expect_server=True))
+
+
+def test_server_metrics_registry_mirrors(lastfm):
+    from repro.obs.metrics import REGISTRY
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    server = JoinServer(svc)
+    q = qs["lastfm_B"]
+    before = REGISTRY.counter("server.requests").value
+    server.frame(q)
+    server.frame(q)
+    assert REGISTRY.counter("server.requests").value - before == 2

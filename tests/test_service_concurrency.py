@@ -400,3 +400,268 @@ def test_aux_nbytes_hammer_vs_lockless_growers(lastfm):
     for t in threads:
         t.join()
     assert not errors, errors
+
+
+# -- ISSUE 8: serving-tier collapse correctness + lock-scope bugfixes -------
+
+def _gate_frames(svc, entered, release):
+    """Shadow ``svc.frame`` with an entered/release gate (call-counting)."""
+    orig = svc.frame
+    calls = []
+
+    def gated(query, plan=None):
+        calls.append(query.name)
+        entered.set()
+        assert release.wait(10.0), "gate never released"
+        return orig(query, plan=plan)
+
+    svc.frame = gated
+    return calls
+
+
+def test_collapse_stampede_exactly_one_build():
+    """16 threads x one cold query: one "computed", 15 "collapsed", every
+    reply the same key and the same frame."""
+    from repro.serve.server import JoinServer
+
+    svc, q = _row_count_service(50)
+    plan = svc.compile(q)
+    server = JoinServer(svc)
+    entered, release = threading.Event(), threading.Event()
+    calls = _gate_frames(svc, entered, release)
+
+    N = 16
+    replies, errors = [None] * N, []
+
+    def worker(i):
+        try:
+            replies[i] = server.frame(q, plan=plan)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(N)]
+    ts[0].start()
+    assert entered.wait(10.0)
+    for t in ts[1:]:
+        t.start()
+    while sum(fl.waiters
+              for fl in server._flights._flights.values()) < N - 1:
+        time.sleep(0.001)
+    release.set()
+    for t in ts:
+        t.join()
+
+    assert not errors
+    assert calls == [q.name]                    # exactly one service build
+    sources = sorted(r.source for r in replies)
+    assert sources.count("computed") == 1
+    assert sources.count("collapsed") == N - 1
+    assert len({r.key for r in replies}) == 1
+    assert len({r.frame.count() for r in replies}) == 1
+
+
+def test_append_mid_collapse_version_consistent():
+    """An append landing while a stampede is parked on the latch: every
+    reply (leader and waiters alike) reflects ONE catalog state."""
+    from repro.serve.server import JoinServer
+
+    base, grow = 40, 5
+    svc, q = _row_count_service(base)
+    plan = svc.compile(q)
+    server = JoinServer(svc)
+    entered, release = threading.Event(), threading.Event()
+    _gate_frames(svc, entered, release)
+
+    N = 8
+    replies, errors = [None] * N, []
+
+    def worker(i):
+        try:
+            replies[i] = server.frame(q, plan=plan)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(N)]
+    ts[0].start()
+    assert entered.wait(10.0)
+    for t in ts[1:]:
+        t.start()
+    while sum(fl.waiters
+              for fl in server._flights._flights.values()) < N - 1:
+        time.sleep(0.001)
+    # the leader is parked pre-build: this append lands mid-collapse
+    rng = np.random.default_rng(7)
+    svc.append("events", {"x0": rng.integers(0, 9, grow).astype(np.int64),
+                          "x1": rng.integers(0, 9, grow).astype(np.int64)})
+    release.set()
+    for t in ts:
+        t.join()
+
+    assert not errors
+    counts = {r.frame.count() for r in replies}
+    assert len(counts) == 1                 # never a mix of old/new state
+    assert counts <= {base, base + grow}    # a lattice point, not a tear
+    assert len({r.key for r in replies}) == 1
+    # the service converges on the grown catalog afterwards
+    assert svc.count(q) == base + grow
+
+
+def test_slow_spill_does_not_stall_cache_hit(tmp_path, monkeypatch):
+    """ISSUE 8 satellite: the refresh-commit eviction spill runs OUTSIDE
+    the service lock — a 1s disk write must not block a cache-hit frame."""
+    import repro.summary.cache as cache_mod
+    from repro.summary.cache import SummaryCache
+
+    rng = np.random.default_rng(0)
+    events = Table("events",
+                   {"x0": rng.integers(0, 9, 50).astype(np.int64),
+                    "x1": rng.integers(0, 9, 50).astype(np.int64)})
+    other = Table("other",
+                  {"y0": rng.integers(0, 9, 30).astype(np.int64),
+                   "y1": rng.integers(0, 9, 30).astype(np.int64)})
+    q = JoinQuery.of("events_q", [("events", {"x0": "A", "x1": "B"})])
+    q2 = JoinQuery.of("other_q", [("other", {"y0": "C", "y1": "D"})])
+    cache = SummaryCache(byte_budget=1, spill_dir=str(tmp_path))
+    svc = JoinService(Catalog.of(events, other), cache=cache)
+
+    svc.frame(q)                    # retains incremental state for events_q
+    svc.frame(q2)                   # evicts events entry; "other" resident
+    svc.append("events", {"x0": np.asarray([1, 2], np.int64),
+                          "x1": np.asarray([3, 4], np.int64)})
+
+    entered = threading.Event()
+    real_save = cache_mod.save_gfjs
+
+    def slow_save(gfjs, path):
+        entered.set()
+        time.sleep(1.0)             # a slow disk
+        return real_save(gfjs, path)
+
+    monkeypatch.setattr(cache_mod, "save_gfjs", slow_save)
+
+    errors, done = [], threading.Event()
+
+    def refresher():
+        try:
+            # delta refresh -> cache.refresh admit -> budget evicts q2's
+            # entry -> deferred spill hits the slow disk
+            reply = svc.frame(q)
+            assert reply.source == "refreshed"
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            done.set()
+
+    t = threading.Thread(target=refresher)
+    t.start()
+    assert entered.wait(10.0)       # the spill write is in progress
+    t0 = time.perf_counter()
+    reply = svc.frame(q)            # hit on the freshly-admitted entry
+    dt = time.perf_counter() - t0
+    t.join()
+    done.wait()
+    assert not errors
+    assert reply.cache_hit
+    # with the spill inside the lock this is ~1s; outside it is ~ms
+    assert dt < 0.5, f"cache-hit frame stalled {dt:.3f}s behind a spill"
+    assert cache.stats.spills >= 1
+
+
+def test_append_hammer_stages_each_block_once():
+    """ISSUE 8 satellite: per-table append locks — k appenders stage k
+    copies total, never the O(k^2) lost-race restaging."""
+    svc, q = _row_count_service(30)
+    n_threads, per_thread, block = 8, 3, 2
+
+    stagings = []
+    real_append = Table.append
+
+    def counting_append(self, rows):
+        stagings.append(self.name)
+        return real_append(self, rows)
+
+    Table.append = counting_append
+    try:
+        rng = np.random.default_rng(5)
+        blocks = [{"x0": rng.integers(0, 9, block).astype(np.int64),
+                   "x1": rng.integers(0, 9, block).astype(np.int64)}
+                  for _ in range(n_threads * per_thread)]
+        errors = []
+
+        def appender(i):
+            try:
+                for j in range(per_thread):
+                    svc.append("events", blocks[i * per_thread + j])
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        ts = [threading.Thread(target=appender, args=(i,))
+              for i in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert not errors
+    finally:
+        Table.append = real_append
+
+    total = n_threads * per_thread
+    # one staging copy per logical append: the lost-race retry never fired
+    assert len(stagings) == total, f"{len(stagings)} stagings for {total}"
+    assert svc.catalog["events"].num_rows == 30 + total * block
+    assert svc.count(q) == 30 + total * block
+
+
+def test_feature_provider_stampede_recomputes_once():
+    """ISSUE 8 satellite: the provider's memo rebuild is single-flight —
+    a post-append stampede computes the per-key table exactly once."""
+    from repro.obs.metrics import REGISTRY
+    from repro.serve.engine import RelationalFeatureProvider
+
+    svc, q = _row_count_service(40)
+    prov = RelationalFeatureProvider(svc, q, key_var="A",
+                                     aggs={"n": "count"})
+    keys = np.arange(9)
+    counter = REGISTRY.counter("serve.feature_recomputes")
+    base = counter.value
+    warm = prov.features(keys)
+    assert counter.value - base == 1
+    svc.append("events", {"x0": np.zeros(4, np.int64),
+                          "x1": np.ones(4, np.int64)})
+
+    entered, release = threading.Event(), threading.Event()
+    real_table = prov._feature_table
+
+    def gated_table():
+        entered.set()
+        assert release.wait(10.0)
+        return real_table()
+
+    prov._feature_table = gated_table
+
+    N = 8
+    outs, errors = [None] * N, []
+
+    def worker(i):
+        try:
+            outs[i] = prov.features(keys)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(N)]
+    ts[0].start()
+    assert entered.wait(10.0)
+    for t in ts[1:]:
+        t.start()
+    while sum(fl.waiters
+              for fl in prov._flight._flights.values()) < N - 1:
+        time.sleep(0.001)
+    release.set()
+    for t in ts:
+        t.join()
+
+    assert not errors
+    assert counter.value - base == 2        # warm + ONE stampede rebuild
+    assert outs[0][0, 0] == warm[0, 0] + 4  # key 0 grew by the append
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
