@@ -153,6 +153,63 @@ def bench_dist(partitions: int = 4, scale: float = 1.0,
                 f"retries={report.get('retries', 0)};cpus={_cpus()}"))
     from repro.dist.actions import shutdown_shared_executor
     shutdown_shared_executor()
+    lines.extend(bench_hybrid(scale))
+    return lines
+
+
+# ---------------------------------------------------------------------------
+# Hypertree-decomposed hybrid GJ/WCOJ vs pure GJ (DESIGN §19)
+# ---------------------------------------------------------------------------
+
+def _hybrid_instances(scale: float):
+    """Cyclic workloads: the skewed lastfm cycle plus the hub-skewed
+    pattern family (the AGM-gap instances the WCOJ bag step exists for)."""
+    from repro.relational.synth import cyclic_pattern_like, lastfm_like
+    out = []
+    cat, qs = lastfm_like(
+        n_users=int(1200 * scale), n_artists=int(900 * scale),
+        artists_per_user=18, friends_per_user=8, alpha=1.35, seed=7)
+    out.append(("lastfm_hot_cyc", cat, qs["lastfm_cyc"]))
+    # clique/star sizes are modest on purpose: the PURE-GJ side of the
+    # comparison is quadratic through the hub, and the row exists to
+    # measure the gap, not to spend minutes proving it grows
+    for pattern, m in (("triangle", 1500), ("clique4", 400),
+                       ("star_cyclic", 400)):
+        c, q = cyclic_pattern_like(pattern, m=int(m * scale), domain=5000,
+                                   dense=200, dense_domain=40, seed=0)
+        out.append((f"{pattern}_hub", c, q))
+    return out
+
+
+def bench_hybrid(scale: float = 1.0) -> List[str]:
+    """``hybrid/<name>`` rows: forced-hybrid wall vs pure GJ on the SAME
+    elimination order (the isolated bag-step effect), plus which plan the
+    cost model picks when left alone (``picked=``).  Exactness is asserted
+    (join sizes must match) — a perf row from a wrong answer is worthless."""
+    from repro.core.api import GraphicalJoin
+    lines: List[str] = []
+    for name, cat, query in _hybrid_instances(scale):
+        gj_h = GraphicalJoin(cat, query, hybrid=True)
+        plan_h = gj_h.plan()
+        t0 = time.perf_counter()
+        g_h = gj_h.run()
+        hyb_wall = time.perf_counter() - t0
+        gj_p = GraphicalJoin(cat, query, hybrid=False,
+                             elimination_order=list(plan_h.order))
+        t0 = time.perf_counter()
+        g_p = gj_p.run()
+        pure_wall = time.perf_counter() - t0
+        assert g_h.join_size == g_p.join_size, name
+        picked = GraphicalJoin(cat, query).plan().source
+        speedup = pure_wall / hyb_wall if hyb_wall > 0 else 0.0
+        rho = max((b.rho for b in plan_h.bags), default=0.0)
+        lines.append(csv_line(
+            f"hybrid/{name}", hyb_wall * 1e6,
+            f"pure_us={pure_wall * 1e6:.1f};"
+            f"hybrid_speedup={speedup:.2f}x;"
+            f"bags={len(plan_h.bags)};rho={rho:.2f};"
+            f"picked={picked};join_size={g_h.join_size};"
+            f"order={'|'.join(plan_h.order)}"))
     return lines
 
 

@@ -73,12 +73,64 @@ def smoke() -> int:
         print(gj.explain())
         print()
 
+    def check_hybrid(name, catalog, query):
+        """Decomposition validity + exactness on a cyclic instance."""
+        import numpy as np
+        gj = GraphicalJoin(catalog, query)        # hybrid=None: model picks
+        phys = gj.plan()
+        print(f"== {name} (hybrid gate, chosen={phys.source}) ==")
+        if phys.source != "hybrid" or not phys.bags:
+            failures.append(f"{name}: cost model did not pick the hybrid "
+                            f"plan on the AGM-gap instance "
+                            f"(chosen={phys.source})")
+            return
+        seen = set()
+        for bag in phys.bags:
+            if sorted(bag.bind_order) != sorted(bag.vars):
+                failures.append(f"{name}: bag bind_order not a permutation "
+                                f"of its scope {bag.vars}")
+            for i in bag.occurrences:
+                if not 0 <= i < len(query.tables):
+                    failures.append(f"{name}: bag occurrence {i} out of range")
+                elif i in seen:
+                    failures.append(f"{name}: occurrence {i} in two bags")
+                elif not set(query.tables[i].variables) <= set(bag.vars):
+                    failures.append(f"{name}: occurrence {i} vars "
+                                    f"{query.tables[i].variables} escape "
+                                    f"bag scope {bag.vars}")
+                seen.add(i)
+        g_h = gj.run()
+        pure = GraphicalJoin(catalog, query, hybrid=False,
+                             elimination_order=list(phys.order))
+        g_p = pure.run()
+        if pure.plan().bags:
+            failures.append(f"{name}: hybrid=False plan still has bags")
+        vs = sorted(query.variables)
+        def rows(g, gfjs):
+            res = g.desummarize(gfjs, decode=False)
+            if gfjs.join_size == 0:
+                return np.zeros((0, len(vs)), np.int64)
+            m = np.stack([res[v] for v in vs], axis=1)
+            return m[np.lexsort(m.T[::-1])]
+        if g_h.join_size != g_p.join_size or \
+                not np.array_equal(rows(gj, g_h), rows(pure, g_p)):
+            failures.append(f"{name}: hybrid result differs from pure GJ")
+        print(gj.explain())
+        print()
+
     cat, query = figure1()
     check("quickstart/figure1", cat, query)
+    if GraphicalJoin(cat, query).plan().bags:
+        failures.append("figure1: acyclic plan must never carry bags")
 
     cat, qs = lastfm_like(n_users=300, n_artists=250, artists_per_user=8,
                           friends_per_user=4, alpha=1.4, seed=0)
     check("skewed/lastfm_cyc", cat, qs["lastfm_cyc"])
+
+    from repro.relational.synth import cyclic_pattern_like
+    cat, query = cyclic_pattern_like("triangle", m=400, domain=2000,
+                                     dense=80, dense_domain=20, seed=0)
+    check_hybrid("hybrid/triangle_hub", cat, query)
 
     if failures:
         print("PLANNER SMOKE FAILURES:")

@@ -32,8 +32,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single section (table1..table6, "
-                         "sensitivity, planner, summary, kernels, dist, "
-                         "serve)")
+                         "sensitivity, planner, cyclic, summary, kernels, "
+                         "dist, serve)")
     ap.add_argument("--kernels-json", default="BENCH_kernels.json",
                     metavar="PATH",
                     help="where to write the kernels-section JSON summary "
@@ -99,6 +99,7 @@ def main() -> None:
         "table6": tables.bench_table6,
         "sensitivity": tables.bench_sensitivity,
         "planner": tables.bench_planner,
+        "cyclic": tables.bench_cyclic,
         "summary": lambda tmp: bench_summary(),
         "kernels": kernels_section,
         "dist": dist_section,

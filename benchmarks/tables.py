@@ -243,6 +243,67 @@ def bench_planner(tmpdir: str) -> List[str]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Cyclic-pattern generators (DESIGN §19) — thin wrappers over
+# repro.relational.synth.cyclic_pattern_like with the skew knob exposed.
+# ---------------------------------------------------------------------------
+
+def gen_triangle(m: int = 1500, *, hub_frac: float = 1.0, seed: int = 0):
+    """Hub-skewed triangle: pairwise joins quadratic, output near-linear."""
+    from repro.relational.synth import cyclic_pattern_like
+    return cyclic_pattern_like("triangle", m=m, hub_frac=hub_frac, seed=seed)
+
+
+def gen_clique4(m: int = 400, *, hub_frac: float = 1.0, seed: int = 0):
+    """Hub-skewed 4-clique (6 edge tables over A,B,C,D)."""
+    from repro.relational.synth import cyclic_pattern_like
+    return cyclic_pattern_like("clique4", m=m, hub_frac=hub_frac, seed=seed)
+
+
+def gen_star_cyclic(m: int = 400, *, hub_frac: float = 1.0, seed: int = 0):
+    """Wheel W3: star hub over a triangle rim (star + cycle in one query)."""
+    from repro.relational.synth import cyclic_pattern_like
+    return cyclic_pattern_like("star_cyclic", m=m, hub_frac=hub_frac,
+                               seed=seed)
+
+
+def bench_cyclic(tmpdir: str) -> List[str]:
+    """Hybrid GJ/WCOJ vs pure GJ across the skew knob.
+
+    Sweeps ``hub_frac`` on each cyclic pattern: at 0.0 (uniform edges)
+    hybrid and pure GJ should be within noise of each other — and the
+    cost model should mostly keep pure GJ; at 1.0 (the full AGM-gap
+    instance) the bag step's per-level intersection sidesteps the
+    quadratic pairwise products and the model picks hybrid.  Exactness is
+    asserted on every cell.
+    """
+    s = float(os.environ.get("BENCH_SCALE", "1.0"))
+    # clique/star sizes stay modest: the pure-GJ side is quadratic through
+    # the hub and exists only as the comparison baseline
+    gens = [("triangle", gen_triangle, int(1500 * s)),
+            ("clique4", gen_clique4, int(400 * s)),
+            ("star_cyclic", gen_star_cyclic, int(400 * s))]
+    out = []
+    for name, gen, m in gens:
+        for hub_frac in (0.0, 0.5, 1.0):
+            cat, query = gen(m, hub_frac=hub_frac, seed=0)
+            gj_h = GraphicalJoin(cat, query, hybrid=True)
+            plan_h = gj_h.plan()
+            g_h, t_h = timer(gj_h.run)
+            gj_p = GraphicalJoin(cat, query, hybrid=False,
+                                 elimination_order=list(plan_h.order))
+            g_p, t_p = timer(gj_p.run)
+            assert g_h.join_size == g_p.join_size, (name, hub_frac)
+            picked = GraphicalJoin(cat, query).plan().source
+            out.append(csv_line(
+                f"cyclic/{name}/hub{hub_frac:g}", t_h * 1e6,
+                f"pure_us={t_p * 1e6:.1f};"
+                f"hybrid_speedup={t_p / max(t_h, 1e-9):.2f}x;"
+                f"picked={picked};bags={len(plan_h.bags)};"
+                f"join_size={g_h.join_size};m={m}"))
+    return out
+
+
 def bench_sensitivity(tmpdir: str) -> List[str]:
     """Figs 11-14: UIR (A2) and redundancy (A1_dup) sensitivity."""
     out = []

@@ -59,7 +59,12 @@ class GraphicalJoin:
     ("thread" — default — or "process": the repro/dist/actions.py spawn
     pool), ``partition_fold`` over-partitions for skew smoothing, and
     ``shard_timeout`` (seconds) bounds each process-shard action before
-    the degrade-to-thread retry; ``tracer`` / ``metrics`` plug a
+    the degrade-to-thread retry; ``hybrid`` controls hypertree-decomposed
+    hybrid GJ/WCOJ execution on cyclic queries (None — default — lets the
+    cost model choose between pure GJ and the bagged plan, True forces
+    bags and raises on acyclic queries or with ``record_trace``, False
+    forces pure GJ; acyclic plans are never bagged and keep their exact
+    historical signatures); ``tracer`` / ``metrics`` plug a
     :class:`repro.obs.Tracer` / :class:`repro.obs.MetricsRegistry` into
     every phase (off by default — see repro/obs and ``explain(analyze=True)``).
     """
@@ -80,6 +85,7 @@ class GraphicalJoin:
         partition_fold: Optional[int] = None,
         shard_executor: Optional[str] = None,
         shard_timeout: Optional[float] = None,
+        hybrid: Optional[bool] = None,
         tracer=None,
         metrics=None,
     ) -> None:
@@ -99,6 +105,7 @@ class GraphicalJoin:
             partition_fold=partition_fold,
             shard_executor=shard_executor,
             shard_timeout=shard_timeout,
+            hybrid=hybrid,
             tracer=tracer,
             metrics=metrics,
         )

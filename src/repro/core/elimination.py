@@ -125,6 +125,10 @@ class Generator:
     # these next to the planner's estimates in PhysicalPlan.explain()
     step_products: Dict[str, int] = field(default_factory=dict)
     step_seconds: Dict[str, float] = field(default_factory=dict)
+    # hybrid plans: measured WCOJ bag products and wall times, keyed by
+    # bag index in the plan's ``bags`` tuple (empty for pure-GJ builds)
+    bag_products: Dict[int, int] = field(default_factory=dict)
+    bag_seconds: Dict[int, float] = field(default_factory=dict)
 
     def nbytes(self) -> int:
         n = int(self.root_codes.nbytes + self.root_freq.nbytes)
@@ -255,6 +259,8 @@ def build_generator(
     factors: Optional[List[Factor]] = None,
     record_trace: bool = False,
     step_estimates: Optional[Dict[str, float]] = None,
+    bags: Optional[Sequence] = None,
+    bag_estimates: Optional[Dict[int, float]] = None,
 ) -> Generator:
     """Run Algorithm 2 over the (possibly cyclic) query graph.
 
@@ -269,6 +275,16 @@ def build_generator(
     ``step_estimates`` (var -> planner product-entry estimate) annotates
     each step's trace span with est-vs-actual drift — the raw signal the
     CostModel feedback loop consumes.  Purely observational.
+
+    ``bags`` (hypertree-decomposed hybrid plans): WCOJ multiway bag steps
+    (``plan.ir.BagStep``) covering the cyclic core.  Each bag's table
+    occurrences are generic-joined into one joint potential *before*
+    elimination starts; the elimination loop then runs over bag potentials
+    plus the unbagged table factors.  Because every bag scope is a clique
+    of the chosen order's triangulation, the per-variable separators — and
+    hence the GFJS — are bit-identical to the pure-GJ build.
+    ``bag_estimates`` (bag index -> planner entry estimate) annotates the
+    bag spans with est-vs-actual drift, like ``step_estimates``.
     """
     query = enc.query
     sizes = enc.domain_sizes()
@@ -305,12 +321,54 @@ def build_generator(
     trace_steps: List[StepTrace] = []
     step_products: Dict[str, int] = {}
     step_seconds: Dict[str, float] = {}
+    bag_products: Dict[int, int] = {}
+    bag_seconds: Dict[int, float] = {}
 
     # the working set carries provenance tags: ("table", occurrence index)
     # for quantitative-learning factors, ("msg", var) for messages — which
     # is exactly the wiring an incremental refresh replays
     working: List[Tuple[str, object, Factor]] = [
         ("table", i, f) for i, f in enumerate(factors)]
+
+    if bags:
+        if record_trace:
+            raise ValueError(
+                "record_trace is unsupported for hypertree-decomposed (bagged) "
+                "plans: bag potentials merge several table occurrences, which "
+                "breaks the per-occurrence wiring incremental refresh replays; "
+                "build with hybrid=False to record a trace")
+        seen: set = set()
+        for bag in bags:
+            for i in bag.occurrences:
+                if not 0 <= i < len(factors):
+                    raise ValueError(
+                        f"bag occurrence index {i} out of range "
+                        f"(query has {len(factors)} table occurrences)")
+                if i in seen:
+                    raise ValueError(
+                        f"table occurrence {i} appears in more than one bag")
+                seen.add(i)
+        working = [t for t in working if t[1] not in seen]
+        for j, bag in enumerate(bags):
+            label = ",".join(bag.vars)
+            with _span(f"eliminate:bag[{label}]", cat="step", bag=j) as sp:
+                t_bag = time.perf_counter()
+                phi = multiway_product(
+                    [factors[i] for i in bag.occurrences],
+                    var_order=list(bag.bind_order))
+                bag_seconds[j] = time.perf_counter() - t_bag
+                bag_products[j] = int(phi.num_entries)
+                sp.set(product=bag_products[j], seconds=bag_seconds[j])
+                est = None
+                if bag_estimates is not None and j in bag_estimates:
+                    est = float(bag_estimates[j])
+                elif getattr(bag, "est_entries", 0.0):
+                    est = float(bag.est_entries)
+                if est is not None:
+                    sp.set(est=est,
+                           drift=(bag_products[j] / est if est > 0.0
+                                  else float("inf")))
+            working.append(("bag", j, phi))
 
     for v in order[:-1]:
         rel = [t for t in working if v in t[2].vars]
@@ -356,14 +414,18 @@ def build_generator(
             factors=list(factors),
         )
 
-    return assemble_generator(
+    gen = assemble_generator(
         order, psis, parents_of, phi_root,
         stats={
             "num_fill_edges": float(len(tri.fill_edges)),
             "num_maxcliques": float(len(tri.maxcliques)),
             "largest_maxclique": float(max((len(c) for c in tri.maxcliques), default=0)),
+            "num_bags": float(len(bags) if bags else 0),
         },
         trace=trace,
         step_products=step_products,
         step_seconds=step_seconds,
     )
+    gen.bag_products = bag_products
+    gen.bag_seconds = bag_seconds
+    return gen

@@ -129,6 +129,79 @@ def min_fill_order(
     return Triangulation(order, fill_edges, cliques, maxcliques, parents)
 
 
+def structurally_acyclic(graph: QueryGraph) -> bool:
+    """True iff the query hypergraph is alpha-acyclic.
+
+    Beeri et al.: a hypergraph is alpha-acyclic iff its primal graph is
+    chordal AND conformal (every maximal clique of the primal graph is
+    contained in some hyperedge).  Chordality falls out of an
+    unconstrained min-fill sweep — on a chordal graph a simplicial
+    (zero-fill) vertex always exists and eliminating it preserves
+    chordality, so the heuristic adds no fill edges exactly when the graph
+    is chordal; the sweep's maxcliques are then the maximal cliques the
+    conformality check needs.
+
+    The planner uses this as the hybrid gate: acyclic queries never get
+    bag steps, so their plan signatures (and cache keys) are unchanged.
+    """
+    tri = min_fill_order(graph)
+    if tri.fill_edges:
+        return False
+    return all(any(c <= e for e in graph.hyperedges) for c in tri.maxcliques)
+
+
+def decompose_bags(
+    graph: QueryGraph, order: Sequence[str]
+) -> Tuple[List[Tuple[Tuple[str, ...], Tuple[int, ...]]], Triangulation]:
+    """Cover the table occurrences with cliques of ``order``'s triangulation.
+
+    Returns ``(bags, tri)`` where each bag is ``(scope, occurrences)``:
+    ``occurrences`` indexes ``graph.hyperedges`` (== the query's table
+    occurrences in encoding order) and ``scope`` is the union of their
+    variables, listed in elimination order (the global attribute order a
+    WCOJ bag step binds in).  Only bags joining >= 2 occurrences are
+    returned; singleton occurrences stay ordinary per-table factors.
+
+    Every hyperedge is a clique of the primal graph, hence of the
+    triangulated graph, hence contained in one of its maximal cliques —
+    so assignment never fails.  Each occurrence goes to the containing
+    maxclique that contains the most hyperedges overall (co-location:
+    the whole cyclic core lands in one bag when a clique covers it),
+    ties broken toward smaller cliques then discovery order, so the
+    decomposition is deterministic given the order.
+
+    Keeping every bag inside a clique of the *chosen order's*
+    triangulation is what makes hybrid execution bit-identical to the
+    monolithic build: elimination over bag potentials then meets exactly
+    the same separators (parents) at every step as elimination over the
+    raw table factors (see DESIGN.md §19 for the induction).
+    """
+    tri = min_fill_order(graph, forced_order=order)
+    contains = [[i for i, e in enumerate(graph.hyperedges) if e <= c]
+                for c in tri.maxcliques]
+    assignment: Dict[int, int] = {}
+    for i, e in enumerate(graph.hyperedges):
+        cands = [j for j, c in enumerate(tri.maxcliques) if e <= c]
+        if not cands:  # pragma: no cover - chordal-cover invariant
+            continue
+        assignment[i] = max(
+            cands, key=lambda j: (len(contains[j]), -len(tri.maxcliques[j]), -j))
+    grouped: Dict[int, List[int]] = {}
+    for i in sorted(assignment):
+        grouped.setdefault(assignment[i], []).append(i)
+    bags: List[Tuple[Tuple[str, ...], Tuple[int, ...]]] = []
+    for j in sorted(grouped):
+        occs = grouped[j]
+        if len(occs) < 2:
+            continue
+        scope_set: Set[str] = set()
+        for i in occs:
+            scope_set |= graph.hyperedges[i]
+        scope = tuple(v for v in order if v in scope_set)
+        bags.append((scope, tuple(occs)))
+    return bags, tri
+
+
 @dataclass
 class JunctionTree:
     """Tree of maxcliques with separators (paper §2.2.1)."""

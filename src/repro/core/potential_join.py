@@ -143,15 +143,22 @@ def multiway_product(
     bound: List[str] = []
     for v in order:
         rel = [f for f in factors if v in f.vars]
-        expanded = False
-        for f in rel:
-            pv = [u for u in bound if u in f.vars]
-            proj = distinct_projection(f, pv + [v])
-            if not expanded:
-                frontier = frontier.multiply(proj)
-                expanded = True
-            else:
-                frontier = frontier.semijoin(proj)
+        # expand through the SMALLEST projection and semijoin with the
+        # rest: the frontier set is the same whichever relation expands
+        # (intersection semantics), but expansion cost is the frontier x
+        # per-key degree of the expander, so the fewest-distinct-rows
+        # projection is the cheapest intersection anchor — this is the
+        # "per-level intersection on the smallest potential" of generic
+        # join, and it is what keeps skewed bag steps near the AGM bound
+        # instead of near the hottest relation's degree.
+        projs = [distinct_projection(
+            f, [u for u in bound if u in f.vars] + [v]) for f in rel]
+        if projs:
+            k = min(range(len(projs)), key=lambda i: projs[i].num_entries)
+            frontier = frontier.multiply(projs[k])
+            for i, proj in enumerate(projs):
+                if i != k:
+                    frontier = frontier.semijoin(proj)
         bound.append(v)
 
     # Bucket_Product: fold every factor's values into the joint keys

@@ -24,14 +24,19 @@ admissible order yields the same GFJS; see tests/test_plan.py).
 
 from __future__ import annotations
 
+import itertools
+import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.plan.stats import FactorStats, QueryStats
 
 _HUGE = 1e30
+# vertex-enumeration budget for the exact fractional-edge-cover LP; past
+# this many basis candidates the greedy integral cover takes over
+_LP_COMBO_CAP = 5000
 
 
 @dataclass
@@ -115,11 +120,98 @@ def _sum_out(joint: FactorStats, var: str) -> FactorStats:
     return FactorStats(keep, entries, distinct, degrees, joint.sources)
 
 
-class CostModel:
-    """Scores elimination orders on a query's :class:`QueryStats`."""
+def fractional_edge_cover(variables: Sequence[str],
+                          scopes: Sequence[Set[str]],
+                          log_sizes: Sequence[float]
+                          ) -> Tuple[float, float]:
+    """The AGM fractional-edge-cover LP over a bag's factors.
 
-    def __init__(self, stats: QueryStats) -> None:
+    minimize  sum_f x_f * log N_f
+    s.t.      sum_{f : v in scope(f)} x_f >= 1   for every v in variables
+              x >= 0
+
+    Returns ``(rho, log_bound)``: the cover weight at the optimum and the
+    optimal objective — ``exp(log_bound)`` is the AGM bound on the bag's
+    join size (and, by restriction of the same cover, on every prefix
+    frontier of a WCOJ evaluation of the bag).
+
+    Solved exactly by basic-feasible-point enumeration (an LP optimum sits
+    on a vertex: n tight constraints out of the m coverage + n
+    nonnegativity rows); bags are small, so the combinatorics stay tiny —
+    past ``_LP_COMBO_CAP`` candidates a greedy integral set cover takes
+    over (a valid, merely looser, cover).
+    """
+    n = len(scopes)
+    vs = [v for v in variables if any(v in s for s in scopes)]
+    m = len(vs)
+    if n == 0 or m == 0:
+        return 0.0, 0.0
+    A = np.zeros((m, n))
+    for j, sc in enumerate(scopes):
+        for i, v in enumerate(vs):
+            if v in sc:
+                A[i, j] = 1.0
+    c = np.asarray([max(w, 0.0) for w in log_sizes], float)
+    rows = [(A[i], 1.0) for i in range(m)]
+    for j in range(n):
+        e = np.zeros(n)
+        e[j] = 1.0
+        rows.append((e, 0.0))
+    best_val, best_rho = None, 0.0
+    if math.comb(m + n, n) <= _LP_COMBO_CAP:
+        for combo in itertools.combinations(range(m + n), n):
+            M = np.stack([rows[k][0] for k in combo])
+            b = np.asarray([rows[k][1] for k in combo])
+            try:
+                x = np.linalg.solve(M, b)
+            except np.linalg.LinAlgError:
+                continue
+            if (x >= -1e-9).all() and (A @ x >= 1.0 - 1e-9).all():
+                val = float(c @ x)
+                if best_val is None or val < best_val - 1e-12:
+                    best_val, best_rho = val, float(x.sum())
+    if best_val is None:
+        # greedy integral cover: most uncovered vars per unit log-size
+        uncovered = set(vs)
+        val, rho = 0.0, 0.0
+        while uncovered:
+            j = max(range(n),
+                    key=lambda k: (len(scopes[k] & uncovered), -c[k], -k))
+            if not scopes[j] & uncovered:  # pragma: no cover - cover invariant
+                break
+            uncovered -= scopes[j]
+            val += float(c[j])
+            rho += 1.0
+        best_val, best_rho = val, rho
+    return best_rho, best_val
+
+
+@dataclass
+class BagEstimate:
+    """Planner's view of one WCOJ bag step (see plan/ir.py::BagStep)."""
+
+    entries: float              # estimated |bag product| (final frontier)
+    cost: float                 # estimated work: sum of per-level frontiers
+    rho: float                  # fractional edge cover number of the bag
+    agm_entries: float          # AGM bound exp(sum x_f log N_f)
+    stats: FactorStats          # the bag product as a spine-level factor
+
+
+class CostModel:
+    """Scores elimination orders on a query's :class:`QueryStats`.
+
+    ``corrections`` (op name -> scalar) are the calibration factors from
+    :meth:`calibrate`: estimates for an op are multiplied by its factor,
+    so a model fed past drift records prices the next plan with them.
+    """
+
+    def __init__(self, stats: QueryStats,
+                 corrections: Optional[Mapping[str, float]] = None) -> None:
         self.stats = stats
+        self.corrections = dict(corrections or {})
+
+    def _corr(self, op: str) -> float:
+        return float(self.corrections.get(op, 1.0))
 
     def initial_factors(self) -> List[FactorStats]:
         return list(self.stats.factor_stats)
@@ -136,7 +228,9 @@ class CostModel:
         for f in rel[1:]:
             joint = _join_stats(joint, f)
         msg = _sum_out(joint, var)
-        est = StepEstimate(var, joint.entries, msg.vars, msg.entries, len(rel),
+        est = StepEstimate(var,
+                           min(joint.entries * self._corr("eliminate"), _HUGE),
+                           msg.vars, msg.entries, len(rel),
                            tuple(sorted(joint.sources)))
         return est, rest + [msg]
 
@@ -144,15 +238,130 @@ class CostModel:
         """Cost of eliminating ``var`` next, without committing the step."""
         return self.eliminate(factors, var)[0].cost
 
-    def simulate(self, order: Sequence[str]) -> Tuple[List[StepEstimate], float]:
+    def simulate(self, order: Sequence[str],
+                 factors: Optional[Sequence[FactorStats]] = None
+                 ) -> Tuple[List[StepEstimate], float]:
         """Replay a full order; returns per-step estimates and total cost.
 
         The last variable of the order is the generator root — it is never
-        eliminated, so it contributes no step.
+        eliminated, so it contributes no step.  ``factors`` replaces the
+        initial working set (the hybrid planner passes bag-product stats
+        plus the unbagged table factors to price the acyclic spine).
         """
-        factors = self.initial_factors()
+        factors = self.initial_factors() if factors is None else list(factors)
         steps: List[StepEstimate] = []
         for v in list(order)[:-1]:
             est, factors = self.eliminate(factors, v)
             steps.append(est)
         return steps, float(sum(s.cost for s in steps))
+
+    # -- WCOJ bag steps ----------------------------------------------------
+    def bag_estimate(self, occurrences: Sequence[int],
+                     bind_order: Sequence[str]) -> BagEstimate:
+        """Price a WCOJ bag step joining the given table occurrences.
+
+        Two bounds, combined take the min at every level:
+
+        * **AGM** — ``fractional_edge_cover`` over the bag's factors.  The
+          optimal cover restricted to a prefix of ``bind_order`` is
+          feasible for the prefix LP with the same objective, so the full
+          bound caps every intermediate frontier, not just the output.
+        * **skew-aware level simulation** — fold the frontier through
+          ``_join_stats`` one bind level at a time, expanding through the
+          cheapest containing factor (mirroring the real
+          ``multiway_product`` expander choice) and projecting away
+          unbound variables; this is what sees degree skew the AGM bound
+          is blind to.
+
+        ``cost`` sums the per-level frontiers (the work the breadth-first
+        WCOJ actually does); ``entries`` is the final frontier (what the
+        executor's bag span measures, the drift anchor).
+        """
+        stats = [self.stats.factor_stats[i] for i in occurrences]
+        scopes = [set(s.vars) for s in stats]
+        logs = [math.log(max(s.entries, 1.0)) for s in stats]
+        rho, logb = fractional_edge_cover(bind_order, scopes, logs)
+        agm = min(math.exp(min(logb, math.log(_HUGE))), _HUGE)
+
+        def _cap(f: FactorStats) -> FactorStats:
+            if f.entries <= agm:
+                return f
+            scale = agm / max(f.entries, 1.0)
+            return FactorStats(f.vars, agm,
+                               {u: min(d, agm) for u, d in f.distinct.items()},
+                               {u: d * scale for u, d in f.degrees.items()},
+                               f.sources)
+
+        frontier: Optional[FactorStats] = None
+        bound: List[str] = []
+        cost = 0.0
+        for v in bind_order:
+            rel = [s for s in stats if v in s.vars]
+            if not rel:
+                bound.append(v)
+                continue
+            best: Optional[FactorStats] = None
+            for s in rel:
+                j = s if frontier is None else _join_stats(frontier, s)
+                for u in list(j.vars):
+                    if u != v and u not in bound:
+                        j = _sum_out(j, u)
+                if best is None or j.entries < best.entries:
+                    best = j
+            frontier = _cap(best)
+            bound.append(v)
+            cost += frontier.entries
+        if frontier is None:  # pragma: no cover - bags always bind a var
+            frontier = FactorStats(tuple(bind_order), 0.0, {}, {}, set())
+        corr = self._corr("bag")
+        sources: Set[str] = set()
+        for s in stats:
+            sources |= s.sources
+        out = FactorStats(frontier.vars, frontier.entries, dict(frontier.distinct),
+                          dict(frontier.degrees), sources)
+        return BagEstimate(entries=min(out.entries * corr, _HUGE),
+                           cost=min(cost * corr, _HUGE),
+                           rho=rho, agm_entries=agm, stats=out)
+
+    # -- calibration (the first bite of the plan-feedback control half) ----
+    @staticmethod
+    def drift_factor(estimates: Mapping[str, float],
+                     actuals: Mapping[str, float]) -> float:
+        """Geometric-mean actual/estimate ratio over the common keys.
+
+        The geometric mean is the right pooling for multiplicative drift:
+        one 100x blow-up and one 100x overestimate cancel, and the result
+        is scale-free in the step sizes.  Keys with a nonpositive side are
+        skipped (an empty product carries no ratio information).
+        """
+        logs = [math.log(float(actuals[k]) / float(estimates[k]))
+                for k in estimates
+                if k in actuals
+                and float(estimates[k]) > 0.0 and float(actuals[k]) > 0.0]
+        if not logs:
+            return 1.0
+        return float(math.exp(sum(logs) / len(logs)))
+
+    def calibrate(self, step_estimates: Mapping[str, float],
+                  step_actuals: Mapping[str, float],
+                  bag_estimates: Optional[Mapping[object, float]] = None,
+                  bag_actuals: Optional[Mapping[object, float]] = None
+                  ) -> Dict[str, float]:
+        """Fold measured drift records into per-op correction factors.
+
+        Consumes the PR-5 feedback surface (``Generator.step_products``
+        vs the plan's ``StepEstimate.product_entries``, and the bag
+        equivalents) and stores one scalar per op kind: ``"eliminate"``
+        for spine steps, ``"bag"`` for WCOJ bag products.  Subsequent
+        :meth:`eliminate`/:meth:`bag_estimate` calls on THIS model price
+        with the corrections; the returned dict is what
+        ``explain(analyze=True)`` renders as calibrated-vs-raw.
+        """
+        if step_estimates and step_actuals:
+            self.corrections["eliminate"] = self.drift_factor(
+                step_estimates, step_actuals)
+        if bag_estimates and bag_actuals:
+            self.corrections["bag"] = self.drift_factor(
+                {str(k): v for k, v in bag_estimates.items()},
+                {str(k): v for k, v in bag_actuals.items()})
+        return dict(self.corrections)

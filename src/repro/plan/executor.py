@@ -47,6 +47,7 @@ class Executor:
                  partition_fold: Optional[int] = None,
                  shard_executor: Optional[str] = None,
                  shard_timeout: Optional[float] = None,
+                 hybrid: Optional[bool] = None,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None) -> None:
         self.catalog = catalog
@@ -78,6 +79,23 @@ class Executor:
         self.partition_fold = partition_fold
         self.shard_executor = shard_executor
         self.shard_timeout = shard_timeout
+        # hypertree-decomposed hybrid GJ/WCOJ execution (DESIGN §19):
+        # None = let the cost model pick, True = force bags on a cyclic
+        # query, False = pure GJ.  Bag potentials merge several table
+        # occurrences, which the splice-based incremental refresher cannot
+        # replay, so record_trace forces the pure-GJ plan: an implicit
+        # (cost-picked) hybrid silently degrades to pure GJ, an explicit
+        # hybrid=True conflict is refused up front
+        self.hybrid = hybrid
+        if record_trace and hybrid is True:
+            raise ValueError(
+                "record_trace is unsupported with hybrid=True: bag "
+                "potentials merge table occurrences, breaking the "
+                "per-occurrence wiring incremental refresh replays")
+        if record_trace and plan is not None and plan.bags:
+            raise ValueError(
+                "record_trace is unsupported for a pre-compiled plan with "
+                "bag steps (see hybrid=True)")
         if record_trace and (
                 (partitions is not None and partitions > 1)
                 or (plan is not None and plan.partitions > 1)):
@@ -114,6 +132,10 @@ class Executor:
         self.step_seconds: Dict[str, float] = {}
         self.step_seconds_sum: Dict[str, float] = {}
         self.shard_report: Optional[Dict[str, Any]] = None
+        # hybrid plans: measured bag products / wall times, keyed by bag
+        # index in plan.bags (same feedback role as step_actuals)
+        self.bag_actuals: Dict[int, float] = {}
+        self.bag_seconds: Dict[int, float] = {}
 
     # -- observability plumbing --------------------------------------------
     def _phase(self, name: str, **args: Any):
@@ -157,6 +179,8 @@ class Executor:
         self.step_seconds = {}
         self.step_seconds_sum = {}
         self.shard_report = None
+        self.bag_actuals = {}
+        self.bag_seconds = {}
         if not self._forced_plan:
             self.plan = None
         self.timings = TimingsView(self.metrics)
@@ -199,7 +223,10 @@ class Executor:
                 partitions=self.partitions,
                 partition_var=self.partition_var,
                 partition_fold=self.partition_fold,
-                shard_executor=self.shard_executor)
+                shard_executor=self.shard_executor,
+                # trace capability wins over a cost-picked hybrid (an
+                # explicit hybrid=True conflict was refused in __init__)
+                hybrid=False if self.record_trace else self.hybrid)
         self.timings["plan"] = time.perf_counter() - t0
         return self.plan
 
@@ -216,11 +243,17 @@ class Executor:
                 factors=list(self.logical.stats.factors) or None,
                 record_trace=self.record_trace,
                 step_estimates={s.var: s.product_entries for s in plan.steps},
+                bags=plan.bags or None,
+                bag_estimates={j: b.est_entries
+                               for j, b in enumerate(plan.bags)},
             )
             self.step_actuals = {v: float(n) for v, n
                                  in self.generator.step_products.items()}
             self.step_seconds = dict(self.generator.step_seconds)
             self.step_seconds_sum = dict(self.generator.step_seconds)
+            self.bag_actuals = {j: float(n) for j, n
+                                in self.generator.bag_products.items()}
+            self.bag_seconds = dict(self.generator.bag_seconds)
             self.timings["build_generator"] = time.perf_counter() - t0
         return self
 
@@ -281,6 +314,12 @@ class Executor:
         executor's registry, so explain(analyze=True)/shard_report keep
         the same shape on every path.
         """
+        if plan.bags:
+            # plan_query refuses hybrid + partitions; this catches
+            # hand-built plans arriving through the pre-compiled path
+            raise ValueError(
+                "hypertree bag steps are unsupported under a partitioned "
+                "plan: bag potentials are built monolithically")
         if self._sharded is not None:
             return self._sharded
         from repro.dist.partition import PartitionScheme, partition_encoded
@@ -563,18 +602,47 @@ class Executor:
         return self.desummarize(gfjs, decode=decode)
 
     # -- observability -----------------------------------------------------
+    def calibration(self) -> Dict[str, float]:
+        """Per-op correction factors from the last build's est-vs-actual
+        drift (geometric mean of actual/est, per CostModel.drift_factor).
+
+        ``{"eliminate": ..., "bag": ...}`` — keys appear only once the
+        matching step kind has actually run.  Feed the dict into
+        ``CostModel(stats, corrections=...)`` (or ``CostModel.calibrate``)
+        to price future plans with measured reality, and into
+        ``explain()``'s calibration section (rendered automatically)."""
+        from repro.plan.cost import CostModel
+        plan = self.plan
+        if plan is None:
+            return {}
+        out: Dict[str, float] = {}
+        if self.step_actuals:
+            est = {s.var: float(s.product_entries) for s in plan.steps}
+            out["eliminate"] = CostModel.drift_factor(est, self.step_actuals)
+        if self.bag_actuals:
+            est = {j: float(b.est_entries) for j, b in enumerate(plan.bags)}
+            out["bag"] = CostModel.drift_factor(est, self.bag_actuals)
+        return out
+
     def explain(self, *, analyze: bool = False) -> str:
         """Render the plan; ``analyze=True`` adds everything measured —
-        per-step seconds (max and summed over shards), the per-shard
-        breakdown (never the lossy max-reduction), and stragglers."""
+        per-step seconds (max and summed over shards), per-bag WCOJ
+        products and drift, calibration factors, the per-shard breakdown
+        (never the lossy max-reduction), and stragglers."""
         plan = self.build_plan()
+        calibration = self.calibration() or None
         if not analyze:
             return plan.explain(timings=self.timings,
-                                actuals=self.step_actuals)
+                                actuals=self.step_actuals,
+                                bag_actuals=self.bag_actuals,
+                                calibration=calibration)
         return plan.explain(timings=self.timings, actuals=self.step_actuals,
                             step_seconds=self.step_seconds,
                             step_seconds_sum=self.step_seconds_sum,
-                            shard_report=self.shard_report)
+                            shard_report=self.shard_report,
+                            bag_actuals=self.bag_actuals,
+                            bag_seconds=self.bag_seconds,
+                            calibration=calibration)
 
 
 _I32_MAX = (1 << 31) - 1

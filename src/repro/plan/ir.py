@@ -51,6 +51,36 @@ class OrderCandidate:
 
 
 @dataclass
+class BagStep:
+    """One WCOJ multiway bag step of a hybrid GJ/WCOJ plan.
+
+    The executor generic-joins all of the bag's table occurrences at once
+    (``core/potential_join.py::multiway_product``, binding ``bind_order``
+    level by level with per-level intersection on the smallest potential)
+    and feeds the joint potential into ordinary GJ elimination in place of
+    its member factors.  ``vars``/``bind_order`` list the bag scope in the
+    plan's global elimination order; because the scope is a clique of the
+    chosen order's triangulation, the downstream elimination meets exactly
+    the same separators as the monolithic build and the final GFJS is
+    bit-identical (DESIGN.md §19).
+    """
+
+    vars: Tuple[str, ...]          # bag scope, in global elimination order
+    occurrences: Tuple[int, ...]   # table-occurrence indices joined here
+    bind_order: Tuple[str, ...]    # WCOJ binding order (== vars today)
+    est_entries: float = 0.0       # estimated |bag product| (drift anchor)
+    est_cost: float = 0.0          # estimated work: sum of level frontiers
+    agm_entries: float = 0.0       # AGM fractional-edge-cover bound
+    rho: float = 0.0               # fractional edge cover number
+    num_factors: int = 0
+    tables: Tuple[str, ...] = ()   # base tables feeding the bag
+
+    @property
+    def cost(self) -> float:
+        return self.est_cost
+
+
+@dataclass
 class PhysicalPlan:
     """Every executable choice, pinned."""
 
@@ -75,6 +105,12 @@ class PhysicalPlan:
     partition_var: Optional[str] = None
     partition_fold: int = 1
     shard_executor: str = "thread"
+    # hypertree-decomposed hybrid execution: WCOJ bag steps pre-joining the
+    # cyclic core, then GJ elimination over the bag marginals.  () = pure
+    # GJ (every acyclic plan, and cyclic ones where the cost model found
+    # no win) — folded into signature() only when non-empty, so existing
+    # plans keep their historical signatures and cache keys.
+    bags: Tuple[BagStep, ...] = ()
 
     # -- delta support -----------------------------------------------------
     def dirty_steps(self, table: str) -> Tuple[str, ...]:
@@ -111,6 +147,7 @@ class PhysicalPlan:
         """
         total = sum(s.cost for s in self.steps) if self.steps \
             else float(self.est_cost)
+        total += sum(b.cost for b in self.bags)
         return total / max(int(self.partitions), 1)
 
     # -- identity ----------------------------------------------------------
@@ -134,6 +171,11 @@ class PhysicalPlan:
             canon["partition_var"] = self.partition_var
             canon["partition_fold"] = int(self.partition_fold)
             canon["shard_executor"] = self.shard_executor
+        if self.bags:
+            # same conditionality: pure-GJ plans (all acyclic queries in
+            # particular) keep their historical signatures and cache keys
+            canon["bags"] = [[list(b.vars), list(b.occurrences),
+                              list(b.bind_order)] for b in self.bags]
         return hashlib.sha256(
             json.dumps(canon, separators=(",", ":")).encode()).hexdigest()[:16]
 
@@ -142,7 +184,10 @@ class PhysicalPlan:
                 actuals: Optional[Dict[str, float]] = None,
                 step_seconds: Optional[Dict[str, float]] = None,
                 step_seconds_sum: Optional[Dict[str, float]] = None,
-                shard_report: Optional[Dict[str, object]] = None) -> str:
+                shard_report: Optional[Dict[str, object]] = None,
+                bag_actuals: Optional[Dict[int, float]] = None,
+                bag_seconds: Optional[Dict[int, float]] = None,
+                calibration: Optional[Dict[str, float]] = None) -> str:
         """Human-readable plan: order, per-step estimates, backends.
 
         Pass the executor's ``timings`` to annotate phases with measured
@@ -156,6 +201,12 @@ class PhysicalPlan:
         per-shard max alongside the summed work when partitioned — and
         append a per-shard section (rows, wall, straggler flags, skew)
         instead of collapsing shards into one number.
+
+        ``bag_actuals``/``bag_seconds`` (bag index -> measured product
+        size / wall) annotate the WCOJ bag section of a hybrid plan the
+        same way; ``calibration`` (op -> correction scalar from
+        ``CostModel.calibrate``) renders each raw estimate next to its
+        calibrated value so the feedback loop's effect is visible.
         """
         lines = [
             f"PhysicalPlan {self.query_name!r}  "
@@ -178,6 +229,26 @@ class PhysicalPlan:
                          f"({self.partitions * self.partition_fold} virtual)")
             part += f"  executor={self.shard_executor}"
             lines.insert(5, part)
+        if self.bags:
+            lines.append("  bags (WCOJ multiway steps):")
+            for j, b in enumerate(self.bags):
+                line = (
+                    f"    bag[{','.join(b.vars)}] factors={b.num_factors}"
+                    f"  est_entries={b.est_entries:.3g}"
+                    f"  agm={b.agm_entries:.3g} (rho*={b.rho:.2f})")
+                if calibration and "bag" in calibration:
+                    calib = b.est_entries * calibration["bag"]
+                    line += f"  calib={calib:.3g}"
+                if b.tables:
+                    line += f"  tables=({','.join(b.tables)})"
+                if bag_actuals and j in bag_actuals:
+                    act = float(bag_actuals[j])
+                    drift = (act / b.est_entries
+                             if b.est_entries > 0.0 else float("inf"))
+                    line += f"  actual={act:.3g} ({drift:.2f}x est)"
+                if bag_seconds and j in bag_seconds:
+                    line += f"  time={bag_seconds[j] * 1e3:.2f}ms"
+                lines.append(line)
         if self.steps:
             lines.append("  steps:")
             for s in self.steps:
@@ -186,6 +257,9 @@ class PhysicalPlan:
                     f"    eliminate {s.var:<12s} factors={s.num_factors}"
                     f"  est_product={s.product_entries:.3g}"
                     f"  sep=({sep})  est_message={s.message_entries:.3g}")
+                if calibration and "eliminate" in calibration:
+                    calib = s.product_entries * calibration["eliminate"]
+                    line += f"  calib={calib:.3g}"
                 if s.tables:
                     line += f"  tables=({','.join(s.tables)})"
                 if actuals and s.var in actuals:
@@ -230,6 +304,10 @@ class PhysicalPlan:
                 lines.append(
                     f"   {mark}{c.source:<10s} cost={c.cost:<12.4g} "
                     f"[{', '.join(c.order)}]")
+        if calibration:
+            lines.append("  calibration (op -> geometric-mean actual/est):")
+            for k, v in sorted(calibration.items()):
+                lines.append(f"    {k:<16s} x{v:.3f}")
         if timings:
             lines.append("  measured:")
             for k, v in timings.items():

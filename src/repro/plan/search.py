@@ -22,9 +22,10 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.graph import QueryGraph, min_fill_order
+from repro.core.graph import (QueryGraph, decompose_bags, min_fill_order,
+                              structurally_acyclic)
 from repro.plan.cost import CostModel
-from repro.plan.ir import LogicalPlan, OrderCandidate, PhysicalPlan
+from repro.plan.ir import BagStep, LogicalPlan, OrderCandidate, PhysicalPlan
 from repro.plan.stats import QueryStats
 from repro.relational.encoding import EncodedQuery
 
@@ -119,6 +120,48 @@ def _select_backends() -> Dict[str, str]:
     return {"summarize": dev, "desummarize": dev}
 
 
+def propose_decomposition(
+        model: CostModel, logical: LogicalPlan, order: Sequence[str]
+) -> Tuple[Tuple[BagStep, ...], List, float]:
+    """Hypertree-decomposed hybrid candidate for ``order`` (cyclic only).
+
+    Covers the table occurrences with cliques of the order's induced
+    triangulation (``core/graph.py::decompose_bags``), prices each
+    multi-occurrence bag as a WCOJ step (AGM bound + skew-aware level
+    simulation, ``CostModel.bag_estimate``), then simulates the remaining
+    acyclic spine — ordinary GJ elimination over the bag marginals plus
+    the unbagged table factors.  Returns ``(bags, spine_steps, total)``;
+    ``bags`` is empty when the query is structurally acyclic (the gate
+    that keeps acyclic signatures and cache keys byte-unchanged) or when
+    no clique joins two or more occurrences.
+    """
+    graph = logical.graph
+    if structurally_acyclic(graph):
+        return (), [], 0.0
+    raw, _tri = decompose_bags(graph, order)
+    if not raw:
+        return (), [], 0.0
+    bag_steps: List[BagStep] = []
+    bag_stats = []
+    used = set()
+    for scope, occs in raw:
+        est = model.bag_estimate(occs, scope)
+        bag_steps.append(BagStep(
+            vars=tuple(scope), occurrences=tuple(occs),
+            bind_order=tuple(scope),
+            est_entries=est.entries, est_cost=est.cost,
+            agm_entries=est.agm_entries, rho=est.rho,
+            num_factors=len(occs),
+            tables=tuple(sorted(est.stats.sources))))
+        bag_stats.append(est.stats)
+        used.update(occs)
+    spine = bag_stats + [fs for i, fs in enumerate(model.initial_factors())
+                         if i not in used]
+    steps, spine_total = model.simulate(order, factors=spine)
+    total = float(sum(b.est_cost for b in bag_steps)) + spine_total
+    return tuple(bag_steps), steps, total
+
+
 def plan_query(enc: EncodedQuery, *,
                elimination_order: Optional[Sequence[str]] = None,
                early_projection: bool = True,
@@ -129,7 +172,8 @@ def plan_query(enc: EncodedQuery, *,
                partitions: Optional[int] = None,
                partition_var: Optional[str] = None,
                partition_fold: Optional[int] = None,
-               shard_executor: Optional[str] = None
+               shard_executor: Optional[str] = None,
+               hybrid: Optional[bool] = None
                ) -> Tuple[LogicalPlan, PhysicalPlan]:
     """Logical + physical plan for an encoded query.
 
@@ -150,6 +194,12 @@ def plan_query(enc: EncodedQuery, *,
     ``partition_fold`` over-partitions into ``partitions * fold`` virtual
     shards folded back onto ``partitions`` workers (skew smoothing);
     default: auto-chosen from the degree stats (1 when balanced).
+    ``hybrid`` controls hypertree-decomposed GJ/WCOJ execution on cyclic
+    queries: ``None`` (default) lets the cost model choose between the
+    hybrid candidate and pure GJ, ``False`` disables the candidate, and
+    ``True`` forces it (raising when the query is structurally acyclic —
+    there is no decomposition to force).  Acyclic queries are never
+    decomposed, so their plan signatures and cache keys are unchanged.
     """
     if generation_backend not in (None, "numpy", "jax"):
         raise ValueError(
@@ -177,6 +227,12 @@ def plan_query(enc: EncodedQuery, *,
             raise ValueError(
                 f"partition_fold={partition_fold} requires partitions > 1 "
                 "(a monolithic plan would silently ignore it)")
+    if hybrid not in (None, True, False):
+        raise ValueError(f"hybrid must be None, True, or False, got {hybrid!r}")
+    if hybrid is True and partitions > 1:
+        raise ValueError(
+            "hybrid=True is unsupported with partitions > 1 (bag potentials "
+            "are built monolithically; partition the pure-GJ plan instead)")
     t0 = time.perf_counter()
     from repro.obs.trace import span as _span
     with _span("plan:search", cat="plan", planner=planner):
@@ -186,14 +242,16 @@ def plan_query(enc: EncodedQuery, *,
             beam_width=beam_width, stats=stats,
             generation_backend=generation_backend,
             partitions=partitions, partition_var=partition_var,
-            partition_fold=partition_fold, shard_executor=shard_executor)
+            partition_fold=partition_fold, shard_executor=shard_executor,
+            hybrid=hybrid)
 
 
 def _plan_query_inner(enc: EncodedQuery, t0: float, *,
                       elimination_order, early_projection, planner,
                       beam_width, stats, generation_backend,
                       partitions, partition_var,
-                      partition_fold=None, shard_executor=None
+                      partition_fold=None, shard_executor=None,
+                      hybrid=None
                       ) -> Tuple[LogicalPlan, PhysicalPlan]:
     logical = build_logical_plan(enc, early_projection=early_projection,
                                  stats=stats)
@@ -227,6 +285,29 @@ def _plan_query_inner(enc: EncodedQuery, t0: float, *,
         chosen = min(candidates, key=lambda c: (c.cost, c.source != "min_fill"))
 
     steps, total = model.simulate(chosen.order)
+    source = chosen.source
+
+    # hypertree-decomposed hybrid candidate: WCOJ bag steps over the
+    # cyclic core, GJ elimination over the bag marginals for the spine.
+    # Gated to monolithic plans (bag potentials are built whole) and to
+    # structurally cyclic queries (propose_decomposition returns no bags
+    # otherwise, keeping acyclic signatures byte-unchanged).
+    bags: Tuple[BagStep, ...] = ()
+    if hybrid is not False and partitions == 1:
+        cand_bags, cand_steps, cand_total = propose_decomposition(
+            model, logical, chosen.order)
+        if cand_bags:
+            candidates = list(candidates) + [
+                OrderCandidate("hybrid", chosen.order, cand_total)]
+            if hybrid is True or cand_total < total:
+                bags, steps, total = cand_bags, cand_steps, cand_total
+                source = "hybrid"
+        elif hybrid is True:
+            raise ValueError(
+                f"hybrid=True requires a structurally cyclic query; "
+                f"{query.name!r} admits no multiway bag (a pure-GJ plan "
+                "is already hypertree-optimal on acyclic queries)")
+
     # distinct-key estimate only (a lower bound on materialized rows —
     # bucket/fac multiplicities are unknown at plan time); the executor
     # re-checks the exact join_size before materializing, so "inmem" here
@@ -256,7 +337,7 @@ def _plan_query_inner(enc: EncodedQuery, t0: float, *,
         early_projection=early_projection,
         backends=backends,
         materialize="stream" if est_rows > STREAM_THRESHOLD else "inmem",
-        source=chosen.source,
+        source=source,
         est_cost=total,
         steps=tuple(steps),
         alternatives=tuple(sorted(candidates, key=lambda c: c.cost)),
@@ -266,5 +347,6 @@ def _plan_query_inner(enc: EncodedQuery, t0: float, *,
         partition_var=partition_var,
         partition_fold=partition_fold if partition_fold else 1,
         shard_executor=shard_executor if shard_executor else "thread",
+        bags=bags,
     )
     return logical, physical

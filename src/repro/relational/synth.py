@@ -106,6 +106,76 @@ def chain_join(
 
 
 # ---------------------------------------------------------------------------
+# Adversarially skewed cyclic patterns (triangle / clique / star-cyclic).
+#
+# The hub-and-spoke construction is the classic AGM lower-bound family:
+# every edge table is half out-of-hub rows (a_i, 0) and half into-hub rows
+# (0, b_j), so each PAIRWISE join goes quadratic through the hub while the
+# cyclic output stays near-linear — exactly the gap between pure-GJ
+# elimination (pairwise products) and a WCOJ bag step (per-level
+# intersection, bounded by the AGM bound).  A small dense uniform slice is
+# mixed in so the output is non-empty.  ``hub_frac`` is the skew knob:
+# 1.0 is the full adversarial instance, 0.0 degrades to uniform edges
+# (where pure GJ and the hybrid plan cost about the same).
+# ---------------------------------------------------------------------------
+
+_CYCLIC_PATTERNS: Dict[str, Tuple[Tuple[str, str], ...]] = {
+    "triangle": (("A", "B"), ("B", "C"), ("C", "A")),
+    "clique4": (("A", "B"), ("A", "C"), ("A", "D"),
+                ("B", "C"), ("B", "D"), ("C", "D")),
+    # wheel W3: star hub M over a triangle rim — star + cycle in one query
+    "star_cyclic": (("M", "A"), ("M", "B"), ("M", "C"),
+                    ("A", "B"), ("B", "C"), ("C", "A")),
+}
+
+
+def cyclic_pattern_like(
+    pattern: str = "triangle",
+    m: int = 1_500,
+    domain: int = 5_000,
+    *,
+    hub_frac: float = 1.0,
+    dense: int = 200,
+    dense_domain: int = 40,
+    seed: int = 0,
+) -> Tuple[Catalog, JoinQuery]:
+    """One edge table per pattern edge, hub-skewed (see module section above).
+
+    ``pattern``: "triangle", "clique4", or "star_cyclic".  Each edge table
+    has ``2 * m * hub_frac`` hub rows, ``2 * m * (1 - hub_frac)`` uniform
+    rows, and ``dense`` rows uniform over the small shared ``dense_domain``
+    (the slice the cyclic output actually comes from).
+    """
+    if pattern not in _CYCLIC_PATTERNS:
+        raise ValueError(f"unknown cyclic pattern {pattern!r} "
+                         f"(have {sorted(_CYCLIC_PATTERNS)})")
+    if not 0.0 <= hub_frac <= 1.0:
+        raise ValueError("hub_frac must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    n_hub = int(m * hub_frac)
+    n_unif = m - n_hub
+    cat = Catalog()
+    tables = []
+    for u, v in _CYCLIC_PATTERNS[pattern]:
+        x = np.concatenate([
+            rng.integers(1, domain, n_hub),          # (a_i, 0) out of hub
+            np.zeros(n_hub, np.int64),               # (0, b_j) into hub
+            rng.integers(1, dense_domain, dense),    # dense slice
+            rng.integers(1, domain, 2 * n_unif),     # uniform remainder
+        ])
+        y = np.concatenate([
+            np.zeros(n_hub, np.int64),
+            rng.integers(1, domain, n_hub),
+            rng.integers(1, dense_domain, dense),
+            rng.integers(1, domain, 2 * n_unif),
+        ])
+        t = Table(f"{pattern}_{u}{v}", {"x": x, "y": y})
+        cat.add(t)
+        tables.append((t.name, {"x": u, "y": v}))
+    return cat, JoinQuery.of(f"{pattern}_hub", tables)
+
+
+# ---------------------------------------------------------------------------
 # lastFM-like: users/friends/artists.  High UIR, chain + cyclic queries.
 # ---------------------------------------------------------------------------
 

@@ -60,6 +60,11 @@ from repro.summary.cache import cache_key_for_versions
 from repro.summary.service import ServiceReply
 
 
+def _table_nbytes(table: Dict[str, np.ndarray]) -> int:
+    """Resident footprint of one group-by table (column array bytes)."""
+    return int(sum(np.asarray(v).nbytes for v in table.values()))
+
+
 class AdmissionRejected(RuntimeError):
     """Cold build priced above the server's cost ceiling (reject mode)."""
 
@@ -215,6 +220,7 @@ class JoinServer:
                  default_deadline: Optional[float] = None,
                  batch_window: float = 0.0,
                  max_tables: int = 64,
+                 table_byte_budget: Optional[int] = None,
                  tracer=None) -> None:
         if admission not in ("reject", "queue"):
             raise ValueError(f"admission must be 'reject' or 'queue', "
@@ -229,6 +235,17 @@ class JoinServer:
         self.default_deadline = default_deadline
         self.batch_window = float(batch_window)
         self.max_tables = int(max_tables)
+        # resident group-by tables are bounded by BYTES as well as entry
+        # count: a handful of wide tables can dwarf the summary cache the
+        # service itself budgets, so the default ties the resident set to
+        # the same ceiling (the service's SummaryCache byte budget)
+        if table_byte_budget is None:
+            table_byte_budget = getattr(
+                getattr(service, "cache", None), "byte_budget", None)
+        if table_byte_budget is not None and table_byte_budget <= 0:
+            raise ValueError("table_byte_budget must be positive")
+        self.table_byte_budget = (int(table_byte_budget)
+                                  if table_byte_budget is not None else None)
         # explicit tracer for request spans opened on serving threads
         # (ambient context does not cross thread boundaries); None falls
         # back to the ambient tracer of the calling thread, if any
@@ -250,6 +267,8 @@ class JoinServer:
         self._build_slots = threading.Semaphore(max_expensive_builds)
         self._tables: "OrderedDict[Tuple, Dict[str, np.ndarray]]" = \
             OrderedDict()
+        self._table_bytes: Dict[Tuple, int] = {}
+        self.resident_table_bytes = 0
         self._tables_lock = threading.Lock()
         self._batchers: Dict[Tuple, _Batcher] = {}
 
@@ -283,6 +302,7 @@ class JoinServer:
                 "inflight": self.inflight,
                 "queue_depth": self.queue_depth,
                 "resident_tables": len(self._tables),
+                "resident_table_bytes": self.resident_table_bytes,
             }
 
     # -- keys ---------------------------------------------------------------
@@ -518,11 +538,27 @@ class JoinServer:
             reply = self.frame(query, plan=plan,
                                deadline=self._remaining(deadline, t0))
             table = reply.frame.group_by([key_var], **aggs)
+            nbytes = _table_nbytes(table)
             with self._tables_lock:
+                old = self._table_bytes.pop(bkey, 0)
                 self._tables[bkey] = table
+                self._table_bytes[bkey] = nbytes
+                self.resident_table_bytes += nbytes - old
                 self._tables.move_to_end(bkey)
-                while len(self._tables) > self.max_tables:
-                    self._tables.popitem(last=False)
+                # evict LRU-first while over EITHER bound — entry count or
+                # resident bytes (never past the just-inserted entry: a
+                # single over-budget table still serves its own request)
+                while len(self._tables) > 1 and (
+                        len(self._tables) > self.max_tables
+                        or (self.table_byte_budget is not None
+                            and self.resident_table_bytes
+                            > self.table_byte_budget)):
+                    ekey, _ = self._tables.popitem(last=False)
+                    self.resident_table_bytes -= \
+                        self._table_bytes.pop(ekey, 0)
+                resident = self.resident_table_bytes
+            REGISTRY.gauge("server.resident_table_bytes",
+                           unit="B").set(resident)
             self._count("table_recomputes")
             return table
 

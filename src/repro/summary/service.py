@@ -259,7 +259,8 @@ class JoinService:
         if gj is None:
             gj = GraphicalJoin(self.catalog, query, plan=plan,
                                record_trace=self.incremental
-                               and plan.partitions == 1)
+                               and plan.partitions == 1
+                               and not plan.bags)
         gfjs = gj.run()
         # key on what the executor actually encoded: an append racing this
         # compute may have advanced the catalog past the entry snapshot,

@@ -42,7 +42,15 @@ SHAPES = {
                  ("t2", {"x0": "C", "x1": "A"})],
     "cycle4": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
                ("t2", {"x0": "C", "x1": "D"}), ("t3", {"x0": "D", "x1": "A"})],
+    "clique4": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "A", "x1": "C"}),
+                ("t2", {"x0": "A", "x1": "D"}), ("t3", {"x0": "B", "x1": "C"}),
+                ("t4", {"x0": "B", "x1": "D"}), ("t5", {"x0": "C", "x1": "D"})],
+    "bowtie": [("t0", {"x0": "A", "x1": "B"}), ("t1", {"x0": "B", "x1": "C"}),
+               ("t2", {"x0": "C", "x1": "A"}), ("t3", {"x0": "C", "x1": "D"}),
+               ("t4", {"x0": "D", "x1": "E"}), ("t5", {"x0": "E", "x1": "C"})],
 }
+
+CYCLIC_SHAPES = ["triangle", "cycle4", "clique4", "bowtie"]
 
 
 def _random_instance(shape: str, seed: int, output=None):
@@ -285,6 +293,170 @@ def test_executor_jax_desummarize_matches_numpy():
     got = ex.desummarize(gfjs, decode=False)
     for v in gfjs.column_order:
         assert np.array_equal(ref[v], got[v])
+
+
+# ---------------------------------------------------------------------------
+# hypertree-decomposed hybrid GJ/WCOJ execution (DESIGN §19)
+# ---------------------------------------------------------------------------
+
+def _assert_gfjs_identical(a, b):
+    """Level-for-level bit-identity: the hybrid contract, not just multiset
+    equality — same column order, same runs, same codes, same freqs."""
+    assert a.column_order == b.column_order
+    assert a.join_size == b.join_size
+    assert len(a.levels) == len(b.levels)
+    for la, lb in zip(a.levels, b.levels):
+        assert la.vars == lb.vars
+        assert np.array_equal(la.freq, lb.freq)
+        for v in la.vars:
+            assert np.array_equal(la.key_cols[v], lb.key_cols[v])
+
+
+def _oracle_rows(cat, query, all_vars):
+    enc = encode_query(cat, query)
+    res = oracle_join(enc)
+    if len(res[all_vars[0]]) == 0:
+        return np.zeros((0, len(all_vars)), np.int64)
+    return sort_rows(res, all_vars)
+
+
+@pytest.mark.parametrize("shape", CYCLIC_SHAPES)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_hybrid_gfjs_bit_identical(shape, seed):
+    """Every random cyclic instance: the hypertree plan's GFJS equals the
+    pure-GJ GFJS level for level, and both equal the oracle multiset."""
+    cat, query = _random_instance(shape, seed)
+    hyb = GraphicalJoin(cat, query, hybrid=True)
+    g_h = hyb.run()
+    plan = hyb.plan()
+    assert plan.bags and plan.source == "hybrid"
+    for bag in plan.bags:
+        assert len(bag.occurrences) >= 2
+        assert sorted(bag.bind_order) == sorted(bag.vars)
+    pure = GraphicalJoin(cat, query, hybrid=False,
+                         elimination_order=list(plan.order))
+    g_p = pure.run()
+    assert not pure.plan().bags
+    _assert_gfjs_identical(g_h, g_p)
+    all_vars = sorted(query.variables)
+    rows = _row_multiset(hyb, g_h, all_vars)
+    assert np.array_equal(rows, _row_multiset(pure, g_p, all_vars))
+    assert np.array_equal(rows, _oracle_rows(cat, query, all_vars))
+
+
+@pytest.mark.parametrize("seed", [5, 6])
+def test_hybrid_every_admissible_order_triangle(seed):
+    cat, query = _random_instance("triangle", seed)
+    ref = None
+    for order in _admissible_orders(query.variables, query.output_variables):
+        hyb = GraphicalJoin(cat, query, hybrid=True,
+                            elimination_order=order)
+        g_h = hyb.run()
+        assert hyb.plan().bags
+        pure = GraphicalJoin(cat, query, hybrid=False,
+                             elimination_order=order)
+        _assert_gfjs_identical(g_h, pure.run())
+        rows = _row_multiset(hyb, g_h, sorted(query.variables))
+        if ref is None:
+            ref = rows
+        assert np.array_equal(rows, ref)
+
+
+def test_hybrid_cost_picked_on_skew():
+    """On the hub-skewed triangle the cost model itself chooses the
+    hybrid plan (no forcing) and the answer matches pure GJ."""
+    from repro.relational.synth import cyclic_pattern_like
+    cat, query = cyclic_pattern_like("triangle", m=400, domain=2000,
+                                     dense=80, dense_domain=20, seed=0)
+    gj = GraphicalJoin(cat, query)            # hybrid=None: model decides
+    plan = gj.plan()
+    assert plan.source == "hybrid" and plan.bags
+    g_h = gj.run()
+    pure = GraphicalJoin(cat, query, hybrid=False,
+                         elimination_order=list(plan.order))
+    _assert_gfjs_identical(g_h, pure.run())
+
+
+def test_acyclic_never_bagged_and_signature_stable():
+    """Acyclic queries are never bagged, and their plan signatures (hence
+    cache keys) are byte-identical whatever the hybrid knob says."""
+    cat, query = figure1()
+    default = GraphicalJoin(cat, query).plan()
+    off = GraphicalJoin(cat, query, hybrid=False).plan()
+    assert default.bags == () and off.bags == ()
+    assert default.signature() == off.signature()
+    assert "bags" not in default.explain()
+    cat2, q2 = _random_instance("chain3", 9)
+    assert GraphicalJoin(cat2, q2).plan().bags == ()
+
+
+def test_hybrid_knob_validation():
+    cat, query = figure1()                    # acyclic
+    with pytest.raises(ValueError, match="cyclic"):
+        GraphicalJoin(cat, query, hybrid=True).plan()
+    tcat, tq = _random_instance("triangle", 0)
+    with pytest.raises(ValueError, match="record_trace"):
+        GraphicalJoin(tcat, tq, hybrid=True, record_trace=True)
+    with pytest.raises(ValueError, match="partitions"):
+        plan_query(encode_query(tcat, tq), hybrid=True, partitions=2)
+    # a pre-compiled bagged plan + record_trace is refused up front
+    bagged = GraphicalJoin(tcat, tq, hybrid=True).plan()
+    if bagged.bags:
+        with pytest.raises(ValueError, match="record_trace"):
+            Executor(tcat, tq, plan=bagged, record_trace=True)
+    # record_trace wins over a cost-picked hybrid: plan silently pure
+    traced = GraphicalJoin(tcat, tq, record_trace=True)
+    assert traced.plan().bags == ()
+
+
+def test_bagged_plan_signature_differs():
+    cat, query = _random_instance("triangle", 1)
+    hyb = GraphicalJoin(cat, query, hybrid=True).plan()
+    pure = GraphicalJoin(cat, query, hybrid=False,
+                         elimination_order=list(hyb.order)).plan()
+    assert hyb.bags and not pure.bags
+    assert hyb.signature() != pure.signature()
+    assert query.fingerprint(plan=hyb) != query.fingerprint(plan=pure)
+
+
+# ---------------------------------------------------------------------------
+# cost-model calibration from measured drift (satellite: feedback loop)
+# ---------------------------------------------------------------------------
+
+def test_executor_calibration_factors():
+    cat, query = _random_instance("triangle", 2)
+    gj = GraphicalJoin(cat, query, hybrid=True)
+    gj.run()
+    ex = gj._executor
+    calib = ex.calibration()
+    assert set(calib) == {"eliminate", "bag"}
+    assert all(v > 0.0 for v in calib.values())
+    text = gj.explain(analyze=True)
+    assert "calibration" in text and "calib=" in text
+    # geometric mean of actual/est, computed straight from the drift records
+    est = {s.var: float(s.product_entries) for s in gj.plan().steps}
+    expect = CostModel.drift_factor(est, ex.step_actuals)
+    assert calib["eliminate"] == pytest.approx(expect)
+
+
+def test_cost_model_consumes_corrections():
+    cat, query = _random_instance("triangle", 3)
+    enc = encode_query(cat, query)
+    stats = QueryStats.of(enc)
+    raw = CostModel(stats)
+    order = list(plan_query(enc)[1].order)
+    steps_raw, total_raw = raw.simulate(order)
+    # a calibrated model scales its eliminate estimates by the correction
+    cal = CostModel(stats, corrections={"eliminate": 2.0})
+    steps_cal, total_cal = cal.simulate(order)
+    for a, b in zip(steps_raw, steps_cal):
+        if a.product_entries > 0:
+            assert b.product_entries == pytest.approx(2.0 * a.product_entries)
+    # calibrate() folds measured drift into the model in place
+    model = CostModel(stats)
+    got = model.calibrate({"A": 100.0}, {"A": 50.0})
+    assert got["eliminate"] == pytest.approx(0.5)
+    assert model.corrections["eliminate"] == pytest.approx(0.5)
 
 
 # ---------------------------------------------------------------------------

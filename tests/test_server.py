@@ -415,6 +415,52 @@ def test_server_constructor_validation(lastfm):
         JoinServer(svc, max_expensive_builds=0)
     with pytest.raises(ValueError):
         JoinServer(svc, batch_window=-1.0)
+    with pytest.raises(ValueError):
+        JoinServer(svc, table_byte_budget=0)
+
+
+def test_resident_tables_byte_bounded(lastfm):
+    """The resident group-by LRU is bounded by bytes, not just entries —
+    defaulting to the service's SummaryCache byte budget."""
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    assert JoinServer(svc).table_byte_budget == svc.cache.byte_budget
+
+    server = JoinServer(svc, table_byte_budget=1)   # evict-everything budget
+    q = qs["lastfm_A1"]
+    keys = np.asarray([0, 1, 2])
+    server.lookup(q, "U1", keys, {"n": "count"})
+    first_bytes = server.stats()["resident_table_bytes"]
+    assert first_bytes > 0                           # the newest entry stays
+    assert server.stats()["resident_tables"] == 1
+    # a second distinct table evicts the first (over byte budget)
+    server.lookup(q, "U1", keys, {"n": "count", "s": ("sum", "A1")})
+    st = server.stats()
+    assert st["resident_tables"] == 1
+    assert st["resident_table_bytes"] > 0
+    assert st["table_recomputes"] == 2
+    # the evicted table rebuilds on re-probe
+    server.lookup(q, "U1", keys, {"n": "count"})
+    assert server.stats()["table_recomputes"] == 3
+    from repro.obs.metrics import REGISTRY
+    assert REGISTRY.gauge("server.resident_table_bytes",
+                          unit="B").value > 0
+
+
+def test_resident_tables_entry_bound_still_applies(lastfm):
+    cat, qs = lastfm
+    svc = JoinService(cat)
+    server = JoinServer(svc, max_tables=1, table_byte_budget=1 << 30)
+    q = qs["lastfm_A1"]
+    keys = np.asarray([0, 1])
+    server.lookup(q, "U1", keys, {"n": "count"})
+    server.lookup(q, "U1", keys, {"n": "count", "s": ("sum", "A1")})
+    st = server.stats()
+    assert st["resident_tables"] == 1
+    # resident bytes track exactly the surviving entry
+    assert st["resident_table_bytes"] == \
+        sum(np.asarray(v).nbytes
+            for v in server._tables[next(iter(server._tables))].values())
 
 
 # -- observability ----------------------------------------------------------
