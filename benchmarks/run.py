@@ -33,7 +33,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="run a single section (table1..table6, "
                          "sensitivity, planner, cyclic, summary, kernels, "
-                         "dist, serve)")
+                         "dist, serve, workload)")
     ap.add_argument("--kernels-json", default="BENCH_kernels.json",
                     metavar="PATH",
                     help="where to write the kernels-section JSON summary "
@@ -45,6 +45,10 @@ def main() -> None:
     ap.add_argument("--serve-json", default="BENCH_serve.json",
                     metavar="PATH",
                     help="where to write the serve-section JSON summary "
+                         "('' disables)")
+    ap.add_argument("--workload-json", default="BENCH_workload.json",
+                    metavar="PATH",
+                    help="where to write the workload-section JSON summary "
                          "('' disables)")
     ap.add_argument("--trace", action="store_true",
                     help="write a Chrome trace (BENCH_<section>.trace.json) "
@@ -90,6 +94,16 @@ def main() -> None:
             write_json(lines, args.serve_json)
         return lines
 
+    def workload_section(tmp):
+        import os
+        from benchmarks.kernels_bench import write_json
+        from benchmarks.workload_bench import bench_workload
+        lines, _ = bench_workload(
+            float(os.environ.get("BENCH_SCALE", "1.0")))
+        if args.workload_json:
+            write_json(lines, args.workload_json)
+        return lines
+
     sections = {
         "table1": tables.bench_table1,
         "table2": tables.bench_table2,
@@ -104,6 +118,7 @@ def main() -> None:
         "kernels": kernels_section,
         "dist": dist_section,
         "serve": serve_section,
+        "workload": workload_section,
     }
 
     print("name,us_per_call,derived")

@@ -304,6 +304,83 @@ def bench_cyclic(tmpdir: str) -> List[str]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# JOB-like overlapping star/snowflake suite (DESIGN §20) — the workload the
+# elimination-message cache is built for: many queries over one catalog
+# whose snowflake arms repeat, so elimination subtrees recur across queries.
+# ---------------------------------------------------------------------------
+
+def job_like_suite(*, scale: float = 1.0, n_chains: int = 4,
+                   chains_per_query: int = 2, n_facts: int = 3,
+                   queries_per_fact: int = 2, skew: float = 0.0,
+                   seed: int = 0):
+    """A JOB-shaped suite: shared snowflake chains under several fact tables.
+
+    One catalog holds ``n_chains`` dimension chains (``dim<c>(id, sub)`` ->
+    ``sub<c>(id, val)``) and ``n_facts`` fact tables, each carrying a user
+    column plus an FK into every chain.  Queries join a fact through a
+    rotating window of ``chains_per_query`` chains, so consecutive queries
+    overlap on chains and *different facts reuse the same chains outright*
+    — the chain-side elimination messages (eliminate val, then the subkey)
+    are identical across all of them, which is exactly the cross-query
+    sharing the message cache monetizes.
+
+    ``skew`` in [0, 1] mixes uniform fact FKs with a heavy head (top 2% of
+    dimension keys): 0 is uniform, 1 routes every FK through the head —
+    the knob stresses residency pricing on skew-inflated products.
+
+    Returns ``(catalog, workloads)``; each workload is a
+    :class:`~benchmarks.common.Workload` over the shared catalog.
+    """
+    from repro.relational.query import JoinQuery, QueryTable
+    from repro.relational.table import Catalog, Table
+
+    rng = np.random.default_rng(seed)
+    n_dim = max(int(4000 * scale), 64)
+    n_sub = max(int(64 * scale), 8)
+    n_rows = max(int(30000 * scale), 512)
+
+    cat = Catalog()
+    for c in range(n_chains):
+        cat.add(Table(f"dim{c}", {
+            "id": np.arange(n_dim),
+            "sub": rng.integers(0, n_sub, n_dim)}))
+        cat.add(Table(f"sub{c}", {
+            "id": np.arange(n_sub),
+            "val": rng.integers(0, 16, n_sub)}))
+
+    def fk(n: int) -> np.ndarray:
+        unif = rng.integers(0, n_dim, n)
+        if skew <= 0.0:
+            return unif
+        head = rng.integers(0, max(n_dim // 50, 1), n)
+        return np.where(rng.random(n) < skew, head, unif)
+
+    for f in range(n_facts):
+        cols = {"u": rng.integers(0, 16, n_rows)}
+        for c in range(n_chains):
+            cols[f"d{c}"] = fk(n_rows)
+        cat.add(Table(f"fact{f}", cols))
+
+    out: List[Workload] = []
+    for f in range(n_facts):
+        for j in range(queries_per_fact):
+            chains = [(f + j + k) % n_chains
+                      for k in range(chains_per_query)]
+            vmap = {"u": "U"}
+            vmap.update({f"d{c}": f"D{c}" for c in chains})
+            tabs = [QueryTable.of(f"fact{f}", vmap)]
+            for c in chains:
+                tabs.append(QueryTable.of(
+                    f"dim{c}", {"id": f"D{c}", "sub": f"S{c}"}))
+                tabs.append(QueryTable.of(
+                    f"sub{c}", {"id": f"S{c}", "val": f"V{c}"}))
+            name = f"job_f{f}q{j}"
+            out.append(Workload(name, cat, JoinQuery(name, tabs,
+                                                     output=["U"])))
+    return cat, out
+
+
 def bench_sensitivity(tmpdir: str) -> List[str]:
     """Figs 11-14: UIR (A2) and redundancy (A1_dup) sensitivity."""
     out = []

@@ -1,0 +1,205 @@
+"""Workload-level benchmark: elimination-message reuse across a suite.
+
+Single queries measure one build; serving tiers run *suites* — many
+queries over one catalog whose snowflake arms repeat.  This bench drives
+the JOB-like overlapping suite (``benchmarks.tables.job_like_suite``)
+through three passes and prices the message cache (DESIGN.md §20):
+
+  cold   — every query built with message reuse disabled (the baseline)
+  prime  — a fresh :class:`MessageCache`, first pass: hits here are pure
+           *cross-query* sharing (different queries, same chain subtrees)
+  warm   — second pass on the primed cache: every step's message is
+           resident, so builds reduce to fingerprint + adopt
+
+  PYTHONPATH=src python -m benchmarks.workload_bench
+  PYTHONPATH=src python -m benchmarks.workload_bench --smoke   # CI gate
+  PYTHONPATH=src python -m benchmarks.workload_bench --smoke \
+      --trace BENCH_workload.trace.json
+      # then: python -m repro.obs.check BENCH_workload.trace.json \
+      #           --expect-msgcache
+
+``--smoke`` gates on (1) warm answers exactly equal to the cache-disabled
+cold builds — level-for-level when the plans agree, row-multiset always —
+(2) a non-zero hit rate, and (3) warm build_generator wall at least 3x
+faster than cold.  Exactness is also asserted on every non-smoke run;
+speed is only *gated* under --smoke.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import Workload, csv_line, timer
+from benchmarks.tables import job_like_suite
+from repro.core.api import GraphicalJoin
+from repro.core.gfjs import GFJS, desummarize
+from repro.summary.msgcache import MessageCache
+
+#: smoke gate from the acceptance criteria: warm suite >= 3x faster than
+#: cold on build_generator wall (the phase message reuse actually skips)
+SPEEDUP_GATE = 3.0
+
+
+def _rows_sorted(gfjs: GFJS) -> np.ndarray:
+    """The flat result as one row-sorted matrix (order-insensitive)."""
+    cols = desummarize(gfjs, decode=False)
+    mat = np.stack([np.asarray(cols[v]) for v in sorted(cols)], axis=0)
+    return mat[:, np.lexsort(mat[::-1])]
+
+
+def _same_answers(a: GFJS, b: GFJS) -> Tuple[bool, str]:
+    """Exact-equality oracle: level-for-level when the summaries share a
+    column order (same plan), row-multiset regardless."""
+    if a.join_size != b.join_size:
+        return False, f"join_size {a.join_size} != {b.join_size}"
+    if tuple(a.column_order) == tuple(b.column_order):
+        if len(a.levels) != len(b.levels):
+            return False, "level count differs"
+        for i, (la, lb) in enumerate(zip(a.levels, b.levels)):
+            if tuple(la.vars) != tuple(lb.vars):
+                return False, f"level {i} vars differ"
+            if not np.array_equal(la.freq, lb.freq):
+                return False, f"level {i} freq differs"
+            if set(la.key_cols) != set(lb.key_cols):
+                return False, f"level {i} key columns differ"
+            for k in la.key_cols:
+                if not np.array_equal(la.key_cols[k], lb.key_cols[k]):
+                    return False, f"level {i} key[{k}] differs"
+        return True, "levels"
+    if not np.array_equal(_rows_sorted(a), _rows_sorted(b)):
+        return False, "row multiset differs"
+    return True, "rows"
+
+
+def _run_suite(suite: List[Workload],
+               cache: Optional[MessageCache]) -> Tuple[
+                   List[GFJS], float, float]:
+    """Build every workload; returns (summaries, build_generator wall,
+    end-to-end wall)."""
+    out: List[GFJS] = []
+    bg = 0.0
+    total = 0.0
+    for w in suite:
+        gj = GraphicalJoin(w.catalog, w.query, message_cache=cache)
+        gfjs, t = timer(gj.run)
+        out.append(gfjs)
+        bg += gj.timings["build_generator"]
+        total += t
+    return out, bg, total
+
+
+def bench_workload(scale: float = 1.0, *, skew: float = 0.0,
+                   smoke: bool = False) -> Tuple[List[str], int]:
+    """Returns (csv lines, exit code); exit code != 0 only under smoke."""
+    _, suite = job_like_suite(scale=scale, skew=skew)
+    n_q = len(suite)
+
+    cold, cold_bg, cold_total = _run_suite(suite, None)
+
+    mc = MessageCache()
+    _, prime_bg, _ = _run_suite(suite, mc)
+    prime = mc.stats.as_dict()
+
+    warm, warm_bg, warm_total = _run_suite(suite, mc)
+    after = mc.stats.as_dict()
+    probes = (after["hits"] + after["disk_hits"] + after["misses"]
+              - prime["hits"] - prime["disk_hits"] - prime["misses"])
+    hits = (after["hits"] + after["disk_hits"]
+            - prime["hits"] - prime["disk_hits"])
+    hit_rate = hits / max(probes, 1)
+
+    failures = []
+    modes = set()
+    for w, g_cold, g_warm in zip(suite, cold, warm):
+        ok, how = _same_answers(g_cold, g_warm)
+        modes.add(how)
+        if not ok:
+            failures.append(f"{w.name}: {how}")
+    if failures:
+        raise AssertionError(
+            "warm builds diverged from cache-disabled cold builds: "
+            + "; ".join(failures))
+
+    speedup = cold_bg / max(warm_bg, 1e-9)
+    lines = [
+        csv_line(f"workload/suite{n_q}/cold", cold_bg * 1e6 / n_q,
+                 f"build_generator_s={cold_bg:.3f};"
+                 f"total_s={cold_total:.3f};queries={n_q};skew={skew:g}"),
+        csv_line(f"workload/suite{n_q}/prime", prime_bg * 1e6 / n_q,
+                 f"build_generator_s={prime_bg:.3f};"
+                 f"cross_query_hits={prime['hits'] + prime['disk_hits']};"
+                 f"puts={prime['puts']}"),
+        csv_line(f"workload/suite{n_q}/warm", warm_bg * 1e6 / n_q,
+                 f"build_generator_s={warm_bg:.3f};"
+                 f"total_s={warm_total:.3f};speedup={speedup:.1f}x;"
+                 f"hit_rate={hit_rate:.2f};"
+                 f"exact={'+'.join(sorted(modes))};"
+                 f"resident_bytes={mc.resident_bytes};"
+                 f"evictions={after['evictions']}"),
+    ]
+
+    rc = 0
+    if smoke:
+        gates = [
+            ("exactness", not failures),
+            ("hit_rate>0", hit_rate > 0.0),
+            (f"speedup>={SPEEDUP_GATE:g}x", speedup >= SPEEDUP_GATE),
+            ("cross_query_hits>0",
+             prime["hits"] + prime["disk_hits"] > 0),
+        ]
+        for name, ok in gates:
+            print(f"workload-smoke {name}: {'OK' if ok else 'FAIL'}")
+            if not ok:
+                rc = 1
+        print(f"workload-smoke: queries={n_q} cold_bg={cold_bg:.3f}s "
+              f"warm_bg={warm_bg:.3f}s speedup={speedup:.1f}x "
+              f"hit_rate={hit_rate:.2f}")
+    return lines, rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="gate: warm == cold exactly, hit rate > 0, "
+                         f"warm >= {SPEEDUP_GATE:g}x faster")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the csv rows as a JSON summary")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace (validate with "
+                         "repro.obs.check --expect-msgcache)")
+    ap.add_argument("--skew", type=float, default=0.0,
+                    help="fact-FK head skew in [0, 1]")
+    ap.add_argument("--scale", type=float,
+                    default=float(os.environ.get("BENCH_SCALE", "1.0")))
+    args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
+
+    if tracer is not None:
+        with tracer.span("bench:workload", cat="bench"):
+            lines, rc = bench_workload(args.scale, skew=args.skew,
+                                       smoke=args.smoke)
+        print(f"trace,workload,{tracer.write_chrome_trace(args.trace)}")
+    else:
+        lines, rc = bench_workload(args.scale, skew=args.skew,
+                                   smoke=args.smoke)
+
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line, flush=True)
+    if args.json:
+        from benchmarks.kernels_bench import write_json
+        write_json(lines, args.json)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

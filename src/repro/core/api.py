@@ -66,7 +66,13 @@ class GraphicalJoin:
     forces pure GJ; acyclic plans are never bagged and keep their exact
     historical signatures); ``tracer`` / ``metrics`` plug a
     :class:`repro.obs.Tracer` / :class:`repro.obs.MetricsRegistry` into
-    every phase (off by default — see repro/obs and ``explain(analyze=True)``).
+    every phase (off by default — see repro/obs and ``explain(analyze=True)``);
+    ``message_cache`` plugs a :class:`repro.summary.msgcache.MessageCache`
+    into planning (residency-aware step pricing) and elimination (cached
+    messages are injected, skipping product+marginalization — refused for
+    ``record_trace``, bagged, or partitioned builds); ``corrections`` seeds
+    the cost model with persisted per-step calibration ratios (the
+    `JoinService` calibration sidecar).
     """
 
     def __init__(
@@ -88,6 +94,8 @@ class GraphicalJoin:
         hybrid: Optional[bool] = None,
         tracer=None,
         metrics=None,
+        message_cache=None,
+        corrections: Optional[Dict[str, float]] = None,
     ) -> None:
         from repro.plan.executor import Executor
         self.catalog = catalog
@@ -108,6 +116,8 @@ class GraphicalJoin:
             hybrid=hybrid,
             tracer=tracer,
             metrics=metrics,
+            message_cache=message_cache,
+            corrections=corrections,
         )
 
     # -- executor state, exposed under the historical names ----------------

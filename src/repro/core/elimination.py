@@ -125,6 +125,9 @@ class Generator:
     # these next to the planner's estimates in PhysicalPlan.explain()
     step_products: Dict[str, int] = field(default_factory=dict)
     step_seconds: Dict[str, float] = field(default_factory=dict)
+    # variables whose psi/message were injected from the message cache
+    # (their products were never computed; explain() renders cached=hit)
+    cached_steps: Tuple[str, ...] = ()
     # hybrid plans: measured WCOJ bag products and wall times, keyed by
     # bag index in the plan's ``bags`` tuple (empty for pure-GJ builds)
     bag_products: Dict[int, int] = field(default_factory=dict)
@@ -261,6 +264,9 @@ def build_generator(
     step_estimates: Optional[Dict[str, float]] = None,
     bags: Optional[Sequence] = None,
     bag_estimates: Optional[Dict[int, float]] = None,
+    message_cache=None,
+    step_fingerprints: Optional[Dict[str, str]] = None,
+    step_sources: Optional[Dict[str, Tuple[str, ...]]] = None,
 ) -> Generator:
     """Run Algorithm 2 over the (possibly cyclic) query graph.
 
@@ -285,6 +291,20 @@ def build_generator(
     hence the GFJS — are bit-identical to the pure-GJ build.
     ``bag_estimates`` (bag index -> planner entry estimate) annotates the
     bag spans with est-vs-actual drift, like ``step_estimates``.
+
+    ``message_cache`` (repro/summary/msgcache.py::MessageCache) with
+    ``step_fingerprints`` (var -> subtree fingerprint, from
+    ``plan.ir.step_fingerprints``) enables cross-query message reuse:
+    before each step the cache is probed under single-flight — a hit
+    injects the cached psi/message (positionally renamed to this build's
+    separator) and skips the product + marginalization entirely; a miss
+    computes, then puts (``step_sources`` names the base tables per step
+    for explicit invalidation).  Reuse is refused for ``record_trace``
+    builds (the trace owns its messages' provenance for incremental
+    refresh) and for bagged plans (bag potentials merge occurrences
+    outside the fingerprint's step wiring) — the cache is simply bypassed.
+    Every probe emits a ``msg:<fingerprint>`` span annotated with the
+    hit/miss outcome (validated by ``repro.obs.check``).
     """
     query = enc.query
     sizes = enc.domain_sizes()
@@ -370,24 +390,62 @@ def build_generator(
                                   else float("inf")))
             working.append(("bag", j, phi))
 
+    # cross-query message reuse: refused under record_trace (the trace owns
+    # its messages' provenance) and for bagged plans (bag potentials merge
+    # occurrences outside the fingerprint's step wiring)
+    use_cache = (message_cache is not None and step_fingerprints
+                 and not record_trace and not bags)
+    cached_steps: List[str] = []
+
     for v in order[:-1]:
         rel = [t for t in working if v in t[2].vars]
         rest = [t for t in working if v not in t[2].vars]
         if not rel:  # pragma: no cover - connected graph invariant
             raise AssertionError(f"no factor contains variable {v}")
-        with _span(f"eliminate:{v}", cat="step", var=v) as sp:
-            t_step = time.perf_counter()
-            obs: Dict[str, float] = {}
-            psi, parents, msg = eliminate_step(
-                [f for _, _, f in rel], v, order, out_vars, observe=obs)
-            step_seconds[v] = time.perf_counter() - t_step
-            step_products[v] = int(obs.get("product_entries", 0))
-            sp.set(product=step_products[v], seconds=step_seconds[v])
-            if step_estimates is not None and v in step_estimates:
-                est = float(step_estimates[v])
-                sp.set(est=est,
-                       drift=(step_products[v] / est if est > 0.0
-                              else float("inf")))
+        fp = step_fingerprints.get(v) if use_cache else None
+        flight = None
+        if fp is not None:
+            with _span(f"msg:{fp[:16]}", cat="msgcache", var=v) as msp:
+                t_step = time.perf_counter()
+                entry, flight = message_cache.lookup_or_begin(fp)
+                msp.set(hit=entry is not None)
+                if entry is not None:
+                    scope: set = set()
+                    for _, _, f in rel:
+                        scope.update(f.vars)
+                    parents = tuple(
+                        u for u in order if u != v and u in scope)
+                    psi, msg = message_cache.adopt(entry, v, parents)
+                    step_seconds[v] = time.perf_counter() - t_step
+            if entry is not None:
+                parents_of[v] = parents
+                if psi is not None:
+                    psis[v] = psi
+                cached_steps.append(v)
+                working = rest + [("msg", v, msg)]
+                continue
+        try:
+            with _span(f"eliminate:{v}", cat="step", var=v) as sp:
+                t_step = time.perf_counter()
+                obs: Dict[str, float] = {}
+                psi, parents, msg = eliminate_step(
+                    [f for _, _, f in rel], v, order, out_vars, observe=obs)
+                step_seconds[v] = time.perf_counter() - t_step
+                step_products[v] = int(obs.get("product_entries", 0))
+                sp.set(product=step_products[v], seconds=step_seconds[v])
+                if step_estimates is not None and v in step_estimates:
+                    est = float(step_estimates[v])
+                    sp.set(est=est,
+                           drift=(step_products[v] / est if est > 0.0
+                                  else float("inf")))
+        except BaseException:
+            if fp is not None:
+                message_cache.abandon(fp, flight)
+            raise
+        if fp is not None:
+            message_cache.publish(
+                fp, flight, psi, msg,
+                tables=(step_sources or {}).get(v, ()))
         parents_of[v] = parents
         if psi is not None:
             psis[v] = psi
@@ -428,4 +486,5 @@ def build_generator(
     )
     gen.bag_products = bag_products
     gen.bag_seconds = bag_seconds
+    gen.cached_steps = tuple(cached_steps)
     return gen

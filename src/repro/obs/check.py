@@ -2,6 +2,7 @@
 
     python -m repro.obs.check BENCH_dist.trace.json [--expect-shards]
     python -m repro.obs.check BENCH_serve.trace.json --expect-server
+    python -m repro.obs.check BENCH_workload.trace.json --expect-msgcache
 
 Asserts the file parses as Chrome trace-event JSON and contains one span
 per executor phase, at least one per-step elimination span carrying
@@ -11,8 +12,11 @@ spans whose parent is the summarize phase span.  With
 front-end: ``server:request`` spans each carrying a ``source``
 annotation, and collapsed requests carrying a ``build_span_id`` that
 resolves to a real ``server:build`` span — the span-level record of the
-latch handoff (DESIGN.md §18).  Exit 0 on success, non-zero with a
-message on any violation.
+latch handoff (DESIGN.md §18).  With ``--expect-msgcache`` the trace
+must profile elimination-message reuse (DESIGN.md §20): ``msg:<fp>``
+probe spans each carrying ``var`` and ``hit`` annotations, at least one
+of them a hit — the span-level proof that a warm build actually skipped
+a product.  Exit 0 on success, non-zero with a message on any violation.
 """
 
 from __future__ import annotations
@@ -30,7 +34,8 @@ REQUIRED_PHASES_SHARDED = ("build_model", "plan", "partition", "summarize")
 
 
 def validate(doc: Any, *, expect_shards: bool = False,
-             expect_server: bool = False) -> List[str]:
+             expect_server: bool = False,
+             expect_msgcache: bool = False) -> List[str]:
     """Return a list of violations (empty == valid)."""
     errs: List[str] = []
     if not isinstance(doc, dict) or "traceEvents" not in doc:
@@ -106,6 +111,21 @@ def validate(doc: Any, *, expect_shards: bool = False,
             if build is None or build["name"] != "server:build":
                 errs.append("collapsed server:request carries build_span_id "
                             f"{bid!r} that is not a server:build span")
+
+    if expect_msgcache:
+        probes = [ev for ev in complete if ev["name"].startswith("msg:")]
+        if not probes:
+            errs.append("no message-cache probe spans ('msg:<fingerprint>')")
+        for ev in probes:
+            args = ev.get("args", {})
+            if "var" not in args:
+                errs.append(f"{ev['name']} span missing 'var' annotation")
+            if "hit" not in args:
+                errs.append(f"{ev['name']} span missing 'hit' annotation")
+        if probes and not any(ev.get("args", {}).get("hit")
+                              for ev in probes):
+            errs.append("msg: probe spans present but none is a hit — "
+                        "the warm run never reused a message")
     return errs
 
 
@@ -117,6 +137,9 @@ def main(argv=None) -> int:
     ap.add_argument("--expect-server", action="store_true",
                     help="require server:request spans with source "
                          "annotations and latch-handoff build links")
+    ap.add_argument("--expect-msgcache", action="store_true",
+                    help="require msg:<fp> probe spans with var/hit "
+                         "annotations and at least one hit")
     ns = ap.parse_args(argv)
     try:
         with open(ns.path) as f:
@@ -125,7 +148,8 @@ def main(argv=None) -> int:
         print(f"FAIL {ns.path}: {e}")
         return 2
     errs = validate(doc, expect_shards=ns.expect_shards,
-                    expect_server=ns.expect_server)
+                    expect_server=ns.expect_server,
+                    expect_msgcache=ns.expect_msgcache)
     if errs:
         for e in errs:
             print(f"FAIL {ns.path}: {e}")

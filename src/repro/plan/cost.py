@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import itertools
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 import numpy as np
@@ -37,6 +37,9 @@ _HUGE = 1e30
 # vertex-enumeration budget for the exact fractional-edge-cover LP; past
 # this many basis candidates the greedy integral cover takes over
 _LP_COMBO_CAP = 5000
+# what a message-cache hit costs in product-entry units: a key probe plus a
+# positional rename, independent of how expensive the skipped product was
+CACHED_STEP_COST = 1.0
 
 
 @dataclass
@@ -49,10 +52,11 @@ class StepEstimate:
     message_entries: float          # estimated message size after summing out
     num_factors: int                # how many factors contained the var
     tables: Tuple[str, ...] = ()    # base tables feeding the step (transitive)
+    cached: bool = False            # message resident in the cache at plan time
 
     @property
     def cost(self) -> float:
-        return self.product_entries
+        return CACHED_STEP_COST if self.cached else self.product_entries
 
 
 def _join_stats(a: FactorStats, b: FactorStats) -> FactorStats:
@@ -254,6 +258,19 @@ class CostModel:
             est, factors = self.eliminate(factors, v)
             steps.append(est)
         return steps, float(sum(s.cost for s in steps))
+
+    def apply_residency(self, steps: Sequence[StepEstimate],
+                        cached_vars: Set[str]
+                        ) -> Tuple[Tuple[StepEstimate, ...], float]:
+        """Reprice steps whose message is already resident in the message
+        cache: a cached step costs :data:`CACHED_STEP_COST` (a key lookup)
+        no matter how expensive the skipped product would have been.
+        Returns the repriced steps and the adjusted total — what the order
+        search compares so it can prefer orders that maximize reusable
+        prefixes against the cache's resident key set."""
+        out = tuple(replace(s, cached=True) if s.var in cached_vars else s
+                    for s in steps)
+        return out, float(sum(s.cost for s in out))
 
     # -- WCOJ bag steps ----------------------------------------------------
     def bag_estimate(self, occurrences: Sequence[int],

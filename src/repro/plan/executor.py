@@ -48,6 +48,8 @@ class Executor:
                  shard_executor: Optional[str] = None,
                  shard_timeout: Optional[float] = None,
                  hybrid: Optional[bool] = None,
+                 message_cache=None,
+                 corrections: Optional[Dict[str, float]] = None,
                  tracer: Optional[Tracer] = None,
                  metrics: Optional[MetricsRegistry] = None) -> None:
         self.catalog = catalog
@@ -87,6 +89,15 @@ class Executor:
         # (cost-picked) hybrid silently degrades to pure GJ, an explicit
         # hybrid=True conflict is refused up front
         self.hybrid = hybrid
+        # cross-query message reuse (repro/summary/msgcache.py): probed per
+        # elimination step under the plan-time subtree fingerprints.  Only
+        # monolithic, traceless, bagless builds participate — the other
+        # shapes refuse reuse (DESIGN §20) and simply bypass the cache.
+        self.message_cache = message_cache
+        # calibration factors loaded from a prior session (JoinService's
+        # sidecar); used to price the plan search and rendered as
+        # ``calib(loaded)=`` until this run measures its own drift
+        self.corrections = dict(corrections) if corrections else None
         if record_trace and hybrid is True:
             raise ValueError(
                 "record_trace is unsupported with hybrid=True: bag "
@@ -136,6 +147,9 @@ class Executor:
         # index in plan.bags (same feedback role as step_actuals)
         self.bag_actuals: Dict[int, float] = {}
         self.bag_seconds: Dict[int, float] = {}
+        # variables served from the message cache by the last generator
+        # build (explain() renders cached=hit for them)
+        self.cached_steps: Tuple[str, ...] = ()
 
     # -- observability plumbing --------------------------------------------
     def _phase(self, name: str, **args: Any):
@@ -181,6 +195,7 @@ class Executor:
         self.shard_report = None
         self.bag_actuals = {}
         self.bag_seconds = {}
+        self.cached_steps = ()
         if not self._forced_plan:
             self.plan = None
         self.timings = TimingsView(self.metrics)
@@ -226,7 +241,13 @@ class Executor:
                 shard_executor=self.shard_executor,
                 # trace capability wins over a cost-picked hybrid (an
                 # explicit hybrid=True conflict was refused in __init__)
-                hybrid=False if self.record_trace else self.hybrid)
+                hybrid=False if self.record_trace else self.hybrid,
+                corrections=self.corrections,
+                # residency pricing: only builds that can actually consume
+                # cached messages may let residency steer the order choice
+                message_cache=(None if self.record_trace
+                               else self.message_cache),
+                table_versions=self.source_versions)
         self.timings["plan"] = time.perf_counter() - t0
         return self.plan
 
@@ -234,6 +255,13 @@ class Executor:
         plan = self.build_plan()
         with self._phase("build_generator"):
             t0 = time.perf_counter()
+            msg_fps = msg_sources = None
+            if (self.message_cache is not None and not self.record_trace
+                    and not plan.bags and plan.partitions == 1):
+                from repro.plan.ir import step_fingerprints
+                msg_fps, msg_sources = step_fingerprints(
+                    self.enc, plan.order, self.enc.query.output_variables,
+                    self.source_versions)
             self.generator = build_generator(
                 self.enc,
                 elimination_order=list(plan.order),
@@ -246,6 +274,9 @@ class Executor:
                 bags=plan.bags or None,
                 bag_estimates={j: b.est_entries
                                for j, b in enumerate(plan.bags)},
+                message_cache=self.message_cache if msg_fps else None,
+                step_fingerprints=msg_fps,
+                step_sources=msg_sources,
             )
             self.step_actuals = {v: float(n) for v, n
                                  in self.generator.step_products.items()}
@@ -254,6 +285,7 @@ class Executor:
             self.bag_actuals = {j: float(n) for j, n
                                 in self.generator.bag_products.items()}
             self.bag_seconds = dict(self.generator.bag_seconds)
+            self.cached_steps = tuple(self.generator.cached_steps)
             self.timings["build_generator"] = time.perf_counter() - t0
         return self
 
@@ -631,18 +663,29 @@ class Executor:
         (never the lossy max-reduction), and stragglers."""
         plan = self.build_plan()
         calibration = self.calibration() or None
+        calibration_source = "measured"
+        if calibration is None and self.corrections:
+            # nothing measured yet this run: render the factors a prior
+            # session persisted (JoinService's calibration sidecar)
+            calibration = dict(self.corrections)
+            calibration_source = "loaded"
+        cached = self.cached_steps or None
         if not analyze:
             return plan.explain(timings=self.timings,
                                 actuals=self.step_actuals,
                                 bag_actuals=self.bag_actuals,
-                                calibration=calibration)
+                                calibration=calibration,
+                                calibration_source=calibration_source,
+                                cached_steps=cached)
         return plan.explain(timings=self.timings, actuals=self.step_actuals,
                             step_seconds=self.step_seconds,
                             step_seconds_sum=self.step_seconds_sum,
                             shard_report=self.shard_report,
                             bag_actuals=self.bag_actuals,
                             bag_seconds=self.bag_seconds,
-                            calibration=calibration)
+                            calibration=calibration,
+                            calibration_source=calibration_source,
+                            cached_steps=cached)
 
 
 _I32_MAX = (1 << 31) - 1

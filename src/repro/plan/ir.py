@@ -20,10 +20,121 @@ import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.graph import QueryGraph
 from repro.plan.cost import StepEstimate
 from repro.plan.stats import QueryStats
 from repro.relational.query import JoinQuery
+
+
+# -- subtree fingerprints (cross-query message identity) ---------------------
+#
+# The message an elimination step emits is fully determined by the step's
+# *source-potential closure*: the multiset of table occurrences feeding it
+# (structure x content version), the dictionary-code spaces of the variables
+# involved, the eliminated variable, the separator sequence, and whether a
+# psi is kept.  Hashing exactly those ingredients gives a fingerprint under
+# which identical subtrees in *different* queries collide by construction,
+# and any `Table.append` invalidates by key (the version changes).
+
+def domain_content_ids(enc) -> Dict[str, str]:
+    """var -> content hash of its dictionary-encoding domain.
+
+    Dictionary codes are domain-relative: `encode_query` builds each
+    variable's domain as the sorted unique union over *all* of its
+    occurrences, so a message's integer codes are only meaningful against
+    that exact value array.  Hashing the domain content (not the
+    contributor set) is both necessary and sufficient — and deliberately
+    permissive: a dimension-key variable whose domain is the same value
+    set under two different fact tables still matches.
+    """
+    ids: Dict[str, str] = {}
+    for v, dom in enc.domains.items():
+        h = hashlib.sha256()
+        vals = np.ascontiguousarray(dom.values)
+        if vals.dtype.kind == "O":   # object columns: hash the repr stream
+            h.update(repr(vals.tolist()).encode())
+        else:
+            h.update(str(vals.dtype).encode())
+            h.update(vals.tobytes())
+        ids[v] = h.hexdigest()[:24]
+    return ids
+
+
+def _fp_hash(obj) -> str:
+    return hashlib.sha256(
+        json.dumps(obj, separators=(",", ":")).encode()).hexdigest()[:40]
+
+
+def step_fingerprints(
+    enc, order: Sequence[str], out_vars: Sequence[str],
+    versions: Dict[str, str],
+) -> Tuple[Dict[str, str], Dict[str, Tuple[str, ...]]]:
+    """Canonical subtree fingerprint per elimination step of ``order``.
+
+    Simulates exactly the working-set bookkeeping of
+    `core.elimination.build_generator` (which factors contain a variable is
+    structural — data never changes the wiring): each table occurrence
+    hashes to (table, content version, sorted (column -> variable-label)
+    pairs), and each step hashes to (order-insensitive multiset of input
+    fingerprints, eliminated-variable label, separator label sequence *in
+    order* — the separator order is what the consumer's factor columns
+    follow — and the psi-needed flag).  Variable labels are the
+    domain-content ids of :func:`domain_content_ids`, so the fingerprints
+    are alias-insensitive; a label that is ambiguous within the query
+    (self-joins over identical domains) falls back to including the literal
+    name — conservative: loses cross-query hits, never conflates.
+
+    Returns ``(fingerprints, sources)``: var -> fingerprint and var -> the
+    base tables in the step's closure (provenance for explicit
+    invalidation).  Bagged (hybrid WCOJ) plans must not call this — bag
+    potentials merge occurrences outside the step wiring simulated here.
+    """
+    query = enc.query
+    dom = domain_content_ids(enc)
+    counts: Dict[str, int] = {}
+    for d in dom.values():
+        counts[d] = counts.get(d, 0) + 1
+    labels = {v: (d if counts[d] == 1 else f"{d}|{v}")
+              for v, d in dom.items()}
+    out_set = set(out_vars)
+
+    working: List[Tuple[str, frozenset, frozenset]] = []
+    for qt in query.tables:
+        canon = {
+            "table": qt.table,
+            "version": versions[qt.table],
+            "cols": sorted([c, labels[u]] for c, u in qt.var_map),
+        }
+        working.append((_fp_hash(canon), frozenset(qt.variables),
+                        frozenset((qt.table,))))
+
+    fps: Dict[str, str] = {}
+    sources: Dict[str, Tuple[str, ...]] = {}
+    for v in order[:-1]:
+        rel = [w for w in working if v in w[1]]
+        rest = [w for w in working if v not in w[1]]
+        if not rel:            # disconnected graph; the executor will raise
+            return {}, {}
+        scope: set = set()
+        tabs: set = set()
+        for _, sc, tb in rel:
+            scope |= sc
+            tabs |= tb
+        sep = tuple(u for u in order if u != v and u in scope)
+        canon = {
+            "op": "eliminate",
+            "var": labels[v],
+            "inputs": sorted(fp for fp, _, _ in rel),
+            "sep": [labels[u] for u in sep],
+            "psi": v in out_set,
+        }
+        fp = _fp_hash(canon)
+        fps[v] = fp
+        sources[v] = tuple(sorted(tabs))
+        working = rest + [(fp, frozenset(sep), frozenset(tabs))]
+    return fps, sources
 
 
 @dataclass
@@ -151,15 +262,27 @@ class PhysicalPlan:
         return total / max(int(self.partitions), 1)
 
     # -- identity ----------------------------------------------------------
-    def signature(self) -> str:
+    def signature(self, labels: Optional[Dict[str, str]] = None) -> str:
         """Stable hash of the execution-relevant plan fields.
 
         Cost estimates, alternatives, and search timings are advisory and
         deliberately excluded: two plans that run the same way hash the
         same even if their statistics were gathered at different times.
+
+        ``labels`` (var -> canonical label, from
+        `JoinQuery.canonical_labels`) renames the variables the signature
+        embeds, so `fingerprint(plan=...)` can hash alias-renamed twins of
+        the same plan identically; identity labels (or None) reproduce the
+        historical signature byte-for-byte.
         """
+        if labels:
+            def lab(v):
+                return labels.get(v, v)
+        else:
+            def lab(v):
+                return v
         canon = {
-            "order": list(self.order),
+            "order": [lab(v) for v in self.order],
             "early_projection": bool(self.early_projection),
             "backends": dict(sorted(self.backends.items())),
             "materialize": self.materialize,
@@ -168,14 +291,16 @@ class PhysicalPlan:
             # only folded in when actually partitioned, so monolithic plans
             # keep their historical signatures (and spilled cache entries)
             canon["partitions"] = int(self.partitions)
-            canon["partition_var"] = self.partition_var
+            canon["partition_var"] = (lab(self.partition_var)
+                                      if self.partition_var else None)
             canon["partition_fold"] = int(self.partition_fold)
             canon["shard_executor"] = self.shard_executor
         if self.bags:
             # same conditionality: pure-GJ plans (all acyclic queries in
             # particular) keep their historical signatures and cache keys
-            canon["bags"] = [[list(b.vars), list(b.occurrences),
-                              list(b.bind_order)] for b in self.bags]
+            canon["bags"] = [[[lab(v) for v in b.vars], list(b.occurrences),
+                              [lab(v) for v in b.bind_order]]
+                             for b in self.bags]
         return hashlib.sha256(
             json.dumps(canon, separators=(",", ":")).encode()).hexdigest()[:16]
 
@@ -187,7 +312,9 @@ class PhysicalPlan:
                 shard_report: Optional[Dict[str, object]] = None,
                 bag_actuals: Optional[Dict[int, float]] = None,
                 bag_seconds: Optional[Dict[int, float]] = None,
-                calibration: Optional[Dict[str, float]] = None) -> str:
+                calibration: Optional[Dict[str, float]] = None,
+                calibration_source: str = "measured",
+                cached_steps: Optional[Sequence[str]] = None) -> str:
         """Human-readable plan: order, per-step estimates, backends.
 
         Pass the executor's ``timings`` to annotate phases with measured
@@ -207,7 +334,15 @@ class PhysicalPlan:
         same way; ``calibration`` (op -> correction scalar from
         ``CostModel.calibrate``) renders each raw estimate next to its
         calibrated value so the feedback loop's effect is visible.
+        ``calibration_source="loaded"`` marks factors restored from the
+        persisted sidecar (rendered ``calib(loaded)=``) rather than
+        measured this run.  ``cached_steps`` (variables whose messages the
+        build actually served from the message cache) renders
+        ``cached=hit`` per step; steps the planner merely *priced* as
+        resident (`StepEstimate.cached`) render ``cached=resident``.
         """
+        calib_tag = ("calib(loaded)" if calibration_source == "loaded"
+                     else "calib")
         lines = [
             f"PhysicalPlan {self.query_name!r}  "
             f"(planner={self.planner}, chosen={self.source}, "
@@ -238,7 +373,7 @@ class PhysicalPlan:
                     f"  agm={b.agm_entries:.3g} (rho*={b.rho:.2f})")
                 if calibration and "bag" in calibration:
                     calib = b.est_entries * calibration["bag"]
-                    line += f"  calib={calib:.3g}"
+                    line += f"  {calib_tag}={calib:.3g}"
                 if b.tables:
                     line += f"  tables=({','.join(b.tables)})"
                 if bag_actuals and j in bag_actuals:
@@ -259,7 +394,11 @@ class PhysicalPlan:
                     f"  sep=({sep})  est_message={s.message_entries:.3g}")
                 if calibration and "eliminate" in calibration:
                     calib = s.product_entries * calibration["eliminate"]
-                    line += f"  calib={calib:.3g}"
+                    line += f"  {calib_tag}={calib:.3g}"
+                if cached_steps is not None and s.var in cached_steps:
+                    line += "  cached=hit"
+                elif getattr(s, "cached", False):
+                    line += "  cached=resident"
                 if s.tables:
                     line += f"  tables=({','.join(s.tables)})"
                 if actuals and s.var in actuals:
@@ -305,7 +444,10 @@ class PhysicalPlan:
                     f"   {mark}{c.source:<10s} cost={c.cost:<12.4g} "
                     f"[{', '.join(c.order)}]")
         if calibration:
-            lines.append("  calibration (op -> geometric-mean actual/est):")
+            src = " [loaded from sidecar]" \
+                if calibration_source == "loaded" else ""
+            lines.append(
+                f"  calibration (op -> geometric-mean actual/est){src}:")
             for k, v in sorted(calibration.items()):
                 lines.append(f"    {k:<16s} x{v:.3f}")
         if timings:

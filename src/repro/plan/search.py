@@ -173,7 +173,10 @@ def plan_query(enc: EncodedQuery, *,
                partition_var: Optional[str] = None,
                partition_fold: Optional[int] = None,
                shard_executor: Optional[str] = None,
-               hybrid: Optional[bool] = None
+               hybrid: Optional[bool] = None,
+               corrections: Optional[Dict[str, float]] = None,
+               message_cache=None,
+               table_versions: Optional[Dict[str, str]] = None
                ) -> Tuple[LogicalPlan, PhysicalPlan]:
     """Logical + physical plan for an encoded query.
 
@@ -200,6 +203,14 @@ def plan_query(enc: EncodedQuery, *,
     ``True`` forces it (raising when the query is structurally acyclic —
     there is no decomposition to force).  Acyclic queries are never
     decomposed, so their plan signatures and cache keys are unchanged.
+    ``corrections`` seeds the CostModel with persisted calibration factors
+    (op -> scalar; see ``CostModel.calibrate`` and the JoinService
+    sidecar).  ``message_cache`` + ``table_versions`` enable residency
+    pricing: steps whose subtree fingerprint is already resident in the
+    message cache are priced at ~lookup cost (`CostModel.apply_residency`)
+    and ties break toward orders that maximize reusable steps — so a warm
+    cache steers the search toward the shared prefix.  Monolithic plans
+    only; partitioned builds cannot consume cached messages.
     """
     if generation_backend not in (None, "numpy", "jax"):
         raise ValueError(
@@ -243,7 +254,8 @@ def plan_query(enc: EncodedQuery, *,
             generation_backend=generation_backend,
             partitions=partitions, partition_var=partition_var,
             partition_fold=partition_fold, shard_executor=shard_executor,
-            hybrid=hybrid)
+            hybrid=hybrid, corrections=corrections,
+            message_cache=message_cache, table_versions=table_versions)
 
 
 def _plan_query_inner(enc: EncodedQuery, t0: float, *,
@@ -251,19 +263,44 @@ def _plan_query_inner(enc: EncodedQuery, t0: float, *,
                       beam_width, stats, generation_backend,
                       partitions, partition_var,
                       partition_fold=None, shard_executor=None,
-                      hybrid=None
+                      hybrid=None, corrections=None,
+                      message_cache=None, table_versions=None
                       ) -> Tuple[LogicalPlan, PhysicalPlan]:
     logical = build_logical_plan(enc, early_projection=early_projection,
                                  stats=stats)
-    model = CostModel(logical.stats)
+    model = CostModel(logical.stats, corrections=corrections)
     graph, query = logical.graph, logical.query
     first = list(logical.projected_out)
 
+    # residency pricing: which already-resident messages would each
+    # candidate order reuse?  Fingerprints depend only on (order, versions,
+    # encoding), so this is a pure plan-time computation.
+    resident = None
+    if (message_cache is not None and table_versions is not None
+            and partitions == 1):
+        keys = message_cache.resident_keys()
+        resident = keys if keys else None
+
+    def _residency(order: Sequence[str]) -> frozenset:
+        if resident is None:
+            return frozenset()
+        from repro.plan.ir import step_fingerprints
+        fps, _ = step_fingerprints(
+            enc, tuple(order), logical.output_vars, table_versions)
+        return frozenset(v for v, fp in fps.items() if fp in resident)
+
     candidates: List[OrderCandidate] = []
+    # order -> (repriced steps, adjusted total, #cached steps)
+    sims: Dict[Tuple[str, ...], Tuple[Tuple, float, int]] = {}
 
     def score(source: str, order: Sequence[str]) -> OrderCandidate:
-        _, total = model.simulate(order)
-        return OrderCandidate(source, tuple(order), total)
+        order = tuple(order)
+        if order not in sims:
+            raw_steps, _ = model.simulate(order)
+            cached = _residency(order)
+            sims[order] = (*model.apply_residency(raw_steps, cached),
+                           len(cached))
+        return OrderCandidate(source, order, sims[order][1])
 
     if elimination_order is not None:
         chosen = score("forced", tuple(elimination_order))
@@ -282,9 +319,14 @@ def _plan_query_inner(enc: EncodedQuery, t0: float, *,
         for c in candidates:
             seen.setdefault(c.order, c)
         candidates = list(seen.values())
-        chosen = min(candidates, key=lambda c: (c.cost, c.source != "min_fill"))
+        # ties break first toward MORE reusable (cached) steps, then toward
+        # the paper's structural heuristic
+        chosen = min(candidates,
+                     key=lambda c: (c.cost, -sims[c.order][2],
+                                    c.source != "min_fill"))
 
-    steps, total = model.simulate(chosen.order)
+    steps, total, _ = sims[chosen.order]
+    steps = list(steps)
     source = chosen.source
 
     # hypertree-decomposed hybrid candidate: WCOJ bag steps over the

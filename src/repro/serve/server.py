@@ -24,6 +24,14 @@ every append.  At 10k+ requests/s that duplicate work IS the latency.
   derives the group-by table once (LRU-memoized per cache key), then
   answers every collected request with ONE vectorized ``searchsorted``
   over the concatenated keys and scatters the rows back.
+Beneath collapsing sits the service's elimination-*message* reuse
+(DESIGN.md §20): collapsing de-duplicates builds of the SAME cache key,
+while the shared :class:`~repro.summary.msgcache.MessageCache` lets the
+one leader build that does run inject messages computed by *different*
+queries with matching elimination subtrees — the two mechanisms compose,
+and ``stats()`` on the underlying service exposes the ``msgcache_*``
+counters alongside the server's own.
+
 * **Admission control**.  A cold build (cache miss with no refreshable
   retained state) is priced by the plan layer's CostModel step estimates
   (``PhysicalPlan.admission_cost``).  Above ``cost_ceiling`` the request

@@ -23,6 +23,16 @@ Cache hits skip ``build_model`` / ``build_generator`` / ``summarize``
 entirely — a request served from cache carries no build-phase timings,
 which is the service-level observable the tests assert on.
 
+Below whole-summary reuse sits *message* reuse (DESIGN.md §20): every
+build this service runs shares one :class:`MessageCache`, so a cold build
+whose elimination subtrees match an earlier query's — same occurrence
+structure over the same table contents — injects the cached messages and
+skips those product+marginalization steps outright.  The message cache is
+byte-pooled with the summary cache and spills under ``<spill_dir>/msg``;
+``message_reuse=False`` disables it.  Cost-model drift corrections are
+persisted to a ``calibration.json`` sidecar in ``spill_dir`` and seed the
+planner in later processes (``calib(loaded)=`` in ``explain()``).
+
 Base-table appends are first-class: `append` upgrades the catalog and
 queues a :class:`~repro.relational.table.TableDelta`; the next `frame()`
 for an affected query chains the pending deltas through the incremental
@@ -47,6 +57,9 @@ cold builds by the plan's cost estimate (DESIGN.md §18).
 
 from __future__ import annotations
 
+import json
+import math
+import os
 import threading
 import time
 from collections import OrderedDict
@@ -63,6 +76,7 @@ from repro.relational.query import JoinQuery
 from repro.relational.table import Catalog, TableDelta
 from repro.summary.algebra import AggSpec, Predicate, SummaryFrame
 from repro.summary.cache import SummaryCache, cache_key, cache_key_for_versions
+from repro.summary.msgcache import MessageCache
 from repro.summary.incremental import (DeltaError, IncrementalState,
                                        capture_state, refresh_state)
 
@@ -113,11 +127,35 @@ class JoinService:
                  max_pending_deltas: int = 64,
                  partitions: int = 1,
                  partition_fold: Optional[int] = None,
-                 shard_executor: Optional[str] = None) -> None:
+                 shard_executor: Optional[str] = None,
+                 message_reuse: bool = True,
+                 message_cache: Optional[MessageCache] = None) -> None:
         self.catalog = catalog
         self.cache = cache if cache is not None else SummaryCache(
             byte_budget=byte_budget, spill_dir=spill_dir,
             ttl_seconds=ttl_seconds)
+        # elimination-message reuse (DESIGN.md §20): one MessageCache shared
+        # across every build this service runs, byte-pooled with the summary
+        # cache (messages yield budget to summaries, never the reverse) and
+        # spilling under <spill_dir>/msg.  message_reuse=False turns the
+        # whole mechanism off; a caller-supplied message_cache wins.
+        if message_cache is not None:
+            self.message_cache: Optional[MessageCache] = message_cache
+        elif message_reuse:
+            self.message_cache = MessageCache(
+                spill_dir=os.path.join(spill_dir, "msg") if spill_dir
+                else None,
+                summary_cache=self.cache)
+        else:
+            self.message_cache = None
+        # CostModel calibration sidecar (JSON next to the spill dir): drift
+        # corrections measured by past builds persist across processes and
+        # seed the planner until this session measures its own
+        self.calibration_path = (
+            os.path.join(spill_dir, "calibration.json") if spill_dir
+            else None)
+        self._corrections: Optional[Dict[str, float]] = None
+        self._corrections_loaded = False
         self.planner = planner
         # > 1: plans pin hash-partitioned execution; summaries are
         # ShardedGFJS, cache keys fold the shard scheme in through the plan
@@ -157,9 +195,59 @@ class JoinService:
 
     # -- planning -----------------------------------------------------------
     def _plan_key(self, query: JoinQuery) -> Tuple[str, Tuple[str, ...]]:
+        # literal=True: plans embed the query's own variable names in
+        # ``order`` — serving one to an alias-renamed twin would crash the
+        # executor.  (Summary cache keys stay canonical: GFJS columns are
+        # the output variables, which keep their literal labels.)
         names = sorted({qt.table for qt in query.tables})
-        return (query.fingerprint(),
+        return (query.fingerprint(literal=True),
                 tuple(self.catalog[n].version() for n in names))
+
+    def _load_corrections(self) -> Optional[Dict[str, float]]:
+        """Calibration corrections from the sidecar (lazy, once)."""
+        with self._lock:
+            if not self._corrections_loaded:
+                self._corrections_loaded = True
+                p = self.calibration_path
+                if p is not None and os.path.exists(p):
+                    try:
+                        with open(p) as f:
+                            raw = json.load(f)
+                        self._corrections = {
+                            str(k): float(v) for k, v in raw.items()
+                            if math.isfinite(float(v)) and float(v) > 0}
+                    except (ValueError, TypeError, OSError):
+                        self._corrections = None   # corrupt sidecar: ignore
+            return dict(self._corrections) if self._corrections else None
+
+    def _persist_calibration(self, measured: Dict[str, float]) -> None:
+        """Blend a build's measured drift into the sidecar (geometric mean
+        with the stored factor — one outlier build can't whipsaw the
+        planner) and write it back atomically."""
+        if not measured:
+            return
+        with self._lock:
+            cur = dict(self._corrections or {})
+            for op, f in measured.items():
+                f = float(f)
+                if not (math.isfinite(f) and f > 0):
+                    continue
+                prev = cur.get(op)
+                cur[op] = f if prev is None else math.sqrt(prev * f)
+            self._corrections = cur
+            self._corrections_loaded = True
+            p = self.calibration_path
+            payload = dict(cur)
+        if p is None:
+            return
+        try:
+            tmp = p + ".tmp"
+            os.makedirs(os.path.dirname(p), exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump(payload, f, sort_keys=True)
+            os.replace(tmp, p)
+        except OSError:
+            pass    # persistence is best-effort, never a failure path
 
     def _remember_plan(self, pkey, plan: PhysicalPlan,
                        tables: frozenset) -> None:
@@ -184,7 +272,9 @@ class JoinService:
         gj = GraphicalJoin(self.catalog, query, planner=self.planner,
                            partitions=self.partitions,
                            partition_fold=self.partition_fold,
-                           shard_executor=self.shard_executor)
+                           shard_executor=self.shard_executor,
+                           message_cache=self.message_cache,
+                           corrections=self._load_corrections())
         plan = gj.plan()
         with self._lock:
             self._remember_plan(
@@ -236,7 +326,9 @@ class JoinService:
                                    and self.partitions == 1,
                                    partitions=self.partitions,
                                    partition_fold=self.partition_fold,
-                                   shard_executor=self.shard_executor)
+                                   shard_executor=self.shard_executor,
+                                   message_cache=self.message_cache,
+                                   corrections=self._load_corrections())
                 plan = gj.plan()
                 with self._lock:
                     self._remember_plan(
@@ -260,7 +352,9 @@ class JoinService:
             gj = GraphicalJoin(self.catalog, query, plan=plan,
                                record_trace=self.incremental
                                and plan.partitions == 1
-                               and not plan.bags)
+                               and not plan.bags,
+                               message_cache=self.message_cache,
+                               corrections=self._load_corrections())
         gfjs = gj.run()
         # key on what the executor actually encoded: an append racing this
         # compute may have advanced the catalog past the entry snapshot,
@@ -270,6 +364,7 @@ class JoinService:
         if built != versions:
             key = cache_key_for_versions(query, built, plan=plan)
         self.cache.put(key, gfjs, tables={qt.table for qt in query.tables})
+        self._persist_calibration(gj._executor.calibration())
         if self.incremental:
             self._remember_state(query, plan, gj, gfjs, built, key)
         timings = dict(gj.timings)
@@ -330,10 +425,17 @@ class JoinService:
                     versions[idx] = delta.new_version
                     self._plans.pop(pkey)
                     self._remember_plan((pkey[0], tuple(versions)), plan, tabs)
+            # message fingerprints embed content versions, so the grown
+            # table's old messages can never be *served* stale — but they
+            # can never hit again either; reclaim their bytes eagerly
+            if self.message_cache is not None:
+                self.message_cache.invalidate(table)
             return delta
 
     def _state_key(self, query: JoinQuery, plan: PhysicalPlan) -> str:
-        return query.fingerprint(plan=plan)
+        # literal: an IncrementalState replays this query's own trace —
+        # sharing it across alias-renamed twins would splice wrong names
+        return query.fingerprint(plan=plan, literal=True)
 
     def _remember_state(self, query: JoinQuery, plan: PhysicalPlan,
                         gj: GraphicalJoin, gfjs, versions, key: str) -> None:
@@ -467,6 +569,8 @@ class JoinService:
                 (k, s) for k, s in self._states.items()
                 if table not in s.table_versions)
             removed = self.cache.invalidate(table)
+        if self.message_cache is not None:
+            self.message_cache.invalidate(table)
         return removed
 
     # -- one-shot aggregate API -------------------------------------------
@@ -517,4 +621,10 @@ class JoinService:
                 len(v) for v in self._pending.values())
         out["resident_bytes"] = self.cache.resident_bytes
         out["resident_entries"] = len(self.cache)
+        if self.message_cache is not None:
+            for k, v in self.message_cache.stats.as_dict().items():
+                out[f"msgcache_{k}"] = v
+            out["msgcache_resident_bytes"] = \
+                self.message_cache.resident_bytes
+            out["msgcache_entries"] = len(self.message_cache)
         return out

@@ -1,0 +1,333 @@
+"""Elimination-message cache (DESIGN.md §20).
+
+The load-bearing oracle is *differential*: a warm build (messages injected
+from the cache) must be indistinguishable — level-for-level and as a row
+multiset — from a cache-disabled cold build of the same query.  Around it:
+append-invalidation (a grown table must never be served a stale message),
+eviction mid-suite under a tiny byte budget, spill round-trips, and the
+canonical-fingerprint satellite (alias/order-insensitive subtree identity).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.api import GraphicalJoin
+from repro.core.gfjs import desummarize
+from repro.plan.ir import step_fingerprints
+from repro.relational.encoding import encode_query
+from repro.relational.query import JoinQuery, QueryTable
+from repro.relational.table import Catalog, Table
+from repro.summary.msgcache import (CachedMessage, MessageCache,
+                                    _entry_from_bytes, _entry_to_bytes)
+
+
+# ---------------------------------------------------------------------------
+# suite construction: overlapping snowflake chains under several facts —
+# the forced-shared-subtree shape the cache exists for
+# ---------------------------------------------------------------------------
+
+def snowflake_catalog(*, n_chains=3, n_dim=200, n_sub=12, n_rows=800,
+                      n_facts=2, seed=0) -> Catalog:
+    rng = np.random.default_rng(seed)
+    cat = Catalog()
+    for c in range(n_chains):
+        cat.add(Table(f"dim{c}", {"id": np.arange(n_dim),
+                                  "sub": rng.integers(0, n_sub, n_dim)}))
+        cat.add(Table(f"sub{c}", {"id": np.arange(n_sub),
+                                  "val": rng.integers(0, 5, n_sub)}))
+    for f in range(n_facts):
+        cols = {"u": rng.integers(0, 10, n_rows)}
+        for c in range(n_chains):
+            cols[f"d{c}"] = rng.integers(0, n_dim, n_rows)
+        cat.add(Table(f"fact{f}", cols))
+    return cat
+
+
+def snowflake_query(name, fact, chains, output=("U",)) -> JoinQuery:
+    vmap = {"u": "U"}
+    vmap.update({f"d{c}": f"D{c}" for c in chains})
+    tabs = [QueryTable.of(fact, vmap)]
+    for c in chains:
+        tabs.append(QueryTable.of(f"dim{c}", {"id": f"D{c}", "sub": f"S{c}"}))
+        tabs.append(QueryTable.of(f"sub{c}", {"id": f"S{c}", "val": f"V{c}"}))
+    return JoinQuery(name, tabs, output=tuple(output))
+
+
+def triangle_catalog(m=300, seed=0) -> Catalog:
+    rng = np.random.default_rng(seed)
+    return Catalog.of(
+        Table("R", {"a": rng.integers(0, 40, m),
+                    "b": rng.integers(0, 40, m)}),
+        Table("S", {"b": rng.integers(0, 40, m),
+                    "c": rng.integers(0, 40, m)}),
+        Table("T", {"c": rng.integers(0, 40, m),
+                    "a": rng.integers(0, 40, m)}))
+
+
+def triangle_query(name="tri") -> JoinQuery:
+    return JoinQuery(name, (
+        QueryTable.of("R", {"a": "A", "b": "B"}),
+        QueryTable.of("S", {"b": "B", "c": "C"}),
+        QueryTable.of("T", {"c": "C", "a": "A"})), output=("A",))
+
+
+def assert_same_gfjs(a, b, *, require_levels=True):
+    assert a.join_size == b.join_size
+    if tuple(a.column_order) == tuple(b.column_order):
+        assert len(a.levels) == len(b.levels)
+        for la, lb in zip(a.levels, b.levels):
+            assert tuple(la.vars) == tuple(lb.vars)
+            np.testing.assert_array_equal(la.freq, lb.freq)
+            assert set(la.key_cols) == set(lb.key_cols)
+            for k in la.key_cols:
+                np.testing.assert_array_equal(la.key_cols[k], lb.key_cols[k])
+        return
+    assert not require_levels, "plans diverged where they must not"
+    ca, cb = desummarize(a, decode=False), desummarize(b, decode=False)
+    assert set(ca) == set(cb)
+    ma = np.stack([np.asarray(ca[v]) for v in sorted(ca)])
+    mb = np.stack([np.asarray(cb[v]) for v in sorted(cb)])
+    np.testing.assert_array_equal(
+        ma[:, np.lexsort(ma[::-1])], mb[:, np.lexsort(mb[::-1])])
+
+
+# ---------------------------------------------------------------------------
+# differential oracle: warm == cache-disabled cold
+# ---------------------------------------------------------------------------
+
+def test_warm_equals_cold_acyclic_suite():
+    """Random overlapping acyclic suites: every warm build level-identical
+    to the cache-disabled cold build of the same query."""
+    for seed in range(3):
+        cat = snowflake_catalog(seed=seed)
+        suite = [snowflake_query(f"q{f}{i}", f"fact{f}", chains)
+                 for f in range(2)
+                 for i, chains in enumerate([(0, 1), (1, 2), (0, 2)])]
+        mc = MessageCache()
+        for q in suite:                        # prime: cross-query sharing
+            GraphicalJoin(cat, q, message_cache=mc).run()
+        assert mc.stats.hits > 0, "no cross-query sharing in shared chains"
+        for q in suite:
+            gj_w = GraphicalJoin(cat, q, message_cache=mc)
+            warm = gj_w.run()
+            assert gj_w._executor.cached_steps, q.name
+            cold = GraphicalJoin(cat, q).run()
+            # pin nothing: both planned independently; orders may differ
+            assert_same_gfjs(warm, cold, require_levels=False)
+
+
+def test_warm_equals_cold_cyclic_pure_gj():
+    cat = triangle_catalog()
+    q = triangle_query()
+    mc = MessageCache()
+    cold = GraphicalJoin(cat, q, hybrid=False).run()
+    GraphicalJoin(cat, q, hybrid=False, message_cache=mc).run()
+    gj = GraphicalJoin(cat, q, hybrid=False, message_cache=mc)
+    warm = gj.run()
+    assert gj._executor.cached_steps
+    assert_same_gfjs(warm, cold, require_levels=False)
+
+
+def test_bagged_plans_refuse_reuse():
+    """Hybrid (bagged) plans bypass the cache entirely — no probes, no puts."""
+    from repro.relational.synth import cyclic_pattern_like
+    cat, q = cyclic_pattern_like("triangle", m=400, hub_frac=1.0, seed=0)
+    mc = MessageCache()
+    gj = GraphicalJoin(cat, q, hybrid=True, message_cache=mc)
+    gj.run()
+    st = mc.stats
+    assert st.hits + st.misses + st.puts == 0
+    assert gj._executor.cached_steps == ()
+
+
+def test_record_trace_refuses_reuse():
+    cat = snowflake_catalog()
+    q = snowflake_query("q", "fact0", (0, 1))
+    mc = MessageCache()
+    GraphicalJoin(cat, q, message_cache=mc).run()          # populate
+    gj = GraphicalJoin(cat, q, record_trace=True, message_cache=mc)
+    gj.run()
+    assert gj._executor.cached_steps == ()
+    assert mc.stats.hits == 0                              # never probed
+
+
+# ---------------------------------------------------------------------------
+# append invalidation: version-keyed fingerprints can never serve stale
+# ---------------------------------------------------------------------------
+
+def test_append_never_serves_stale_message():
+    cat = snowflake_catalog()
+    q = snowflake_query("q", "fact0", (0, 1))
+    mc = MessageCache()
+    GraphicalJoin(cat, q, message_cache=mc).run()          # warm the chains
+
+    rng = np.random.default_rng(99)
+    delta = cat["dim0"].append(
+        {"id": np.arange(200, 260),
+         "sub": rng.integers(0, 12, 60)})
+    cat.add(delta.new_table)
+
+    gj = GraphicalJoin(cat, q, message_cache=mc)
+    warm = gj.run()
+    fresh = GraphicalJoin(cat, q).run()
+    assert_same_gfjs(warm, fresh, require_levels=False)
+    # the untouched chain (sub1/dim1 subtree) still hits; dim0's closure
+    # re-fingerprints and recomputes
+    enc = encode_query(cat, q)
+    plan = gj.plan()
+    versions = {qt.table: cat[qt.table].version() for qt in q.tables}
+    fps, _ = step_fingerprints(enc, plan.order, q.output_variables, versions)
+    resident = mc.resident_keys()
+    assert fps["V1"] in resident and fps["S1"] in resident
+
+
+def test_table_append_changes_fingerprints():
+    """The tentpole invariant, stated directly on the fingerprint layer:
+    appending to a table changes the fingerprint of every step whose
+    closure contains it, and only those."""
+    cat = snowflake_catalog()
+    q = snowflake_query("q", "fact0", (0, 1))
+    gj = GraphicalJoin(cat, q)
+    gj.run()
+    plan = gj.plan()
+    enc = gj.enc
+    versions = {qt.table: cat[qt.table].version() for qt in q.tables}
+    before, srcs = step_fingerprints(enc, plan.order, q.output_variables,
+                                     versions)
+    versions2 = dict(versions)
+    versions2["dim0"] = "v-after-append"
+    after, _ = step_fingerprints(enc, plan.order, q.output_variables,
+                                 versions2)
+    for v in before:
+        if "dim0" in srcs[v]:
+            assert before[v] != after[v], v
+        else:
+            assert before[v] == after[v], v
+
+
+# ---------------------------------------------------------------------------
+# budget / eviction / spill
+# ---------------------------------------------------------------------------
+
+def test_eviction_mid_suite_budget_respected():
+    cat = snowflake_catalog(n_rows=2000)
+    suite = [snowflake_query(f"q{f}{i}", f"fact{f}", chains)
+             for f in range(2) for i, chains in enumerate([(0, 1), (1, 2)])]
+    budget = 64 << 10                       # tiny: forces mid-build evictions
+    mc = MessageCache(byte_budget=budget)
+    colds = [GraphicalJoin(cat, q).run() for q in suite]
+    for _ in range(2):
+        for q, cold in zip(suite, colds):
+            warm = GraphicalJoin(cat, q, message_cache=mc).run()
+            assert_same_gfjs(warm, cold, require_levels=False)
+    assert mc.stats.evictions > 0
+    # the byte budget holds (single oversized keep-entry is the only
+    # documented excursion; these messages are far smaller than 64K)
+    assert mc.resident_bytes <= budget
+
+
+def test_spill_roundtrip_disk_hit(tmp_path):
+    cat = snowflake_catalog()
+    q1 = snowflake_query("q1", "fact0", (0, 1))
+    q2 = snowflake_query("q2", "fact1", (0, 1))
+    mc = MessageCache(byte_budget=1 << 10, spill_dir=str(tmp_path))
+    GraphicalJoin(cat, q1, message_cache=mc).run()
+    assert mc.stats.spills > 0
+    assert any(n.endswith(".gjm") for n in os.listdir(tmp_path))
+    cold = GraphicalJoin(cat, q2).run()
+    warm = GraphicalJoin(cat, q2, message_cache=mc).run()
+    assert mc.stats.disk_hits > 0
+    assert_same_gfjs(warm, cold, require_levels=False)
+
+
+def test_entry_serialization_roundtrip():
+    msg = __import__("repro.core.potentials", fromlist=["Factor"]).Factor(
+        ("X", "Y"), np.array([[0, 1], [2, 3]]), np.array([1, 2]),
+        np.array([3, 4]), (5, 7))
+    entry = CachedMessage(message=msg, psi=None)
+    back = _entry_from_bytes(_entry_to_bytes(entry))
+    np.testing.assert_array_equal(back.message.keys, msg.keys)
+    np.testing.assert_array_equal(back.message.bucket, msg.bucket)
+    np.testing.assert_array_equal(back.message.fac, msg.fac)
+    assert back.message.sizes == msg.sizes and back.psi is None
+    psi2, renamed = MessageCache.adopt(back, "C", ("P", "Q"))
+    assert renamed.vars == ("P", "Q") and psi2 is None
+    with pytest.raises(ValueError):
+        MessageCache.adopt(back, "C", ("P",))
+
+
+def test_invalidate_by_table():
+    cat = snowflake_catalog()
+    q = snowflake_query("q", "fact0", (0, 1))
+    mc = MessageCache()
+    GraphicalJoin(cat, q, message_cache=mc).run()
+    n = len(mc)
+    assert n > 0
+    removed = mc.invalidate("sub0")
+    assert removed >= 1 and len(mc) == n - removed
+    assert mc.stats.invalidations == removed
+    # untouched-chain entries survive
+    assert len(mc) > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: canonical query fingerprints
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_alias_and_order_insensitive():
+    base = snowflake_query("a", "fact0", (0, 1))
+    # same join, tables listed backwards, internal vars renamed
+    vmap = {"u": "U", "d0": "K0", "d1": "K1"}
+    renamed = JoinQuery("b", (
+        QueryTable.of("sub1", {"id": "Z1", "val": "W1"}),
+        QueryTable.of("dim1", {"id": "K1", "sub": "Z1"}),
+        QueryTable.of("sub0", {"id": "Z0", "val": "W0"}),
+        QueryTable.of("dim0", {"id": "K0", "sub": "Z0"}),
+        QueryTable.of("fact0", vmap)), output=("U",))
+    assert base.fingerprint() == renamed.fingerprint()
+    # literal keys (plan/state caches) must distinguish the rename
+    assert base.fingerprint(literal=True) != renamed.fingerprint(literal=True)
+    # output renames are always distinct: the column name is the contract
+    out_renamed = snowflake_query("c", "fact0", (0, 1), output=("U",))
+    out_renamed = JoinQuery("c", tuple(
+        QueryTable(qt.table, tuple((c, "UU" if v == "U" else v)
+                                   for c, v in qt.var_map))
+        for qt in out_renamed.tables), output=("UU",))
+    assert base.fingerprint() != out_renamed.fingerprint()
+
+
+def test_fingerprint_symmetric_selfjoin_falls_back_to_literal():
+    """Two structurally indistinguishable internal vars (symmetric
+    self-join) must NOT be conflated — labels fall back to literal names,
+    so the two orientations key differently (conservative, never wrong)."""
+    q1 = JoinQuery("s1", (
+        QueryTable.of("E", {"a": "X", "b": "Y"}),
+        QueryTable.of("E", {"a": "Y", "b": "X"})), output=())
+    labels = q1.canonical_labels()
+    assert labels["X"] == "X" and labels["Y"] == "Y"
+
+
+def test_fingerprint_plan_folding_maps_labels():
+    """plan.signature(labels=...) canonicalizes the embedded order: an
+    alias-renamed twin pinned to the *mapped* elimination order shares the
+    (query, plan) summary key; a genuinely different order does not."""
+    cat = snowflake_catalog()
+    q = snowflake_query("a", "fact0", (0, 1))
+    rename = {"S0": "ZS0", "S1": "ZS1", "V0": "WV0", "V1": "WV1",
+              "D0": "KD0", "D1": "KD1"}
+    ren = JoinQuery("b", tuple(
+        QueryTable(qt.table, tuple((c, rename.get(v, v))
+                                   for c, v in qt.var_map))
+        for qt in q.tables), output=("U",))
+    p1 = GraphicalJoin(cat, q).plan()
+    p2 = GraphicalJoin(
+        cat, ren,
+        elimination_order=[rename.get(v, v) for v in p1.order]).plan()
+    assert q.fingerprint(plan=p1) == ren.fingerprint(plan=p2)
+    # the planner's own (name-tie-broken) choice for the twin may differ —
+    # and a different order is a different summary, so keys must differ too
+    p3 = GraphicalJoin(cat, ren).plan()
+    if tuple(p3.order) != tuple(p2.order):
+        assert ren.fingerprint(plan=p3) != ren.fingerprint(plan=p2)

@@ -665,3 +665,162 @@ def test_feature_provider_stampede_recomputes_once():
     assert outs[0][0, 0] == warm[0, 0] + 4  # key 0 grew by the append
     for o in outs[1:]:
         np.testing.assert_array_equal(o, outs[0])
+
+
+# ---------------------------------------------------------------------------
+# elimination-message cache: single-flight under threads (DESIGN.md §20)
+# ---------------------------------------------------------------------------
+
+def _toy_message():
+    from repro.core.potentials import Factor
+    return Factor(("X",), np.array([[0], [1]]), np.array([1, 1]),
+                  np.array([1, 1]), (2,))
+
+
+def test_msgcache_single_flight_leader_publishes():
+    """Deterministic latch handoff: the follower blocks on the leader's
+    flight and adopts the published entry (counted as a wait)."""
+    from repro.summary.msgcache import MessageCache
+    mc = MessageCache()
+    entry, flight = mc.lookup_or_begin("k")
+    assert entry is None and flight is not None
+    out = []
+    t = threading.Thread(target=lambda: out.append(mc.lookup_or_begin("k")))
+    t.start()
+    time.sleep(0.05)                       # let the follower park on the latch
+    mc.publish("k", flight, None, _toy_message(), tables=("t",))
+    t.join(10.0)
+    assert not t.is_alive()
+    (e, f), = out
+    assert f is None and e is not None
+    assert mc.stats.waits == 1 and mc.stats.puts == 1
+
+
+def test_msgcache_single_flight_abandon_promotes_follower():
+    """A leader that abandons (compute failed) releases the latch; the
+    follower retries and becomes the new leader instead of failing."""
+    from repro.summary.msgcache import MessageCache
+    mc = MessageCache()
+    _, flight = mc.lookup_or_begin("k")
+    out = []
+    t = threading.Thread(target=lambda: out.append(mc.lookup_or_begin("k")))
+    t.start()
+    time.sleep(0.05)
+    mc.abandon("k", flight)
+    t.join(10.0)
+    assert not t.is_alive()
+    (e2, f2), = out
+    assert e2 is None and f2 is not None   # promoted to leader
+    mc.publish("k", f2, None, _toy_message())
+    assert mc.get("k") is not None
+
+
+def test_msgcache_single_flight_timeout_computes_locally():
+    """A stuck leader can only delay a follower, never wedge it: past
+    flight_timeout the follower computes locally and publishes nothing."""
+    from repro.summary.msgcache import MessageCache
+    mc = MessageCache(flight_timeout=0.05)
+    _, flight = mc.lookup_or_begin("k")    # leader that never publishes
+    e, f = mc.lookup_or_begin("k")
+    assert e is None and f is None
+    assert mc.stats.timeouts == 1
+    mc.abandon("k", flight)
+
+
+def test_msgcache_concurrent_builds_agree():
+    """Threads racing overlapping queries through one shared MessageCache:
+    every warm answer equals its cache-disabled cold build, and shared
+    subtrees were computed fewer times than they were consumed."""
+    from repro.core.api import GraphicalJoin
+    from repro.relational.query import JoinQuery, QueryTable
+    from repro.summary.msgcache import MessageCache
+
+    rng = np.random.default_rng(7)
+    cat = Catalog.of(
+        Table("dim", {"id": np.arange(120),
+                      "sub": rng.integers(0, 10, 120)}),
+        Table("sub", {"id": np.arange(10), "val": rng.integers(0, 4, 10)}),
+        *[Table(f"fact{f}", {"u": rng.integers(0, 8, 500),
+                             "d": rng.integers(0, 120, 500)})
+          for f in range(4)])
+
+    def q(f):
+        return JoinQuery(f"q{f}", (
+            QueryTable.of(f"fact{f}", {"u": "U", "d": "D"}),
+            QueryTable.of("dim", {"id": "D", "sub": "S"}),
+            QueryTable.of("sub", {"id": "S", "val": "V"})), output=("U",))
+
+    queries = [q(f) for f in range(4)]
+    truth = [GraphicalJoin(cat, x).run().join_size for x in queries]
+    mc = MessageCache()
+    errors, bad = [], []
+
+    def worker(i):
+        try:
+            for r in range(3):
+                x = queries[(i + r) % len(queries)]
+                got = GraphicalJoin(cat, x, message_cache=mc).run().join_size
+                want = truth[(i + r) % len(queries)]
+                if got != want:
+                    bad.append((x.name, got, want))
+        except Exception as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors and not bad
+    st = mc.stats
+    # the chain subtree (V, S) is shared by all four queries: it must have
+    # been computed strictly fewer times than it was consumed
+    assert st.hits + st.waits > 0
+    assert st.puts < st.hits + st.waits + st.misses
+
+
+def test_service_threads_share_message_cache():
+    """JoinService threads on cold overlapping queries: answers agree and
+    the service-level msgcache counters are visible in stats()."""
+    rng = np.random.default_rng(11)
+    cat = Catalog.of(
+        Table("dim", {"id": np.arange(80), "sub": rng.integers(0, 8, 80)}),
+        Table("sub", {"id": np.arange(8), "val": rng.integers(0, 3, 8)}),
+        *[Table(f"fact{f}", {"u": rng.integers(0, 6, 300),
+                             "d": rng.integers(0, 80, 300)})
+          for f in range(3)])
+    from repro.relational.query import QueryTable
+
+    def q(f):
+        return JoinQuery(f"q{f}", (
+            QueryTable.of(f"fact{f}", {"u": "U", "d": "D"}),
+            QueryTable.of("dim", {"id": "D", "sub": "S"}),
+            QueryTable.of("sub", {"id": "S", "val": "V"})), output=("U",))
+
+    queries = [q(f) for f in range(3)]
+    # incremental off: service builds run untraced, so message reuse is on
+    svc = JoinService(cat, incremental=False)
+    expected = [JoinService(Catalog(dict(cat.tables)),
+                            incremental=False,
+                            message_reuse=False).count(x) for x in queries]
+    errors, bad = [], []
+
+    def worker(i):
+        try:
+            for r in range(4):
+                j = (i + r) % len(queries)
+                got = svc.count(queries[j])
+                if got != expected[j]:
+                    bad.append((j, got, expected[j]))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    ts = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors and not bad
+    st = svc.stats()
+    assert st["msgcache_puts"] > 0
+    assert st["msgcache_hits"] + st["msgcache_waits"] >= 0

@@ -145,3 +145,89 @@ def test_aggregate_convenience_on_graphical_join(lastfm):
     assert int(g["sum"][0]) == int(flat["A2"][mask0].sum())
     n1 = gj.aggregate("count", where={"U2": lambda u: u < 10}, gfjs=gfjs)
     assert n1 == int((flat["U2"] < 10).sum())
+
+
+# ---------------------------------------------------------------------------
+# PR 10: message reuse + calibration sidecar at the service layer
+# ---------------------------------------------------------------------------
+
+def _chain_catalog(n_facts=2, seed=0):
+    rng = np.random.default_rng(seed)
+    cat = Catalog.of(
+        Table("dim", {"id": np.arange(100),
+                      "sub": rng.integers(0, 9, 100)}),
+        Table("sub", {"id": np.arange(9), "val": rng.integers(0, 4, 9)}))
+    for f in range(n_facts):
+        cat.add(Table(f"fact{f}", {"u": rng.integers(0, 7, 400),
+                                   "d": rng.integers(0, 100, 400)}))
+    return cat
+
+
+def _chain_query(f):
+    return JoinQuery.of(f"cq{f}", [
+        (f"fact{f}", {"u": "U", "d": "D"}),
+        ("dim", {"id": "D", "sub": "S"}),
+        ("sub", {"id": "S", "val": "V"})], output=["U"])
+
+
+def test_service_shares_messages_across_queries():
+    """Two cold queries over the same dimension chain: the second build
+    hits the service's message cache (incremental off => untraced)."""
+    cat = _chain_catalog()
+    svc = JoinService(cat, incremental=False)
+    svc.frame(_chain_query(0))
+    st0 = svc.stats()
+    svc.frame(_chain_query(1))
+    st1 = svc.stats()
+    assert st1["msgcache_hits"] > st0["msgcache_hits"]
+    # truth: an isolated no-reuse service answers the same
+    lone = JoinService(Catalog(dict(cat.tables)), incremental=False,
+                       message_reuse=False)
+    assert svc.count(_chain_query(1)) == lone.count(_chain_query(1))
+
+
+def test_service_append_drops_dead_messages():
+    cat = _chain_catalog()
+    svc = JoinService(cat, incremental=False)
+    svc.frame(_chain_query(0))
+    assert len(svc.message_cache) > 0
+    before = svc.stats()["msgcache_invalidations"]
+    svc.append("dim", {"id": np.arange(100, 110),
+                       "sub": np.zeros(10, np.int64)})
+    assert svc.stats()["msgcache_invalidations"] > before
+    # and the refreshed catalog still answers correctly
+    lone = JoinService(Catalog(dict(svc.catalog.tables)),
+                       incremental=False, message_reuse=False)
+    assert svc.count(_chain_query(0)) == lone.count(_chain_query(0))
+
+
+def test_calibration_sidecar_persists_across_services(tmp_path):
+    """A computed build writes drift corrections to the spill-dir sidecar;
+    a fresh service (new process stand-in) loads them and prices its
+    plans with them (explain renders calib(loaded)=)."""
+    from repro.core.api import GraphicalJoin
+    cat = _chain_catalog()
+    svc = JoinService(cat, spill_dir=str(tmp_path))
+    assert svc.frame(_chain_query(0)).source == "computed"
+    path = os.path.join(str(tmp_path), "calibration.json")
+    assert os.path.exists(path)
+
+    svc2 = JoinService(Catalog(dict(cat.tables)), spill_dir=str(tmp_path))
+    corr = svc2._load_corrections()
+    assert corr and "eliminate" in corr
+    gj = GraphicalJoin(cat, _chain_query(0), corrections=corr)
+    gj.plan()
+    assert "calib(loaded)=" in gj.explain()
+    # once this session measures its own drift, the loaded tag yields
+    gj.run()
+    assert "calib(loaded)=" not in gj.explain()
+
+
+def test_corrupt_calibration_sidecar_is_ignored(tmp_path):
+    path = os.path.join(str(tmp_path), "calibration.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    cat = _chain_catalog()
+    svc = JoinService(cat, spill_dir=str(tmp_path))
+    assert svc._load_corrections() is None
+    assert svc.frame(_chain_query(0)).source == "computed"
